@@ -1,0 +1,42 @@
+"""Shared benchmark helpers: run one simulation cell, cache results."""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sched_sim.metrics import (Summary, stall_histogram, summarize,
+                                     transfer_stats)
+from repro.sched_sim.policies import SDV2Policy, make_policy
+from repro.sched_sim.simulator import SimConfig, Simulator
+from repro.sched_sim.workloads import WORKLOADS
+
+# default scale: 300 streams reproduces the paper's dynamics in ~seconds;
+# REPRO_FULL_SCALE=1 runs the full 946-prompt workloads
+N_STREAMS = 946 if os.environ.get("REPRO_FULL_SCALE") == "1" else 300
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def run_cell(policy: str = "slackserve", workload: str = "steady", *,
+             n: int = None, rate: float = 1.0, model: str = "causal-forcing",
+             protocol: str = "async-stream", alpha: float = 2.0,
+             seed: int = 0):
+    n = n or N_STREAMS
+    specs = WORKLOADS[workload](n=n, rate=rate, seed=seed)
+    kw = {"model": model}
+    if policy in ("slackserve",):
+        kw["alpha"] = alpha
+    pol = make_policy(policy, **kw)
+    cfg = (SDV2Policy.sim_config() if policy == "sdv2"
+           else SimConfig(model=model, transfer_protocol=protocol))
+    sim = Simulator(cfg, specs, pol)
+    res = sim.run()
+    return res, summarize(res)
+
+
+def fmt_row(name: str, s: Summary) -> str:
+    return (f"{name:34s} QoE={s.qoe:5.3f}  TTFC={s.ttfc:5.2f}s  "
+            f"VBench={s.quality:6.2f}  stalls/stream={s.stalls_per_stream:5.2f}"
+            f"  avg_stall={s.avg_stall_ms:5.0f}ms")

@@ -1,0 +1,32 @@
+"""Fig. 11: end-to-end comparison — 2 AR-DiT models x 5 workloads x
+4 systems (SlackServe / SDV2 / TS / TS-chunk): QoE, TTFC, quality."""
+from benchmarks.common import fmt_row, run_cell
+
+
+def main(quick: bool = False) -> dict:
+    models = ["causal-forcing"] if quick else ["causal-forcing",
+                                               "self-forcing"]
+    workloads = ["steady", "burst"] if quick else \
+        ["steady", "burst", "prompt_switch", "pause", "trace"]
+    out = {}
+    ratios = []
+    for model in models:
+        for wl in workloads:
+            rows = {}
+            for pol in ("slackserve", "sdv2", "ts", "ts-chunk"):
+                _, s = run_cell(pol, wl, model=model)
+                rows[pol] = s
+                print(fmt_row(f"{model[:6]}/{wl}/{pol}", s))
+            out[(model, wl)] = rows
+            for base in ("sdv2", "ts", "ts-chunk"):
+                if rows[base].qoe > 0:
+                    ratios.append(rows["slackserve"].qoe / rows[base].qoe)
+    if ratios:
+        print(f"\nQoE improvement over baselines: "
+              f"{min(ratios):.2f}x - {max(ratios):.2f}x "
+              f"(paper: 1.64x-3.29x)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Fig. 12: technique ablation in Control-Plane trigger order:
+Credit-only -> +BMPR -> +Re-homing -> +Elastic SP."""
+from benchmarks.common import fmt_row, run_cell
+
+LADDER = [("Credit only", "credit-only"),
+          ("+ BMPR", "credit+bmpr"),
+          ("+ Re-homing", "credit+bmpr+rehome"),
+          ("+ Elastic SP (full)", "slackserve")]
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    for label, pol in LADDER:
+        _, s = run_cell(pol, "steady")
+        out[label] = s
+        print(fmt_row(label, s))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Fig. 13: State-Plane transfer protocols — Sync / Async-NoStream /
+Async-Stream (layer-wise streaming + atomic readiness)."""
+from benchmarks.common import fmt_row, run_cell
+from repro.sched_sim.metrics import transfer_stats
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    for proto in ("sync", "async-nostream", "async-stream"):
+        res, s = run_cell("slackserve", "steady", protocol=proto)
+        ts = transfer_stats(res)
+        out[proto] = (s, ts)
+        print(fmt_row(proto, s) +
+              f"  xfer_avg={ts['avg_ms']:.1f}ms "
+              f"residual={ts['avg_residual_ms']:.1f}ms")
+    return out
+
+
+if __name__ == "__main__":
+    main()

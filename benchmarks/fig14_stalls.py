@@ -1,0 +1,18 @@
+"""Fig. 14: stall-event duration distribution on Steady, per system."""
+from benchmarks.common import run_cell
+from repro.sched_sim.metrics import stall_histogram, summarize
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    for pol in ("slackserve", "sdv2", "ts", "ts-chunk"):
+        res, s = run_cell(pol, "steady")
+        hist = stall_histogram(res)
+        out[pol] = (s, hist)
+        print(f"{pol:12s} stalls/stream={s.stalls_per_stream:5.2f} "
+              f"avg={s.avg_stall_ms:5.0f}ms  {hist}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Fig. 15: worker-type distribution (URGENT / mixed / RELAXED) over
+time for SlackServe vs SDV2 — why aggregate FPS alone is insufficient."""
+import statistics
+
+from benchmarks.common import run_cell
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    for pol in ("slackserve", "sdv2"):
+        res, s = run_cell(pol, "steady")
+        samples = res.worker_tier_samples
+        if not samples:
+            continue
+        urgent = statistics.mean(x[0] for x in samples)
+        mixed = statistics.mean(x[1] for x in samples)
+        relaxed = statistics.mean(x[2] for x in samples)
+        scale = 4 if pol == "sdv2" else 1     # SDV2 units = 4 GPUs
+        out[pol] = (urgent * scale, mixed * scale, relaxed * scale)
+        print(f"{pol:12s} avg URGENT={urgent*scale:5.2f} "
+              f"mixed={mixed*scale:5.2f} RELAXED={relaxed*scale:5.2f} "
+              f"(GPU-equivalents)  QoE={s.qoe:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

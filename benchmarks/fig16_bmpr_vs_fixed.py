@@ -1,0 +1,16 @@
+"""Fig. 16: BMPR vs fixed-level (fast/medium/slow) fidelity switching."""
+from benchmarks.common import fmt_row, run_cell
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    for label, pol in (("fixed-level switching", "bmpr-fixed-level"),
+                       ("BMPR", "slackserve")):
+        _, s = run_cell(pol, "steady")
+        out[label] = s
+        print(fmt_row(label, s))
+    return out
+
+
+if __name__ == "__main__":
+    main()

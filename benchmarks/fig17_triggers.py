@@ -1,0 +1,18 @@
+"""Fig. 17: re-homing / elastic-SP trigger counts per workload."""
+from benchmarks.common import run_cell
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    wls = ["burst", "prompt_switch", "pause"] if quick else \
+        ["steady", "burst", "prompt_switch", "pause", "trace"]
+    for wl in wls:
+        res, s = run_cell("slackserve", wl)
+        out[wl] = (s.n_rehomings, s.n_sp_events)
+        print(f"{wl:14s} re-homings={s.n_rehomings:4d} "
+              f"elastic-SP={s.n_sp_events:4d}  QoE={s.qoe:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Fig. 18: fidelity configurations selected by BMPR under Steady and
+Burst — top-5 concentration and the shift toward faster configs."""
+from benchmarks.common import run_cell
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    for wl in ("steady", "burst"):
+        res, s = run_cell("slackserve", wl)
+        total = sum(res.fidelity_counts.values())
+        top = sorted(res.fidelity_counts.items(), key=lambda kv: -kv[1])
+        top5 = sum(v for _, v in top[:5]) / max(total, 1)
+        out[wl] = (top[:5], top5)
+        print(f"{wl}: top-5 configs cover {100*top5:.1f}% of selections")
+        for k, v in top[:5]:
+            print(f"    {k:24s} {100*v/total:5.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

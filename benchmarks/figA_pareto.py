@@ -1,0 +1,22 @@
+"""App. A: the 90-config fidelity space and its Pareto frontier."""
+from repro.core.bmpr import pareto_frontier
+from repro.profiler.profiles import get_profile
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    for model in ("causal-forcing", "self-forcing"):
+        prof = get_profile(model)
+        f = pareto_frontier(prof)
+        print(f"{model}: {len(prof.points)} candidates, "
+              f"{len(f.points)} on the frontier, "
+              f"Q_floor={f.q_floor:.2f}")
+        for p in f.points:
+            print(f"    L={1000*p.latency:7.1f}ms  Q={p.quality:6.2f}  "
+                  f"{p.fidelity.key}")
+        out[model] = f
+    return out
+
+
+if __name__ == "__main__":
+    main()

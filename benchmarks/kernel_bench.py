@@ -1,0 +1,66 @@
+"""Kernel bench: interpret-mode correctness vs oracle + analytic
+roofline characteristics (arithmetic intensity per knob setting)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import flash_mha_pallas
+from repro.kernels.flash_attention.ref import flash_mha_ref
+from repro.kernels.ssd_scan.kernel import ssd_pallas
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def flash_intensity(S, H, D, window=0, sparsity=0.0, block=128):
+    """FLOPs/byte of the flash kernel at the given knobs (bf16 IO)."""
+    n_blocks = S // block
+    if window:
+        vis = min(window // block + 1, n_blocks)
+    else:
+        vis = (n_blocks + 1) / 2
+    vis = vis * (1.0 - sparsity)
+    flops = 2 * 2 * S * (vis * block) * H * D          # qk + pv
+    io = (3 * S * H * D + S * H * D) * 2               # q,k,v in + o out
+    return flops / io
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    print("flash attention: correctness + arithmetic intensity")
+    for knobs in ({}, {"window": 64, "sink": 16}, {"sparsity": 0.8}):
+        q = jax.random.normal(KEY, (1, 128, 4, 32))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 2, 32))
+        v = jax.random.normal(jax.random.PRNGKey(3), (1, 128, 2, 32))
+        o = flash_mha_pallas(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                             v.swapaxes(1, 2), block_q=32, block_kv=32,
+                             interpret=True, **knobs).swapaxes(1, 2)
+        r = flash_mha_ref(q, k, v, n_kv_heads=2, block_q=32, block_kv=32,
+                          **knobs)
+        err = float(jnp.max(jnp.abs(o - r)))
+        ai = flash_intensity(4096, 16, 128, knobs.get("window", 0),
+                             knobs.get("sparsity", 0.0))
+        print(f"  {str(knobs):32s} max_err={err:.2e}  "
+              f"AI@4k={ai:6.1f} flop/B")
+        out[str(knobs)] = err
+        assert err < 5e-3
+
+    print("ssd scan: correctness across chunk sizes")
+    for chunk in (16, 32, 64):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (1, 96, 2, 16))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 96, 2)))
+        Am = -jnp.exp(jax.random.normal(ks[2], (2,)))
+        Bm = jax.random.normal(ks[3], (1, 96, 1, 8))
+        Cm = jax.random.normal(ks[4], (1, 96, 1, 8))
+        y1, f1 = ssd_pallas(x, dt, Am, Bm, Cm, chunk=chunk, interpret=True)
+        y2, f2 = ssd_ref(x, dt, Am, Bm, Cm, chunk=chunk)
+        err = float(jnp.max(jnp.abs(y1 - y2)))
+        print(f"  chunk={chunk:3d}  max_err={err:.2e}")
+        out[f"ssd_{chunk}"] = err
+        assert err < 5e-3
+    return out
+
+
+if __name__ == "__main__":
+    main()

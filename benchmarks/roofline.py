@@ -1,0 +1,64 @@
+"""Roofline report: reads the dry-run artifacts
+(benchmarks/artifacts/dryrun/*.json) and prints, per (arch x shape x
+mesh): the three roofline terms, the dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs (useful ratio), and the roofline fraction
+(model-compute-bound time / roofline step time).
+"""
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_records(pattern: str = "*"):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(ART, pattern + ".json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_fraction(rec) -> float:
+    """Useful model compute / roofline-optimistic step time."""
+    step = max(rec["t_compute_s"], rec["t_memory_s"], rec["t_collective_s"])
+    if step <= 0:
+        return 0.0
+    ideal = rec["model_flops"] / (rec["n_chips"] * 197e12)
+    return ideal / step
+
+
+def main(quick: bool = False) -> dict:
+    recs = load_records()
+    if not recs:
+        print("no dry-run artifacts yet: run "
+              "PYTHONPATH=src python scripts/run_dryrun_sweep.py")
+        return {}
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    failed = [r for r in recs if r.get("status") == "FAILED"]
+    print(f"{len(ok)} cells ok, {len(skipped)} skipped (long_500k "
+          f"full-attention), {len(failed)} FAILED")
+    # multi-pod cells are compile-coherence checks (analyze=False):
+    # report pass/fail; the roofline table below is single-pod
+    mp = [r for r in ok if "pod2x" in r["cell"]]
+    if mp:
+        print(f"multi-pod (2x16x16): {len(mp)} cells compiled ok")
+    ok = [r for r in ok if "t_compute_s" in r]
+    hdr = (f"{'cell':58s} {'comp_ms':>8s} {'mem_ms':>8s} {'coll_ms':>8s} "
+           f"{'dom':>10s} {'useful':>7s} {'roofl%':>7s} {'GB/dev':>7s}")
+    print(hdr)
+    for r in sorted(ok, key=lambda r: r["cell"]):
+        frac = roofline_fraction(r)
+        per_dev = (r.get("per_device_bytes") or 0) / 1e9
+        print(f"{r['cell']:58s} {1000*r['t_compute_s']:8.1f} "
+              f"{1000*r['t_memory_s']:8.1f} {1000*r['t_collective_s']:8.1f} "
+              f"{r['dominant']:>10s} {r.get('useful_ratio') or 0:7.3f} "
+              f"{100*frac:7.2f} {per_dev:7.1f}")
+    for r in failed:
+        print(f"FAILED {r['cell']}: {r.get('error', '')[:100]}")
+    return {"ok": len(ok), "failed": len(failed)}
+
+
+if __name__ == "__main__":
+    main()

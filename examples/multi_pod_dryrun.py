@@ -1,0 +1,26 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede any jax import (jax locks the device count on first use)
+"""One multi-pod dry-run cell, end to end: build the 2x16x16 production
+mesh, lower+compile the sharded train step for an assigned architecture
+with ShapeDtypeStruct inputs (no allocation), and read off the roofline
+terms.
+
+    PYTHONPATH=src python examples/multi_pod_dryrun.py [arch] [shape]
+"""
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "granite-moe-1b-a400m"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    rec = run_cell(arch, shape, multi_pod=True, save=False)
+    assert rec["status"] in ("ok", "skipped"), rec
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Perf-iteration harness (EXPERIMENTS.md SSPerf).
+
+Lowers one (arch x shape) cell under a named VARIANT, compiles, and
+prints the three roofline terms + deltas vs the baseline artifact — the
+measure step of the hypothesis -> change -> measure -> validate loop.
+
+    PYTHONPATH=src python scripts/perf_iter.py internlm2-20b train_4k bf16bwd
+"""
+import dataclasses
+import json
+import sys
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch import analysis
+from repro.launch.lowering import cell_config, lower_cell
+from repro.launch.mesh import make_production_mesh
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                   "artifacts", "dryrun")
+
+
+def variant_cfg(cfg, name: str):
+    """Named beyond-paper variants (each = one hypothesis)."""
+    kw = {}
+    micro = 1
+    if name == "baseline":
+        pass
+    elif name == "bf16bwd":
+        cfg = dataclasses.replace(cfg, bf16_backward=True)
+    elif name.startswith("mb"):
+        micro = int(name[2:])
+    elif name == "bf16bwd+mb4":
+        cfg = dataclasses.replace(cfg, bf16_backward=True)
+        micro = 4
+    elif name == "fp8kv":
+        cfg = dataclasses.replace(cfg, kv_dtype="float8_e4m3fn")
+    elif name == "ep":
+        cfg = dataclasses.replace(cfg, moe_ep=True)
+    elif name == "ep+bf16bwd":
+        cfg = dataclasses.replace(cfg, moe_ep=True, bf16_backward=True)
+    elif name == "zero3":
+        cfg = dataclasses.replace(cfg, parallel_layout="zero3")
+    elif name == "zero3+mb4":
+        cfg = dataclasses.replace(cfg, parallel_layout="zero3")
+        micro = 4
+    else:
+        raise ValueError(name)
+    return cfg, micro
+
+
+def main():
+    arch, shape_name, variant = sys.argv[1], sys.argv[2], sys.argv[3]
+    multi_pod = "--multi-pod" in sys.argv
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    cfg = cell_config(cfg0, shape)
+    cfg, micro = variant_cfg(cfg, variant)
+    lowered = lower_cell(cfg, mesh, shape, microbatches=micro)
+    compiled = lowered.compile()
+    roof = analysis.analyze(lowered, compiled, n_chips)
+    mf = analysis.model_flops(cfg, shape)
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    base_path = os.path.join(ART, f"{arch}__{shape_name}__{mesh_name}.json")
+    base = None
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+
+    def fmt(t):
+        return f"{1000*t:9.1f}ms"
+    print(f"cell={arch}x{shape_name}x{mesh_name} variant={variant}")
+    print(f"  compute    {fmt(roof.t_compute)}"
+          + (f"  (base {1000*base['t_compute_s']:9.1f}ms, "
+             f"{roof.t_compute/max(base['t_compute_s'],1e-12):5.2f}x)"
+             if base else ""))
+    print(f"  memory     {fmt(roof.t_memory)}"
+          + (f"  (base {1000*base['t_memory_s']:9.1f}ms, "
+             f"{roof.t_memory/max(base['t_memory_s'],1e-12):5.2f}x)"
+             if base else ""))
+    print(f"  collective {fmt(roof.t_collective)}"
+          + (f"  (base {1000*base['t_collective_s']:9.1f}ms, "
+             f"{roof.t_collective/max(base['t_collective_s'],1e-12):5.2f}x)"
+             if base else ""))
+    ideal = mf / (n_chips * 197e12)
+    print(f"  dominant={roof.dominant}  useful={mf/max(roof.flops,1):.3f}  "
+          f"roofline_fraction={ideal/max(roof.step_time,1e-12):.4f}")
+    rec = {"cell": f"{arch}__{shape_name}__{mesh_name}",
+           "variant": variant, **roof.row(), "model_flops": mf}
+    out = os.path.join(ART, "..", "perf",
+                       f"{arch}__{shape_name}__{mesh_name}__{variant}.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Re-run the HLO roofline analysis over saved .hlo.gz artifacts
+(no recompiles) and update the dry-run JSON records in place."""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import hlo_cost
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                   "artifacts", "dryrun")
+
+for gz in sorted(glob.glob(os.path.join(ART, "*.hlo.gz"))):
+    jpath = gz.replace(".hlo.gz", ".json")
+    if not os.path.exists(jpath):
+        continue
+    with open(jpath) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        continue
+    cost = hlo_cost.analyze_text(gzip.open(gz, "rt").read())
+    n = rec["n_chips"]
+    rec.update({
+        "flops": cost.flops * n,
+        "hbm_bytes": cost.hbm_bytes * n,
+        "coll_bytes": cost.coll_bytes * n,
+        "t_compute_s": cost.flops / PEAK_FLOPS,
+        "t_memory_s": cost.hbm_bytes / HBM_BW,
+        "t_collective_s": cost.coll_bytes / ICI_BW,
+    })
+    terms = {"compute": rec["t_compute_s"], "memory": rec["t_memory_s"],
+             "collective": rec["t_collective_s"]}
+    rec["dominant"] = max(terms, key=terms.get)
+    rec["useful_ratio"] = (rec["model_flops"] / rec["flops"]
+                           if rec["flops"] else None)
+    with open(jpath, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"{rec['cell']:58s} mem={1000*rec['t_memory_s']:9.1f}ms "
+          f"coll={1000*rec['t_collective_s']:8.1f}ms dom={rec['dominant']}")
+print("reanalysis done")

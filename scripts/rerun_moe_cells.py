@@ -1,0 +1,22 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Re-run MoE-family single-pod cells (dispatch/combine rewrite)."""
+import time
+from repro.configs.base import SHAPES, get_config
+from repro.launch.dryrun import run_cell
+
+t0 = time.time()
+for arch in ("granite-moe-1b-a400m", "qwen3-moe-235b-a22b",
+             "jamba-v0.1-52b"):
+    cfg = get_config(arch)
+    for sname in SHAPES:
+        rec = run_cell(arch, sname, verbose=False, save_hlo=True)
+        print(f"[{time.time()-t0:6.0f}s] {rec['cell']:58s} {rec['status']}"
+              + (f" dom={rec.get('dominant')}" if rec['status']=='ok' else ''),
+              flush=True)
+        if sname == "long_500k" and not cfg.supports_shape(SHAPES[sname]):
+            rec = run_cell(arch, sname, windowed_adaptation=True,
+                           verbose=False, save_hlo=True)
+            print(f"[{time.time()-t0:6.0f}s] {rec['cell']:58s} "
+                  f"{rec['status']}", flush=True)
+print("DONE")

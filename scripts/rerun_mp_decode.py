@@ -1,0 +1,16 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Re-run the 10 multi-pod decode_32k cells after the PartitionSpec fix."""
+import time
+from repro.configs.base import get_config, list_archs
+from repro.launch.dryrun import run_cell
+
+t0 = time.time()
+fails = 0
+for arch in [a for a in list_archs() if not a.startswith("ardit")]:
+    rec = run_cell(arch, "decode_32k", multi_pod=True, verbose=False,
+                   analyze=False)
+    print(f"[{time.time()-t0:5.0f}s] {rec['cell']:58s} {rec['status']}",
+          flush=True)
+    fails += rec["status"] == "FAILED"
+print(f"DONE failures={fails}")

@@ -1,0 +1,57 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Full dry-run sweep: every (arch x shape) x {single-pod, multi-pod} +
+the windowed-KV long_500k adaptations for pure full-attention archs.
+Each cell's record lands in benchmarks/artifacts/dryrun/.
+"""
+import json
+import sys
+import time
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.launch.dryrun import run_cell
+
+LM_ARCHS = [a for a in list_archs() if not a.startswith("ardit")]
+
+
+def main():
+    only_multipod = "--multi-pod-only" in sys.argv
+    only_singlepod = "--single-pod-only" in sys.argv
+    meshes = [True] if only_multipod else ([False] if only_singlepod
+                                           else [False, True])
+    t0 = time.time()
+    n_fail = 0
+    for multi_pod in meshes:
+        for arch in LM_ARCHS:
+            cfg = get_config(arch)
+            for sname in SHAPES:
+                # multi-pod proves sharding coherence (compile pass/fail +
+                # memory fit); the roofline table is single-pod only
+                rec = run_cell(arch, sname, multi_pod=multi_pod,
+                               verbose=False, analyze=not multi_pod,
+                               save_hlo=not multi_pod)
+                status = rec["status"]
+                print(f"[{time.time()-t0:7.0f}s] {rec['cell']:60s} "
+                      f"{status}"
+                      + (f" dominant={rec.get('dominant')}"
+                         if status == "ok" else
+                         f" {rec.get('reason', rec.get('error', ''))[:80]}"),
+                      flush=True)
+                n_fail += status == "FAILED"
+                # windowed adaptation for skipped long_500k cells
+                if (sname == "long_500k"
+                        and not cfg.supports_shape(SHAPES[sname])):
+                    rec = run_cell(arch, sname, multi_pod=multi_pod,
+                                   windowed_adaptation=True, verbose=False,
+                                   analyze=not multi_pod,
+                                   save_hlo=not multi_pod)
+                    print(f"[{time.time()-t0:7.0f}s] {rec['cell']:60s} "
+                          f"{rec['status']}", flush=True)
+                    n_fail += rec["status"] == "FAILED"
+    print(f"DONE failures={n_fail} wall={time.time()-t0:.0f}s")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,99 @@
+"""Control Plane (paper SS3.2-3.3, Algorithm 2, App. C.1).
+
+Wakes at each control tick (3 s default) and, in trigger order:
+
+    1. BMPR fidelity selection per active stream (SS5)
+    2. service-credit + tier update under the selected fidelity (Eq. 1)
+    3. three-tier queue (re)ordering -> local preemption (SS4.1)
+    4. bipartite re-homing plan -> cross-worker preemption (SS4.2)
+    5. elastic-SP plan -> compute expansion for C_u < 0 (SS4.3)
+
+Every mechanism is individually switchable (technique ablation, Fig. 12).
+The Control Plane emits *decisions*; the driver (discrete-event simulator
+or JAX executor) applies them and routes state movement through the State
+Plane (SS4.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import elastic_sp, queues, rehoming, slack
+from repro.core.bmpr import BMPR, BMPRDecision
+from repro.core.types import ClusterView, Stream, Tier, Worker
+
+DEFAULT_TICK_S = 3.0
+TTFC_FACTOR = 4.0          # initial playout slack = 4x first-chunk estimate
+
+
+@dataclasses.dataclass
+class ControlConfig:
+    tick_interval: float = DEFAULT_TICK_S
+    alpha: float = slack.DEFAULT_ALPHA
+    use_fidelity: bool = True          # BMPR (or injected policy)
+    use_rehoming: bool = True
+    use_elastic_sp: bool = True
+    ttfc_factor: float = TTFC_FACTOR
+
+
+@dataclasses.dataclass
+class TickDecisions:
+    migrations: List[rehoming.Migration]
+    sp_decisions: List[elastic_sp.SPDecision]
+    control_time_s: float              # wall-clock cost of this tick
+
+
+class ControlPlane:
+    def __init__(self, config: Optional[ControlConfig] = None,
+                 fidelity_policy=None):
+        self.config = config or ControlConfig()
+        self.fidelity_policy = fidelity_policy or BMPR()
+        self.n_rehomings = 0
+        self.n_sp_events = 0
+        self.tick_times: List[float] = []
+
+    # ---- admission (SS3.3 steps 1-2) --------------------------------------
+    def choose_home(self, view: ClusterView) -> int:
+        return min(view.workers, key=lambda w: w.load()).wid
+
+    def initial_slack(self, first_chunk_estimate: float) -> float:
+        return self.config.ttfc_factor * first_chunk_estimate
+
+    # ---- the control tick (Algorithm 2 lines 7-15) ------------------------
+    def tick(self, view: ClusterView, now: float) -> TickDecisions:
+        t0 = _time.perf_counter()
+        cfg = self.config
+
+        for s in view.active_streams():
+            # (3) fidelity selection under the current slack budget
+            if cfg.use_fidelity and not s.finished:
+                budget = max(s.playout_slack(now)
+                             - (s.remaining if s.running_on else 0.0), 0.0)
+                dec: BMPRDecision = self.fidelity_policy.select(budget)
+                s.next_fidelity = dec.fidelity
+                sp = 2 if s.sp_donor is not None else 1
+                s.t_next = self.fidelity_policy.profile.latency(
+                    dec.fidelity, sp_degree=sp) \
+                    if hasattr(self.fidelity_policy, "profile") else dec.latency
+            # (4) service credit + tier under the selected fidelity
+            slack.update_stream_credit(s, now, cfg.alpha)
+
+        queues.order_all(view)
+
+        migrations: List[rehoming.Migration] = []
+        if cfg.use_rehoming:
+            migrations = rehoming.plan_rehoming(view, now)
+            self.n_rehomings += len(migrations)
+
+        sp_decisions: List[elastic_sp.SPDecision] = []
+        if cfg.use_elastic_sp:
+            just_migrated = {m.sid for m in migrations}
+            sp_decisions = elastic_sp.plan_elastic_sp(
+                view, now, exclude=just_migrated)
+            self.n_sp_events += sum(1 for d in sp_decisions
+                                    if d.kind == "expand")
+
+        dt = _time.perf_counter() - t0
+        self.tick_times.append(dt)
+        return TickDecisions(migrations, sp_decisions, dt)

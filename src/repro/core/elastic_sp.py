@@ -1,0 +1,83 @@
+"""Elastic sequence parallelism (paper SS4.3 + App. C.3).
+
+Last-resort recovery: when a stream's service credit is negative (it is
+projected to miss its playout window even after priority scheduling and
+re-homing), borrow ONE donor worker — the highest-credit RELAXED worker
+in the same node — and switch the stream to the pre-initialized intra-node
+SP2 group.  The donor is released at the next safe boundary once the
+stream recovers to NORMAL (C_u >= 2 T_u).  All SP2 groups are
+pre-initialized before serving (pre-compiled executables in the JAX
+executor), so triggering elastic SP never creates communication groups on
+the critical path; the head-partition KV transfer (App. C.4) goes through
+the State Plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import queues
+from repro.core.types import ClusterView, Stream, Tier, Worker
+
+RELEASE_FACTOR = 2.0          # release when C_u >= 2 * T_u (NORMAL tier)
+MAX_SP = 2                    # intra-node SP2 only (App. C.3)
+
+
+@dataclasses.dataclass(frozen=True)
+class SPDecision:
+    sid: int
+    donor: int                # worker borrowed
+    kind: str                 # "expand" | "release"
+
+
+def plan_elastic_sp(view: ClusterView, now: float,
+                    exclude: Optional[set] = None) -> List[SPDecision]:
+    """``exclude``: streams already helped this tick (e.g. just re-homed)
+    — elastic SP is the NEXT line of defense, not a parallel one (SS4)."""
+    exclude = exclude or set()
+    counts = queues.tier_counts(view)
+    decisions: List[SPDecision] = []
+    borrowed = {s.sp_donor for s in view.streams.values()
+                if s.sp_donor is not None}
+
+    # ---- releases first (free donors at safe boundaries) ------------------
+    for s in view.active_streams():
+        if s.sp_donor is not None and s.credit >= RELEASE_FACTOR * s.t_next:
+            decisions.append(SPDecision(s.sid, s.sp_donor, "release"))
+
+    # ---- expansions: C_u < 0 streams, one donor each -----------------------
+    for s in sorted(view.active_streams(), key=lambda s: s.credit):
+        if (s.credit >= 0.0 or s.sp_donor is not None or s.done
+                or s.sid in exclude):
+            continue
+        node = view.node_of(s.home)
+        donors = [w for w in view.workers
+                  if view.node_of(w.wid) == node and w.wid != s.home
+                  and w.donated_to is None and w.wid not in borrowed
+                  and queues.worker_class(counts[w.wid]) == "relaxed"]
+        if not donors:
+            continue          # no same-node RELAXED donor: SP not triggered
+        # credit-aware donor selection: highest-credit RELAXED worker
+        def donor_credit(w: Worker) -> float:
+            sids = list(w.queue) + ([w.running] if w.running is not None
+                                    else [])
+            if not sids:
+                return float("inf")
+            return min(view.streams[x].credit for x in sids)
+        donor = max(donors, key=donor_credit)
+        borrowed.add(donor.wid)
+        decisions.append(SPDecision(s.sid, donor.wid, "expand"))
+    return decisions
+
+
+def apply_expand(view: ClusterView, dec: SPDecision) -> None:
+    s = view.streams[dec.sid]
+    s.sp_donor = dec.donor
+    view.workers[dec.donor].donated_to = dec.sid
+
+
+def apply_release(view: ClusterView, dec: SPDecision) -> None:
+    s = view.streams[dec.sid]
+    if s.sp_donor is not None:
+        view.workers[s.sp_donor].donated_to = None
+    s.sp_donor = None

@@ -1,0 +1,28 @@
+"""Fidelity-configuration space (paper SS2.1, SS5, App. A).
+
+Four knobs: denoising steps S in {2,3,4}, attention sparsity rho in
+{0,.6,.7,.8,.9}, KV-window W in {1,3,7} chunks, quantization Q in
+{FP16, FP8} -> 3*5*3*2 = 90 candidate configurations; (4, 0, 7, FP16)
+is the highest-quality reference.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List
+
+from repro.models.ardit import FidelityConfig, HIGHEST_QUALITY  # noqa: F401
+
+STEPS = (2, 3, 4)
+SPARSITIES = (0.0, 0.6, 0.7, 0.8, 0.9)
+WINDOWS = (1, 3, 7)
+QUANTS = ("bf16", "fp8")
+
+
+def candidate_space() -> List[FidelityConfig]:
+    """All 90 candidate fidelity configurations (App. A)."""
+    return [FidelityConfig(s, r, w, q)
+            for s, r, w, q in itertools.product(STEPS, SPARSITIES,
+                                                WINDOWS, QUANTS)]
+
+
+assert len(candidate_space()) == 90

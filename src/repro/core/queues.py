@@ -1,0 +1,70 @@
+"""Three-tier priority queues and credit-aware eviction (paper SS4.1).
+
+At each control tick the Control Plane orders every worker's queue by
+service credit ascending (lower credit dispatches first), giving local
+preemption at step/chunk boundaries.  Credit-aware eviction frees KV-pool
+residency by evicting the *highest*-credit resident stream — the one
+least likely to stall (Fig. 8).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.types import ClusterView, Stream, Tier, Worker
+
+
+def order_queue(worker: Worker, streams: Dict[int, Stream]) -> None:
+    """Sort the worker's queue by service credit (ascending)."""
+    worker.queue.sort(key=lambda sid: streams[sid].credit)
+
+
+def order_all(view: ClusterView) -> None:
+    for w in view.workers:
+        order_queue(w, view.streams)
+
+
+def next_dispatch(worker: Worker, streams: Dict[int, Stream],
+                  now: float) -> Optional[int]:
+    """Lowest-credit runnable stream on this worker (paused/migrating
+    streams are skipped; atomic safety keeps mid-transfer streams out of
+    the queue entirely, SS4.4)."""
+    for sid in worker.queue:
+        s = streams[sid]
+        if s.done or s.finished:
+            continue
+        if s.paused_until > now and s.chunks_done >= s.target_chunks:
+            continue
+        return sid
+    return None
+
+
+def pick_eviction(resident_sids: List[int], streams: Dict[int, Stream],
+                  protect: Optional[int] = None) -> Optional[int]:
+    """Credit-aware eviction: evict the highest-credit resident stream."""
+    candidates = [sid for sid in resident_sids if sid != protect]
+    if not candidates:
+        return None
+    return max(candidates, key=lambda sid: streams[sid].credit)
+
+
+def tier_counts(view: ClusterView) -> Dict[int, Dict[Tier, int]]:
+    """Per-worker tier histogram over queued + running streams."""
+    out: Dict[int, Dict[Tier, int]] = {}
+    for w in view.workers:
+        counts = {t: 0 for t in Tier}
+        sids = list(w.queue)
+        if w.running is not None:
+            sids.append(w.running)
+        for sid in sids:
+            counts[view.streams[sid].tier] += 1
+        out[w.wid] = counts
+    return out
+
+
+def worker_class(counts: Dict[Tier, int]) -> str:
+    """URGENT-heavy / RELAXED-only / mixed (SS4.2 terminology)."""
+    if counts[Tier.URGENT] > 0:
+        return "urgent"
+    if counts[Tier.NORMAL] == 0:
+        return "relaxed"
+    return "mixed"

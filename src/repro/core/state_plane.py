@@ -1,0 +1,124 @@
+"""State Plane (paper SS4.4, Fig. 9, App. D.2).
+
+Unified KV management: each worker owns a paged pool (kappa = 0.8 of
+VRAM), pages at latent-frame granularity, logical page table per stream.
+Credit-aware eviction (SS4.1), re-homing (SS4.2) and elastic SP (SS4.3)
+all move state through ONE interface:
+
+    transfer(stream, src, dst, page_range)
+
+executed by an async transfer engine with three protocols (Fig. 13):
+
+    sync             dispatcher blocked until the full transfer completes
+    async-nostream   submitted asynchronously; destination compute starts
+                     only after the full state arrives
+    async-stream     layer-wise streaming: the stream is re-queued once
+                     its FIRST layer is resident (atomic safety), later
+                     layers overlap with computation
+
+Timing model (CPU container; constants mirror the paper's testbed — see
+``repro.sched_sim.cost_model`` for derivations): NVLink-class intra-node
+effective bandwidth, IB-class cross-node, fixed submission overhead.  In
+the JAX executor the same engine issues device-to-device copies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+# ---------------------------------------------------------------------------
+# paged pool
+# ---------------------------------------------------------------------------
+
+
+class PagedKVPool:
+    """Physical page pool of one worker; frame-granularity pages."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self.free: int = n_pages
+        self.tables: Dict[int, int] = {}      # sid -> pages held
+
+    def resident(self, sid: int) -> bool:
+        return sid in self.tables
+
+    def pages_of(self, sid: int) -> int:
+        return self.tables.get(sid, 0)
+
+    def can_alloc(self, n: int) -> bool:
+        return self.free >= n
+
+    def alloc(self, sid: int, n: int) -> bool:
+        if self.free < n:
+            return False
+        self.free -= n
+        self.tables[sid] = self.tables.get(sid, 0) + n
+        return True
+
+    def release(self, sid: int) -> int:
+        n = self.tables.pop(sid, 0)
+        self.free += n
+        return n
+
+    def resident_sids(self) -> List[int]:
+        return list(self.tables)
+
+    @property
+    def used(self) -> int:
+        return self.n_pages - self.free
+
+
+# ---------------------------------------------------------------------------
+# transfer engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferTiming:
+    submitted: float
+    first_layer_ready: float      # stream may re-enter the queue here
+    complete: float               # all pages resident
+    cross_node: bool
+    bytes: int
+
+    @property
+    def total(self) -> float:
+        return self.complete - self.submitted
+
+    @property
+    def residual_wait(self) -> float:
+        """Time the dispatcher actually waited (protocol-dependent)."""
+        return self.first_layer_ready - self.submitted
+
+
+class AsyncTransferEngine:
+    """Models SS4.4's NIXL/NCCL engine; one protocol for eviction,
+    re-homing and elastic SP."""
+
+    def __init__(self, *, protocol: str = "async-stream",
+                 bw_intra: float = 200e9, bw_inter: float = 40e9,
+                 overhead: float = 0.004, n_layers: int = 30):
+        assert protocol in ("sync", "async-nostream", "async-stream")
+        self.protocol = protocol
+        self.bw_intra = bw_intra
+        self.bw_inter = bw_inter
+        self.overhead = overhead
+        self.n_layers = n_layers
+        self.log: List[TransferTiming] = []
+
+    def transfer(self, now: float, n_bytes: int, *,
+                 cross_node: bool) -> TransferTiming:
+        """Unified interface: returns the readiness timeline."""
+        bw = self.bw_inter if cross_node else self.bw_intra
+        total = self.overhead + n_bytes / bw
+        per_layer = (n_bytes / self.n_layers) / bw
+        if self.protocol == "async-stream":
+            ready = now + self.overhead + per_layer
+        else:
+            ready = now + total          # sync / async-nostream wait fully
+        t = TransferTiming(now, ready, now + total, cross_node, n_bytes)
+        self.log.append(t)
+        return t
+
+    def blocks_dispatcher(self) -> bool:
+        return self.protocol == "sync"

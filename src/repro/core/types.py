@@ -1,0 +1,95 @@
+"""Shared control-plane state types (paper SS3.1, Table 1).
+
+These are the *control-plane views*: plain dataclasses mutated by the
+event loop (simulator or real executor).  All times are absolute seconds
+on the driving clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
+
+
+class Tier(enum.IntEnum):
+    URGENT = 0
+    NORMAL = 1
+    RELAXED = 2
+
+
+@dataclasses.dataclass
+class Stream:
+    """One real-time video generation session (Table 1)."""
+    sid: int
+    arrival: float
+    target_chunks: int
+    chunk_seconds: float              # playout seconds per chunk
+    home: int                         # home worker id
+    ttfc_slack: float                 # initial playout slack (SS3.3 step 1)
+
+    # --- playout timeline ---
+    next_deadline: float = 0.0        # ddl of the next (chunks_done+1) chunk
+    chunks_done: int = 0
+    first_chunk_time: Optional[float] = None
+    ready_times: List[float] = dataclasses.field(default_factory=list)
+    deadlines: List[float] = dataclasses.field(default_factory=list)
+    stall_time: float = 0.0
+    stall_events: List[float] = dataclasses.field(default_factory=list)
+    qualities: List[float] = dataclasses.field(default_factory=list)
+    fidelity_log: List[str] = dataclasses.field(default_factory=list)
+
+    # --- execution state ---
+    running_on: Optional[Tuple[int, ...]] = None   # worker ids (SP group)
+    step_done: int = 0                # denoise steps finished in cur chunk
+    chunk_started: Optional[float] = None
+    next_fidelity: FidelityConfig = HIGHEST_QUALITY
+    t_next: float = 0.0               # profiled latency of next chunk
+    remaining: float = 0.0            # R_u estimate for running chunk
+
+    # --- control state ---
+    credit: float = 0.0
+    tier: Tier = Tier.NORMAL
+    cooldown_until: float = -1e9      # re-homing cooldown (App. C.2)
+    sp_donor: Optional[int] = None    # borrowed worker (SS4.3)
+    resident_on: Set[int] = dataclasses.field(default_factory=set)
+    paused_until: float = -1.0
+    done: bool = False
+
+    @property
+    def finished(self) -> bool:
+        return self.chunks_done >= self.target_chunks
+
+    def playout_slack(self, now: float) -> float:
+        """P_u: remaining playable buffer ahead of the playout cursor."""
+        return self.next_deadline - now
+
+
+@dataclasses.dataclass
+class Worker:
+    """One GPU / one model replica (SS3.1 footnote 3)."""
+    wid: int
+    node: int
+    queue: List[int] = dataclasses.field(default_factory=list)  # stream ids
+    running: Optional[int] = None          # stream currently executing
+    donated_to: Optional[int] = None       # stream borrowing this worker
+    sent_this_tick: int = 0
+    recv_this_tick: int = 0
+
+    def load(self) -> int:
+        return len(self.queue) + (1 if self.running is not None else 0)
+
+
+@dataclasses.dataclass
+class ClusterView:
+    """Everything the Control Plane sees at a tick."""
+    streams: Dict[int, Stream]
+    workers: List[Worker]
+    workers_per_node: int = 8
+
+    def node_of(self, wid: int) -> int:
+        return self.workers[wid].node
+
+    def active_streams(self) -> List[Stream]:
+        return [s for s in self.streams.values() if not s.done]

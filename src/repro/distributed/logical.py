@@ -1,0 +1,73 @@
+"""Logical-axis sharding: models annotate tensors with *logical* axis names;
+a rules table maps logical names to mesh axes.  Outside a mesh context the
+annotations are no-ops, so the same model code runs on 1 CPU device and on a
+512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxis = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, MeshAxis]]]:
+    return getattr(_STATE, "env", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: Dict[str, MeshAxis]):
+    """Activate a mesh + logical->mesh axis mapping for model tracing."""
+    prev = _current()
+    _STATE.env = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _STATE.env = prev
+
+
+def resolve_spec(axes: Sequence[Optional[str]],
+                 rules: Dict[str, MeshAxis]) -> P:
+    """Map logical axis names to a PartitionSpec, dropping duplicate mesh
+    axes (a mesh axis may shard at most one tensor dimension)."""
+    used = set()
+    out = []
+    for name in axes:
+        mesh_axes = rules.get(name) if name is not None else None
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        kept = tuple(a for a in mesh_axes if a not in used)
+        used.update(kept)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(kept)
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical axes (no-op without an active mesh)."""
+    env = _current()
+    if env is None:
+        return x
+    mesh, rules = env
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard(): {len(axes)} axes for rank-{x.ndim} array")
+    spec = resolve_spec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_for(axes: Sequence[Optional[str]],
+             mesh: Mesh, rules: Dict[str, MeshAxis]) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(axes, rules))

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+The model-side attention substrate (``repro.models.attention.mha``) *is*
+the reference implementation: fp32 online-softmax over block schedules.
+This module re-exports it under the kernel-oracle naming convention so
+every kernel package has a ``ref.py`` with matching call signature.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import mha as _mha
+
+
+def flash_mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  n_kv_heads: int, causal: bool = True, q_offset: int = 0,
+                  window: int = 0, sink: int = 0, sparsity: float = 0.0,
+                  block_q: int = 512, block_kv: int = 512) -> jax.Array:
+    """q [B,Sq,Hq,D]; k,v [B,Skv,Hkv,D] -> [B,Sq,Hq,D]."""
+    return _mha(q, k, v, n_kv_heads=n_kv_heads, causal=causal,
+                q_offset=q_offset, window=window, sink=sink,
+                sparsity=sparsity, block_q=block_q, block_kv=block_kv)

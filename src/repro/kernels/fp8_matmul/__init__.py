@@ -1,0 +1,1 @@
+from repro.kernels.fp8_matmul.ops import fp8_matmul, quantize_fp8  # noqa: F401

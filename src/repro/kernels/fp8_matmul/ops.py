@@ -1,0 +1,33 @@
+"""Dispatching wrapper for the scaled fp8 matmul."""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fp8_matmul import ref as _ref
+
+
+def _mode():
+    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET") == "1":
+        return "interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def quantize_fp8(x: jax.Array, axis: int) -> Tuple[jax.Array, jax.Array]:
+    return _ref.quantize_fp8_ref(x, axis)
+
+
+def fp8_matmul(x: jax.Array, w: jax.Array, *,
+               out_dtype=jnp.float32) -> jax.Array:
+    """Online-quantized matmul: x [M,K] any float, w [K,N] any float."""
+    x_q, sx = quantize_fp8(x, axis=1)
+    w_q, sw = quantize_fp8(w, axis=0)
+    mode = _mode()
+    if mode == "ref":
+        return _ref.fp8_matmul_ref(x_q, w_q, sx, sw).astype(out_dtype)
+    from repro.kernels.fp8_matmul import kernel as _k
+    return _k.fp8_matmul_pallas(x_q, w_q, sx, sw, out_dtype=out_dtype,
+                                interpret=(mode == "interpret"))

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the scaled fp8 matmul (fidelity knob Q, SS2.1/SS6).
+
+SageAttention2-style online quantization: activations are dynamically
+scaled per row / per column into float8_e4m3fn with no weight reloading;
+the matmul accumulates in fp32 and folds the scales back at the end.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+FP8_MAX = 448.0         # float8_e4m3fn dynamic range
+
+
+def quantize_fp8_ref(x: jax.Array, axis: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-slice dynamic quantization along ``axis`` (the contracted dim).
+
+    Returns (x_fp8, scale) with x ~= x_fp8 * scale (scale broadcastable).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / FP8_MAX
+    q = (x.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+    return q, scale
+
+
+def fp8_matmul_ref(x_q: jax.Array, w_q: jax.Array,
+                   sx: jax.Array, sw: jax.Array) -> jax.Array:
+    """x_q [M,K] fp8, w_q [K,N] fp8, sx [M,1], sw [1,N] -> [M,N] fp32."""
+    acc = jnp.dot(x_q.astype(jnp.float32), w_q.astype(jnp.float32))
+    return acc * sx * sw

@@ -1,0 +1,112 @@
+"""Pallas TPU paged decode attention (State-Plane paged KV, SS4.4).
+
+The State Plane stores KV at latent-frame granularity in a physical page
+pool; decode must attend over a logically-contiguous sequence scattered
+across pages.  The block table is scalar-prefetched so the page index_map
+performs the indirection *before* the DMA — the TPU analogue of gather-
+from-page-table on GPU.  Grid: (batch, kv_head, page); online-softmax
+state for the head group rides in VMEM scratch across the page dimension.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref,                  # scalar prefetch
+            q_ref, k_ref, v_ref,              # VMEM
+            o_ref,
+            m_scr, l_scr, acc_scr,
+            *, scale: float, page_size: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+
+    @pl.when(i * page_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)         # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = i * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array,
+                                  block_table: jax.Array,
+                                  lengths: jax.Array, *,
+                                  interpret: bool = False) -> jax.Array:
+    """q [B,Hq,D]; pages [P_total, page, Hkv, D]; block_table [B, n];
+    lengths [B].  Returns [B,Hq,D]."""
+    b, hq, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    n_pages = block_table.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, group, d)
+
+    kernel = functools.partial(_kernel, scale=scale, page_size=page)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda b_, h, i, bt, ln: (b_, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h, i, bt, ln: (bt[b_, i], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b_, h, i, bt, ln: (bt[b_, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda b_, h, i, bt, ln: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, lengths, qg, k_pages, v_pages)
+    return out.reshape(b, hq, d)

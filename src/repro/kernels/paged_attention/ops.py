@@ -1,0 +1,27 @@
+"""Dispatching wrapper for paged decode attention."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.paged_attention import ref as _ref
+
+
+def _mode():
+    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET") == "1":
+        return "interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths):
+    """q [B,Hq,D]; pages [P_total,page,Hkv,D]; block_table [B,n];
+    lengths [B] -> [B,Hq,D]."""
+    mode = _mode()
+    if mode == "ref":
+        return _ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                               block_table, lengths)
+    from repro.kernels.paged_attention import kernel as _k
+    return _k.paged_decode_attention_pallas(
+        q, k_pages, v_pages, block_table, lengths,
+        interpret=(mode == "interpret"))

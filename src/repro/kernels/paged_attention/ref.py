@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Gathers the logical KV sequence out of the physical page pool through the
+block table, then runs the dense decode-attention reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention
+
+
+def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """pages [P_total, page, Hkv, D]; block_table [B, n] -> [B, n*page, Hkv, D]."""
+    b, n = block_table.shape
+    _, page, hkv, d = pages.shape
+    out = pages[block_table.reshape(-1)]            # [B*n, page, Hkv, D]
+    return out.reshape(b, n * page, hkv, d)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_table: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """q [B,Hq,D] -> [B,Hq,D]; lengths [B] = valid tokens per sequence."""
+    b, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    k = gather_pages(k_pages, block_table)
+    v = gather_pages(v_pages, block_table)
+    out = decode_attention(q[:, None], k, v, n_kv_heads=hkv,
+                           cache_len=lengths)
+    return out[:, 0]

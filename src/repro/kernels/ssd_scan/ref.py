@@ -1,0 +1,113 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) chunked scan.
+
+Semantics (Mamba-2, arXiv:2405.21060 SS6): the selective SSM
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t . h_t
+is evaluated in chunks of length ``Q``: quadratic attention-like math inside
+a chunk (tensor-core friendly), linear recurrence across chunk boundaries.
+
+Shapes (G = n_groups divides H = n_heads):
+    x  [B, S, H, P]     dt [B, S, H] (post-softplus, >= 0)
+    A  [H] (negative)   Bm [B, S, G, N]   Cm [B, S, G, N]
+    init_state [B, H, P, N] or None
+Returns  (y [B, S, H, P], final_state [B, H, P, N]), all fp32 accumulation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+            Bm: jax.Array, Cm: jax.Array, *,
+            chunk: int = 128,
+            init_state: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert h % g == 0, (h, g)
+    out_dtype = x.dtype
+
+    # pad sequence to a multiple of the chunk length
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = Bm.astype(jnp.float32).reshape(b, nc, q, g, n)
+    Cf = Cm.astype(jnp.float32).reshape(b, nc, q, g, n)
+    rep = h // g
+    Bh = jnp.repeat(Bf, rep, axis=3)                     # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cf, rep, axis=3)
+
+    dA = dtf * A.astype(jnp.float32)                     # [B,nc,Q,H] (<= 0)
+    cs = jnp.cumsum(dA, axis=2)                          # inclusive cumsum
+
+    # ---- intra-chunk (quadratic, masked) -----------------------------------
+    # L[i,j] = exp(cs_i - cs_j) for i >= j else 0
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # [B,nc,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)
+    W = CB * L * dtf[:, :, None, :, :]                   # weight on x_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xf)
+
+    # ---- per-chunk state contribution --------------------------------------
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)        # [B,nc,Q,H]
+    chunk_states = jnp.einsum("bcjhn,bcjhp->bchpn",
+                              Bh * (dtf * decay_to_end)[..., None], xf)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # [B,nc,H]
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    if init_state is None:
+        s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        s0 = init_state.astype(jnp.float32)
+
+    def step(state, inputs):
+        c_state, c_decay = inputs                        # [B,H,P,N], [B,H]
+        entering = state                                 # state before chunk
+        new = state * c_decay[:, :, None, None] + c_state
+        return new, entering
+
+    (final_state, entering_states) = jax.lax.scan(
+        step, s0, (chunk_states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    entering_states = entering_states.swapaxes(0, 1)     # [B,nc,H,P,N]
+
+    # ---- inter-chunk output -------------------------------------------------
+    c_weight = Ch * jnp.exp(cs)[..., None]               # [B,nc,Q,H,N]
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", c_weight, entering_states)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y.astype(out_dtype), final_state
+
+
+def ssd_decode_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                   Bm: jax.Array, Cm: jax.Array,
+                   state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent update.
+
+    x [B,H,P], dt [B,H], Bm/Cm [B,G,N], state [B,H,P,N].
+    Returns (y [B,H,P], new_state).
+    """
+    b, h, p = x.shape
+    g, n = Bm.shape[1], Bm.shape[2]
+    rep = h // g
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)   # [B,H,N]
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))              # [B,H]
+    xdt = x.astype(jnp.float32) * dtf[..., None]           # [B,H,P]
+    new_state = (state.astype(jnp.float32) * dA[:, :, None, None]
+                 + xdt[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,189 @@
+"""Compiled-artifact analysis: memory, FLOPs/bytes, collective traffic,
+and the three-term roofline (EXPERIMENTS.md SSRoofline).
+
+    compute    = HLO_FLOPs / (chips x peak FLOP/s)
+    memory     = HLO_bytes / (chips x HBM bandwidth)
+    collective = collective_bytes / (chips x ICI link bandwidth)
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.  ``cost_analysis`` provides FLOPs/bytes;
+collective bytes are summed from the optimized HLO text (result-shape
+bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Bytes of an HLO result signature (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective op kind."""
+    out: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        # "%name = TYPE[...] opcode(" or "ROOT %x = (tuple) opcode("
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+                     r"([a-z\-]+)(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        sig, op = m.group(1), m.group(2)
+        if op in _COLL_OPS:
+            if op.endswith("-start") or "-done" in s.split("(")[0]:
+                pass
+            out[op] += _shape_bytes(sig)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops: float                  # total HLO FLOPs (all devices)
+    hbm_bytes: float              # total bytes accessed
+    coll_bytes: float             # total collective bytes
+    coll_by_op: Dict[str, int]
+    n_chips: int
+    per_device_bytes: Optional[float]   # argument+output+temp per device
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.n_chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline-optimistic step time: max of the three terms
+        (perfect overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "per_device_bytes": self.per_device_bytes,
+        }
+
+
+def analyze(lowered, compiled, n_chips: int) -> Roofline:
+    """Roofline terms from the compiled per-device SPMD module.
+
+    Uses the while-loop-aware HLO analyzer (repro.launch.hlo_cost) —
+    XLA's own cost_analysis counts scan bodies once and is useless for
+    scan-over-layers programs.  All analyzer numbers are PER-DEVICE, so
+    totals are x n_chips.
+    """
+    from repro.launch import hlo_cost
+    text = compiled.as_text()
+    cost = hlo_cost.analyze_text(text)
+    per_dev = None
+    try:
+        ma = compiled.memory_analysis()
+        per_dev = float(ma.argument_size_in_bytes
+                        + ma.output_size_in_bytes
+                        + ma.temp_size_in_bytes)
+    except Exception:
+        pass
+    return Roofline(flops=cost.flops * n_chips,
+                    hbm_bytes=cost.hbm_bytes * n_chips,
+                    coll_bytes=cost.coll_bytes * n_chips,
+                    coll_by_op={k: int(v * n_chips)
+                                for k, v in cost.coll_by_op.items()},
+                    n_chips=n_chips,
+                    per_device_bytes=per_dev)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D (MoE) for train;
+    2*N*D for prefill; 2*N per token x batch for decode."""
+    from repro.configs.base import ModelConfig
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # one new token each
+
+
+def active_params(cfg) -> float:
+    """Analytic active-parameter count (MoE: top_k experts only)."""
+    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab_size
+    if cfg.family == "ssm":
+        di = cfg.ssm_expand * d
+        n = cfg.ssm_state
+        per = d * (2 * di + 2 * n + di // cfg.ssm_head_dim) + di * d
+        return L * per + v * d
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    attn = d * (hq * dh) + 2 * d * (hkv * dh) + (hq * dh) * d
+    if cfg.family == "hybrid":
+        import math
+        from repro.models.hybrid import sublayer_kinds
+        kinds = sublayer_kinds(cfg)
+        di = cfg.ssm_expand * d
+        n = cfg.ssm_state
+        mamba = d * (2 * di + 2 * n + di // cfg.ssm_head_dim) + di * d
+        total = 0.0
+        for mixer, ffn in kinds:
+            total += attn if mixer == "attn" else mamba
+            if ffn == "moe":
+                total += cfg.top_k * 3 * d * cfg.moe_d_ff
+            else:
+                total += 3 * d * f
+        return total * (L / len(kinds)) + 2 * v * d
+    if cfg.n_experts:
+        ffn = cfg.top_k * 3 * d * cfg.moe_d_ff + d * cfg.n_experts
+    elif cfg.act == "swiglu":
+        ffn = 3 * d * f
+    else:
+        ffn = 2 * d * f
+    n_layers = L
+    if cfg.family == "encdec":
+        n_layers = cfg.n_enc_layers + cfg.n_dec_layers
+        attn = attn * 1.5            # decoder adds cross-attention
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    return n_layers * (attn + ffn) + emb

@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell: build the production
+mesh, ``jax.jit(step, in_shardings=...).lower(**ShapeDtypeStructs)``,
+``.compile()``, and record memory_analysis / cost_analysis / collective
+bytes.  Success proves the distribution config is coherent; results feed
+EXPERIMENTS.md SSDry-run and SSRoofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-32b \
+        --shape train_4k [--multi-pod] [--windowed-adaptation]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Artifacts: benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.launch import analysis
+from repro.launch.lowering import lower_cell, cell_config
+from repro.launch.mesh import make_production_mesh
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             windowed_adaptation: bool = False, verbose: bool = True,
+             save: bool = True, analyze: bool = True,
+             save_hlo: bool = False) -> dict:
+    """One dry-run cell.  ``analyze=False`` skips the (expensive) HLO
+    roofline pass — compile success + memory_analysis only, used for the
+    multi-pod coherence check (the roofline table is single-pod).
+    ``save_hlo`` gzips the optimized HLO next to the artifact so the
+    analyzer can be re-run without recompiling."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + \
+        ("__winadapt" if windowed_adaptation else "")
+    if not windowed_adaptation and not cfg.supports_shape(shape):
+        rec = {"cell": tag, "status": "skipped",
+               "reason": "long_500k needs sub-quadratic attention "
+                         "(DESIGN.md SS4); windowed adaptation lowered "
+                         "separately"}
+        if save:
+            os.makedirs(ART_DIR, exist_ok=True)
+            with open(os.path.join(ART_DIR, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        if verbose:
+            print(json.dumps(rec))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, mesh, shape,
+                             windowed_adaptation=windowed_adaptation)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        rec = {
+            "cell": tag, "status": "ok", "n_chips": n_chips,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        }
+        mf = analysis.model_flops(cell_config(
+            cfg, shape, windowed_adaptation=windowed_adaptation), shape)
+        rec["model_flops"] = mf
+        if analyze:
+            roof = analysis.analyze(lowered, compiled, n_chips)
+            rec.update(roof.row())
+            rec["useful_ratio"] = (mf / roof.flops) if roof.flops else None
+            if save_hlo:
+                import gzip
+                os.makedirs(ART_DIR, exist_ok=True)
+                with gzip.open(os.path.join(ART_DIR, tag + ".hlo.gz"),
+                               "wt") as f:
+                    f.write(compiled.as_text())
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+            }
+        except Exception:
+            pass
+    except Exception as e:       # a failure here is a bug in the system
+        rec = {"cell": tag, "status": "FAILED",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    if save:
+        os.makedirs(ART_DIR, exist_ok=True)
+        with open(os.path.join(ART_DIR, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        show = {k: v for k, v in rec.items() if k != "traceback"}
+        print(json.dumps(show, default=str))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--windowed-adaptation", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    lm_archs = [a for a in list_archs() if not a.startswith("ardit")]
+    cells = []
+    if args.all:
+        for a in lm_archs:
+            for s in SHAPES:
+                cells.append((a, s, args.multi_pod, False))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, args.multi_pod,
+                      args.windowed_adaptation))
+
+    failures = 0
+    for (a, s, mp, wa) in cells:
+        rec = run_cell(a, s, multi_pod=mp, windowed_adaptation=wa)
+        if rec["status"] == "FAILED":
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

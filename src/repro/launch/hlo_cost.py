@@ -1,0 +1,474 @@
+"""While-loop-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, which makes
+it useless for scan-over-layers programs (the whole transformer lives in
+one loop body).  This analyzer parses the optimized HLO module, builds
+the computation call graph, extracts counted-loop trip counts from the
+canonical ``compare(iter, constant)`` condition, and multiplies each
+computation's cost by its total multiplicity:
+
+    flops       2*prod(batch)*M*N*K per dot (incl. dots inside fusions)
+    hbm bytes   operand+result bytes of top-level ops in unfused
+                computations (post-fusion HLO: fusion boundaries ARE the
+                HBM traffic boundaries)
+    collective  result bytes of all-gather / all-reduce / reduce-scatter
+                / all-to-all / collective-permute ops
+
+All numbers are PER-DEVICE (the compiled module is the per-device SPMD
+program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2,
+    "f32": 4, "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLL_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute", "all-gather-start", "all-reduce-start",
+             "collective-permute-start"}
+
+_SHAPE_TOKEN = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_list(sig: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_TOKEN.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _sig_bytes(sig: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(sig):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    result_sig: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpLine]
+    is_fusion_body: bool
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index just past the balanced paren group opening at ``start``."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _split_top(s: str) -> List[str]:
+    """Split on top-level commas (ignoring (), [], {} nesting)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [x.strip() for x in out if x.strip()]
+
+
+_OPCODE_RE = re.compile(r"([\w\-]+)\(")
+
+
+def _parse_op(line: str) -> Optional[OpLine]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):                    # tuple result type
+        end = _balanced(rest, 0)
+        sig, rest2 = rest[:end], rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        sig, rest2 = rest[:sp], rest[sp + 1:].lstrip()
+    m = _OPCODE_RE.match(rest2)
+    if not m:
+        return None
+    opcode = m.group(1)
+    a0 = rest2.find("(")
+    a1 = _balanced(rest2, a0)
+    operands = [a.split(" ")[-1] for a in _split_top(rest2[a0 + 1:a1 - 1])]
+    return OpLine(name, sig, opcode, operands, s, s)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(
+            r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$", stripped)
+        if header:
+            name = "%" + header.group(2)
+            cur = Computation(name, [], is_fusion_body=False)
+            comps[name] = cur
+            if header.group(1):
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        op = _parse_op(line)
+        if op is not None:
+            cur.ops.append(op)
+    return comps
+
+
+def _dot_flops(op: OpLine, shapes: Dict[str, str]) -> float:
+    """2 * prod(batch) * M * N * K from the dot's dnums + shapes."""
+    lhs_sig = shapes.get(op.operands[0], "") if op.operands else ""
+    out_shapes = _shape_list(op.result_sig)
+    lhs_shapes = _shape_list(lhs_sig)
+    if not out_shapes or not lhs_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    lhs = lhs_shapes[0][1]
+    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.raw)
+    k = 1
+    if cdims:
+        for d in cdims.group(1).split(","):
+            if d:
+                k *= lhs[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _trip_count(while_raw: str,
+                cond: Optional[Computation]) -> int:
+    """Trip count: XLA's known_trip_count backend_config, else the
+    canonical ``compare(iter, constant)`` condition constant."""
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"', while_raw)
+    if m:
+        return int(m.group(1))
+    const = None
+    if cond is not None:
+        for op in cond.ops:
+            if op.opcode == "constant":
+                mm = re.search(r"constant\((-?\d+)\)", op.raw)
+                if mm:
+                    const = int(mm.group(1))
+    if const is not None and const > 0:
+        return const
+    return 1
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_op: Dict[str, float]
+
+
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "while", "conditional", "call",
+                 "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _is_pure_convert(callee: "Computation") -> bool:
+    """A fusion that only converts dtypes (bf16->f32 staging for dots).
+    The CPU backend has no native bf16 matmul and materializes converted
+    weight copies; the TPU MXU consumes bf16 directly, so these fusions
+    are zero HBM traffic on the target."""
+    return all(o.opcode in ("parameter", "convert", "bitcast", "copy")
+               for o in callee.ops)
+
+
+def _fusion_operand_sigs(callee: "Computation", op: OpLine,
+                         operand_sigs: List[Optional[str]]
+                         ) -> List[Optional[str]]:
+    """Per-operand effective read size for a fusion: if the fused body
+    only consumes parameter i through slice/dynamic-slice ops, the real
+    read is the slice result(s), not the whole operand."""
+    params: Dict[int, str] = {}
+    for o in callee.ops:
+        if o.opcode == "parameter":
+            mm = re.search(r"parameter\((\d+)\)", o.raw)
+            if mm:
+                params[int(mm.group(1))] = o.name
+    out = list(operand_sigs)
+    for idx, sig in enumerate(operand_sigs):
+        pname = params.get(idx)
+        if pname is None or sig is None:
+            continue
+        consumers = [o for o in callee.ops if pname in o.operands]
+        if consumers and all(o.opcode in ("slice", "dynamic-slice",
+                                          "gather")
+                             for o in consumers):
+            out[idx] = " ".join(o.result_sig for o in consumers)
+    return out
+
+
+def top_ops(text: str, n: int = 12,
+            kind: str = "collective") -> List[Tuple[float, str, str]]:
+    """Largest traffic/collective contributors (bytes x multiplicity) —
+    the profiling primitive of the SSPerf hypothesis loop."""
+    comps = parse_module(text)
+    entry = comps.get("__entry__") or max(comps.values(),
+                                          key=lambda c: len(c.ops))
+    mult, comp_trip, top_level = _propagate(comps, entry)
+    rows: List[Tuple[float, str, str]] = []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        trip = comp_trip.get(cname, 1)
+        shapes = {op.name: op.result_sig for op in comp.ops}
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "")
+            if kind == "collective":
+                if base in ("all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute"):
+                    rows.append((m * _sig_bytes(op.result_sig), base,
+                                 op.raw[:150]))
+            elif cname in top_level and op.opcode not in _SKIP_TRAFFIC:
+                b = _sig_bytes(op.result_sig)
+                rows.append((m * b, op.opcode, op.raw[:150]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def _propagate(comps, entry):
+    mult: Dict[str, float] = {entry.name: 1.0}
+    order = [entry.name]
+    seen = {entry.name}
+    comp_trip: Dict[str, int] = {}
+    top_level = {entry.name}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            callees = []
+            if op.opcode == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", op.raw)
+                cond = re.search(r"condition=%?([\w\.\-]+)", op.raw)
+                trip = _trip_count(op.raw, comps.get(
+                    "%" + cond.group(1)) if cond else None)
+                if body:
+                    callees.append(("%" + body.group(1), float(trip)))
+                    top_level.add("%" + body.group(1))
+                    comp_trip["%" + body.group(1)] = trip
+                if cond:
+                    callees.append(("%" + cond.group(1), float(trip + 1)))
+                    top_level.add("%" + cond.group(1))
+            else:
+                for attr in ("calls", "to_apply"):
+                    mm = re.search(attr + r"=%?([\w\.\-]+)", op.raw)
+                    if mm:
+                        callees.append(("%" + mm.group(1), 1.0))
+            for (callee, f) in callees:
+                if callee not in comps:
+                    continue
+                mult[callee] = mult.get(callee, 0.0) + mult[cname] * f
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    return mult, comp_trip, top_level
+
+
+def analyze_text(text: str) -> HloCost:
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps.values(), key=lambda c: len(c.ops))
+
+    # multiplicity propagation over the call graph
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry.name] = 1.0
+    order = [entry.name]
+    seen = {entry.name}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m_here = mult[cname]
+        for op in comp.ops:
+            callees = []
+            factor = 1.0
+            if op.opcode == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", op.raw)
+                cond = re.search(r"condition=%?([\w\.\-]+)", op.raw)
+                cond_comp = comps.get("%" + cond.group(1)) if cond else None
+                trip = _trip_count(op.raw, cond_comp)
+                if body:
+                    callees.append(("%" + body.group(1), float(trip)))
+                if cond:
+                    callees.append(("%" + cond.group(1), float(trip + 1)))
+            else:
+                for attr in ("calls", "to_apply"):
+                    mm = re.search(attr + r"=%?([\w\.\-]+)", op.raw)
+                    if mm:
+                        callees.append(("%" + mm.group(1), 1.0))
+                mm = re.search(r"branch_computations=\{([^}]*)\}", op.raw)
+                if mm:
+                    for b in mm.group(1).split(","):
+                        callees.append((b.strip().lstrip("%").join(
+                            ["%", ""]), 1.0))
+            for (callee, f) in callees:
+                if callee not in comps:
+                    continue
+                mult[callee] = mult.get(callee, 0.0) + m_here * f
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    # computations reached ONLY through calls=/to_apply are fused bodies:
+    # their internals are not HBM traffic.  Top-level = entry + while
+    # bodies/conditions + conditional branches.  while bodies remember
+    # their trip count for the scan-carry traffic rule below.
+    top_level = {entry.name}
+    comp_trip: Dict[str, int] = {}
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            if op.opcode == "while":
+                cond = re.search(r"condition=%?([\w\.\-]+)", op.raw)
+                trip = _trip_count(op.raw,
+                                   comps.get("%" + cond.group(1))
+                                   if cond else None)
+                for attr in ("body", "condition"):
+                    mm = re.search(attr + r"=%?([\w\.\-]+)", op.raw)
+                    if mm:
+                        top_level.add("%" + mm.group(1))
+                        comp_trip["%" + mm.group(1)] = trip
+            mm = re.search(r"branch_computations=\{([^}]*)\}", op.raw)
+            if mm:
+                for b in mm.group(1).split(","):
+                    top_level.add("%" + b.strip().lstrip("%"))
+
+    def _traffic_bytes(sig: str, trip: int) -> float:
+        """HBM bytes for one access of a tensor inside a T-trip loop
+        body, with two target-hardware adjustments:
+
+        * scan-carry stacks (leading dim == T) are touched one slice
+          per iteration, not wholesale (in-place dynamic slice/update);
+        * rank-5 f32/pred tensors are the attention-score / SSD-segment
+          internals of this substrate's einsum conventions
+          ([B,Hkv,G,q,k] scores+masks, [B,nc,Q,Q,H] SSD L-matrices) —
+          on the TPU target they live in the Pallas kernels' VMEM
+          scratch and never reach HBM (flops still counted).
+        """
+        total = 0.0
+        for dt, shape in _shape_list(sig):
+            if len(shape) == 5 and dt in ("f32", "pred"):
+                continue
+            n = 1
+            for d in shape:
+                n *= d
+            b = n * _DTYPE_BYTES[dt]
+            if trip > 1 and shape and shape[0] == trip:
+                b /= trip
+            total += b
+        return total
+
+    flops = 0.0
+    hbm = 0.0
+    coll = 0.0
+    coll_by: Dict[str, float] = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m <= 0.0:
+            continue
+        trip = comp_trip.get(cname, 1)
+        shapes = {op.name: op.result_sig for op in comp.ops}
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                flops += m * _dot_flops(op, shapes)
+            base = op.opcode.replace("-start", "")
+            if base in ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                b = _sig_bytes(op.result_sig)
+                coll += m * b
+                coll_by[base] = coll_by.get(base, 0.0) + m * b
+            if (cname in top_level
+                    and op.opcode not in _SKIP_TRAFFIC
+                    and not op.opcode.endswith("-done")):
+                if op.opcode in ("slice", "dynamic-slice", "gather"):
+                    # a slice reads only the sliced region (== result),
+                    # not its whole source operand
+                    hbm += m * 2.0 * _traffic_bytes(op.result_sig, trip)
+                    continue
+                operand_sigs = [shapes.get(o) for o in op.operands]
+                # fusion refinement: pure dtype-convert fusions are
+                # zero-traffic on the TPU target; an operand the fused
+                # body only SLICES is read at slice granularity
+                if op.opcode == "fusion":
+                    mm = re.search(r"calls=%?([\w\.\-]+)", op.raw)
+                    callee = comps.get("%" + mm.group(1)) if mm else None
+                    if callee is not None:
+                        if _is_pure_convert(callee):
+                            continue
+                        operand_sigs = _fusion_operand_sigs(
+                            callee, op, operand_sigs)
+                operand_sigs = [s for s in operand_sigs if s]
+                # in-place aliasing: an operand with the result's exact
+                # signature buffer-shares it (DUS carries, elementwise
+                # donation) — count the operand reads, skip the result
+                aliased = op.result_sig in operand_sigs
+                op_bytes = 0.0 if aliased else _traffic_bytes(
+                    op.result_sig, trip)
+                for sig in operand_sigs:
+                    op_bytes += _traffic_bytes(sig, trip)
+                hbm += m * op_bytes
+    return HloCost(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                   coll_by_op=coll_by)

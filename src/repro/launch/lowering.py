@@ -1,0 +1,143 @@
+"""Shared lowering helpers: build the sharded train / prefill / decode
+step for any (arch x shape x mesh) cell and ``.lower()`` it with
+ShapeDtypeStruct stand-ins (no allocation) — the substrate of the
+multi-pod dry-run and the roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.distributed import sharding as shd
+from repro.distributed.logical import logical_axis_rules
+from repro.models import registry
+
+# the paper's knob Q applied at the serving layer: MHA-width KV caches
+# (kv_heads == n_heads) at decode_32k x batch 128 exceed HBM in bf16;
+# fp8 KV (SS2.1, SageAttention2-style online quant) halves them.
+FP8_KV_ARCHS = {"qwen1.5-32b"}
+
+# sink+local windowed-KV adaptation (SS2.1) lowered as an EXTRA cell for
+# pure full-attention archs at long_500k (the base cell stays skipped)
+ADAPT_WINDOW = 61440
+ADAPT_SINK = 4096
+
+
+def cell_config(cfg: ModelConfig, shape: ShapeConfig, *,
+                windowed_adaptation: bool = False) -> ModelConfig:
+    if windowed_adaptation:
+        cfg = cfg.with_window(ADAPT_WINDOW, ADAPT_SINK)
+    if shape.kind == "decode" and cfg.name in FP8_KV_ARCHS:
+        cfg = dataclasses.replace(cfg, kv_dtype="float8_e4m3fn")
+    return cfg
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(k.key) if hasattr(k, "key") else str(k) for k in path)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_spec: Any, *,
+                    shard_seq: bool = False) -> Any:
+    """Path-aware cache sharding: KV leaves [*,B,S,H,D] shard batch over
+    data + heads over model (or sequence over data for long-context);
+    SSM states shard heads/channels over model."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b_ax: Any = batch_axes if not shard_seq else None
+    s_ax: Any = batch_axes if shard_seq else None
+    tp_size = mesh.shape[shd.TP]
+    # KV heads shard over "model" only when divisible (GQA kv=8/16);
+    # MHA-width or tiny-kv archs (40, 36, 4 heads) shard the cache
+    # SEQUENCE over "model" instead — GSPMD emits the flash-decoding
+    # partial-softmax combine for the sharded softmax reduction.
+    heads_ok = cfg.n_kv_heads > 0 and cfg.n_kv_heads % tp_size == 0
+
+    def spec(path, leaf):
+        name = _path_names(path)[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v"):                     # [L,B,S,H,D]
+            if heads_ok:
+                p = P(None, b_ax, s_ax, shd.TP, None)
+            else:
+                p = P(None, b_ax, shd.TP if not shard_seq else s_ax,
+                      None, None)
+        elif name in ("ck", "cv"):                 # [L,B,T_enc,H,D]
+            p = P(None, b_ax, None, shd.TP if heads_ok else None, None)
+        elif name == "ssm":                        # [L,B,H,P,N]
+            p = P(None, b_ax, shd.TP, None, None)
+        elif name == "conv":                       # [L,B,K-1,C]
+            p = P(None, b_ax, None, shd.TP)
+        else:
+            p = P(*([None] * nd))
+        assert len(p) <= nd, (name, nd)
+        return NamedSharding(mesh, p)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_spec)
+
+
+def lower_prefill(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    api = registry.get_api(cfg)
+    p_specs = registry.param_specs(cfg)
+    p_shard = shd.param_shardings(p_specs, mesh, serve=True, ep=cfg.moe_ep)
+    batch = registry.input_specs(cfg, shape)
+    rules = shd.serve_rules(mesh, ep=cfg.moe_ep)
+    bp = shd.batch_pspec(mesh)
+
+    b_shard = jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, P(*(tuple(bp) + (None,) * (len(leaf.shape) - 1)))), batch)
+
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+
+    def fn(params, batch_in):
+        with logical_axis_rules(mesh, rules):
+            kw = {k: batch_in[k] for k in extras}
+            logits, cache, clen = api.prefill(cfg, params,
+                                              batch_in["tokens"], **kw)
+            return logits, cache, clen
+
+    jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+    return jitted.lower(p_specs, batch)
+
+
+def lower_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    api = registry.get_api(cfg)
+    p_specs = registry.param_specs(cfg)
+    p_shard = shd.param_shardings(p_specs, mesh, serve=True, ep=cfg.moe_ep)
+    cache_spec = registry.cache_specs(cfg, shape)
+    shard_seq = shape.global_batch == 1
+    c_shard = cache_shardings(cfg, mesh, cache_spec, shard_seq=shard_seq)
+    io = registry.input_specs(cfg, shape)        # token [B,1], pos [B]
+    bp = shd.batch_pspec(mesh)
+    b_axis = bp[0] if len(bp) else None          # flat axis (or axis tuple)
+    tok_shard = NamedSharding(mesh, P(None if shard_seq else b_axis, None))
+    pos_shard = NamedSharding(mesh, P(None if shard_seq else b_axis))
+    rules = shd.serve_rules(mesh, shard_seq=shard_seq, ep=cfg.moe_ep)
+
+    def fn(params, cache, token, pos):
+        with logical_axis_rules(mesh, rules):
+            return api.decode_step(cfg, params, cache, token, pos)
+
+    jitted = jax.jit(fn, in_shardings=(p_shard, c_shard, tok_shard,
+                                       pos_shard))
+    return jitted.lower(p_specs, cache_spec, io["token"], io["pos"])
+
+
+def lower_train(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                microbatches: int = 1):
+    from repro.train.loop import lower_train_step
+    return lower_train_step(cfg, mesh, shape, microbatches=microbatches)
+
+
+def lower_cell(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+               windowed_adaptation: bool = False, microbatches: int = 1):
+    cfg = cell_config(cfg, shape, windowed_adaptation=windowed_adaptation)
+    if shape.kind == "train":
+        return lower_train(cfg, mesh, shape, microbatches=microbatches)
+    if shape.kind == "prefill":
+        return lower_prefill(cfg, mesh, shape)
+    return lower_decode(cfg, mesh, shape)

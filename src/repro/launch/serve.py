@@ -1,0 +1,60 @@
+"""Serving launcher.
+
+Two modes:
+
+    --sim      cluster-scale discrete-event evaluation (the paper's SS7
+               experiments): real control plane, modeled 16-worker
+               cluster, any workload/policy.
+    --real     real JAX AR-DiT execution on this host: BMPR-selected
+               fidelity drives actual chunk generation (tiny model).
+
+    PYTHONPATH=src python -m repro.launch.serve --sim \
+        --workload steady --policy slackserve --streams 300
+    PYTHONPATH=src python -m repro.launch.serve --real --streams 2
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--sim", action="store_true")
+    mode.add_argument("--real", action="store_true")
+    ap.add_argument("--workload", default="steady")
+    ap.add_argument("--policy", default="slackserve")
+    ap.add_argument("--streams", type=int, default=300)
+    ap.add_argument("--rate", type=float, default=1.0)
+    ap.add_argument("--model", default="causal-forcing")
+    ap.add_argument("--chunks", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.real:
+        from repro.serve.executor import serve_session
+        streams = serve_session(n_streams=args.streams,
+                                chunks_per_stream=args.chunks)
+        print(f"served {len(streams)} streams x "
+              f"{args.chunks} chunks (real model)")
+        return
+
+    from repro.sched_sim.metrics import summarize, transfer_stats
+    from repro.sched_sim.policies import SDV2Policy, make_policy
+    from repro.sched_sim.simulator import SimConfig, Simulator
+    from repro.sched_sim.workloads import WORKLOADS
+
+    specs = WORKLOADS[args.workload](n=args.streams, rate=args.rate,
+                                     seed=args.seed)
+    policy = make_policy(args.policy, model=args.model)
+    sim_cfg = (SDV2Policy.sim_config() if args.policy == "sdv2"
+               else SimConfig(model=args.model))
+    res = Simulator(sim_cfg, specs, policy).run()
+    s = summarize(res)
+    print(f"{args.policy} on {args.workload}: {s.row()}")
+    print(f"  rehomings={s.n_rehomings} elastic_sp={s.n_sp_events} "
+          f"transfers={transfer_stats(res)}")
+
+
+if __name__ == "__main__":
+    main()

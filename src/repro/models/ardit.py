@@ -1,0 +1,324 @@
+"""AR-DiT: chunk-wise autoregressive video diffusion transformer.
+
+The paper's model family (Self-Forcing / Causal-Forcing style): video is
+generated one *chunk* (``chunk_frames`` latent frames = ``chunk_tokens``
+tokens) at a time.  Each chunk is denoised over ``S`` steps; within-chunk
+attention is bidirectional, and every token also attends to the rolling
+KV cache of previous chunks (sink + local window, SS2.1).  Conditioning
+embeddings occupy the sink slot, so the sink doubles as the prompt context.
+
+All four fidelity knobs are live here (SS5 / App. A):
+    S    denoise steps       -> fewer model evaluations
+    rho  attention sparsity  -> static strided drop of cached KV blocks
+    W    KV window (chunks)  -> shorter visible cache slice
+    Q    quantization        -> fp8 KV cache
+``serve_chunk`` is the unit of work the serving system schedules.  Cache
+bookkeeping (len/chunks) is host-side Python — the serving executor jits
+only ``chunk_forward``; shapes are static per (fill, fidelity) state, of
+which there are at most ``window_chunks + 1``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.logical import shard
+from repro.models import layers as L
+from repro.models.attention import mha, sparse_keep_list
+
+Params = Dict[str, Any]
+
+LATENT_CH = 16          # latent channels out of the (stubbed) video VAE
+COND_TOKENS = 77        # text-conditioning tokens (stub encoder output)
+
+
+class FidelityConfig(NamedTuple):
+    """A concrete assignment of the paper's four fidelity knobs (SS5)."""
+    steps: int = 4              # S in {2,3,4}
+    sparsity: float = 0.0       # rho in {0,.6,.7,.8,.9}
+    window: int = 7             # W in {1,3,7} chunks
+    quant: str = "bf16"         # Q in {bf16,fp8}
+
+    @property
+    def key(self) -> str:
+        return f"S{self.steps}_r{self.sparsity}_W{self.window}_{self.quant}"
+
+
+HIGHEST_QUALITY = FidelityConfig(4, 0.0, 7, "bf16")
+
+
+def chunk_tokens(cfg: ModelConfig) -> int:
+    return cfg.ardit_chunk_frames * cfg.ardit_frame_tokens
+
+
+def cache_capacity(cfg: ModelConfig) -> int:
+    """KV capacity in tokens: cond sink + window chunks."""
+    return COND_TOKENS + cfg.ardit_window_chunks * chunk_tokens(cfg)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ks = L.split_keys(key, 3)
+    d = cfg.d_model
+    return {
+        "attn": L.init_attn(cfg, ks[0], dtype),
+        "mlp": L.init_mlp(cfg, ks[1], dtype),
+        # adaLN-zero: 6 modulation vectors per layer
+        "mod": jnp.zeros((d, 6 * d), dtype),
+        "mod_b": jnp.zeros((6 * d,), dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = L.split_keys(key, 6)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    d = cfg.d_model
+    return {
+        "in_proj": L.dense_init(ks[1], (LATENT_CH, d), dtype),
+        "cond_proj": L.dense_init(ks[2], (d, d), dtype),
+        "t_mlp1": L.dense_init(ks[3], (256, d), dtype),
+        "t_mlp2": L.dense_init(ks[4], (d, d), dtype),
+        "layers": jax.vmap(lambda k: _init_layer(cfg, k, dtype))(layer_keys),
+        "final_norm": jnp.ones((d,), dtype),
+        "final_mod": jnp.zeros((d, 2 * d), dtype),
+        "out_proj": L.dense_init(ks[5], (d, LATENT_CH), dtype, scale=0.02),
+    }
+
+
+def _time_embed(p: Params, t: jax.Array, d: int) -> jax.Array:
+    """t [B] in [0,1] -> [B, D] conditioning vector."""
+    half = 128
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :] * 1000.0
+    emb = jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)  # [B,256]
+    h = jax.nn.silu(emb.astype(p["t_mlp1"].dtype) @ p["t_mlp1"])
+    return h @ p["t_mlp2"]
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def cache_sparse_index(cfg: ModelConfig, ctx_len: int,
+                       sparsity: float) -> Optional[np.ndarray]:
+    """Static token indices of the cached context kept under knob rho.
+
+    Sink (cond) tokens and the most recent chunk are always kept; a strided
+    ~(1-rho) fraction of the middle blocks survives (SS5, Light-Forcing
+    style block sparsity, 128-aligned for the TPU kernel).
+    """
+    if sparsity <= 0.0 or ctx_len <= COND_TOKENS:
+        return None
+    blk = 128
+    body = ctx_len - COND_TOKENS
+    n_blocks = max(1, body // blk)
+    keep = sparse_keep_list(1, [n_blocks], sparsity, sink_blocks=1)[0]
+    idx = [np.arange(COND_TOKENS)]
+    for j in keep:
+        lo = COND_TOKENS + j * blk
+        hi = min(COND_TOKENS + (j + 1) * blk, ctx_len)
+        idx.append(np.arange(lo, hi))
+    tail = COND_TOKENS + n_blocks * blk
+    if tail < ctx_len:
+        idx.append(np.arange(tail, ctx_len))
+    return np.unique(np.concatenate(idx))
+
+
+# ---------------------------------------------------------------------------
+# core forward: one chunk conditioned on visible context KV
+# ---------------------------------------------------------------------------
+
+def chunk_forward(cfg: ModelConfig, p: Params, x_chunk: jax.Array,
+                  t: jax.Array, ctx_k: Optional[jax.Array],
+                  ctx_v: Optional[jax.Array], *, q_offset: int,
+                  sparsity: float = 0.0) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One DiT pass over a chunk.
+
+    x_chunk [B, T_c, LATENT_CH]; t [B] denoise time; ctx_k/v
+    [L, B, ctx_len, Hkv, Dh] visible context (or None).  Returns
+    (prediction [B, T_c, LATENT_CH], {"k","v"} per-layer chunk KV).
+    """
+    b, tc, _ = x_chunk.shape
+    d = cfg.d_model
+    h = shard(x_chunk.astype(p["in_proj"].dtype) @ p["in_proj"],
+              "batch", None, "embed")
+    temb = _time_embed(p, t, d)                                   # [B,D]
+    positions = q_offset + jnp.arange(tc)
+    ones = jnp.ones((d,), h.dtype)
+
+    keep_idx = None
+    if ctx_k is not None:
+        keep_idx = cache_sparse_index(cfg, ctx_k.shape[2], sparsity)
+
+    def body(hh, xs):
+        lp = xs["layer"]
+        mod = jax.nn.silu(temb) @ lp["mod"] + lp["mod_b"]         # [B,6D]
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        a_in = _modulate(L.rmsnorm(hh, ones, cfg.norm_eps), sh1, sc1)
+        q, k, v = L.attn_qkv(cfg, lp["attn"], a_in, positions)
+        if ctx_k is not None:
+            kc, vc = xs["ck"], xs["cv"]
+            if keep_idx is not None:
+                kc, vc = kc[:, keep_idx], vc[:, keep_idx]
+            k_all = jnp.concatenate([kc.astype(k.dtype), k], axis=1)
+            v_all = jnp.concatenate([vc.astype(v.dtype), v], axis=1)
+        else:
+            k_all, v_all = k, v
+        o = mha(q, k_all, v_all, n_kv_heads=cfg.n_kv_heads, causal=False)
+        o = o.reshape(b, tc, cfg.n_heads * cfg.head_dim)
+        hh = hh + g1[:, None, :] * shard(o @ lp["attn"]["wo"],
+                                         "batch", None, "embed")
+        f_in = _modulate(L.rmsnorm(hh, ones, cfg.norm_eps), sh2, sc2)
+        hh = hh + g2[:, None, :] * L.mlp_block(cfg, lp["mlp"], f_in)
+        return hh, {"k": k, "v": v}
+
+    xs = {"layer": p["layers"]}
+    if ctx_k is not None:
+        xs["ck"] = ctx_k
+        xs["cv"] = ctx_v
+    h, new_kv = jax.lax.scan(body, h, xs)
+
+    mod = jax.nn.silu(temb) @ p["final_mod"]
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    h = _modulate(L.rmsnorm(h, p["final_norm"], cfg.norm_eps), sh, sc)
+    return h @ p["out_proj"], new_kv
+
+
+# ---------------------------------------------------------------------------
+# serving: host-side cache bookkeeping + chunk generation
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, p: Params, cond: jax.Array,
+               kv_dtype: Optional[str] = None) -> Dict[str, Any]:
+    """Cache whose sink slot is the conditioning tokens.
+
+    cond: [B, COND_TOKENS, d_model] (stub text-encoder output).
+    ``len``/``chunks`` are host-side Python ints (static shapes per state).
+    """
+    dt = jnp.dtype(kv_dtype or cfg.kv_dtype)
+    cond = cond.astype(p["cond_proj"].dtype) @ p["cond_proj"]
+    positions = jnp.arange(COND_TOKENS)
+
+    def kv_of(lp):
+        _, k, v = L.attn_qkv(cfg, lp, cond, positions)
+        return k, v
+
+    ks, vs = jax.vmap(kv_of)(p["layers"]["attn"])   # [L,B,T,H,Dh]
+    return {"k": ks.astype(dt), "v": vs.astype(dt),
+            "len": COND_TOKENS, "chunks": 0}
+
+
+def visible_context(cfg: ModelConfig, cache: Dict[str, Any],
+                    window: int) -> Tuple[jax.Array, jax.Array]:
+    """Sink + last ``window`` chunks of the cache (knob W)."""
+    tc = chunk_tokens(cfg)
+    resident = (cache["len"] - COND_TOKENS) // tc
+    w = min(window, resident)
+    k, v = cache["k"], cache["v"]
+    if w == resident:
+        return k[:, :, :cache["len"]], v[:, :, :cache["len"]]
+    lo = cache["len"] - w * tc
+    return (jnp.concatenate([k[:, :, :COND_TOKENS], k[:, :, lo:cache["len"]]],
+                            axis=2),
+            jnp.concatenate([v[:, :, :COND_TOKENS], v[:, :, lo:cache["len"]]],
+                            axis=2))
+
+
+def append_chunk_kv(cfg: ModelConfig, cache: Dict[str, Any],
+                    new_kv: Dict[str, jax.Array]) -> Dict[str, Any]:
+    """Append a chunk's KV; evict the oldest non-sink chunk when full."""
+    tc = chunk_tokens(cfg)
+    cap = cache_capacity(cfg)
+    k, v = cache["k"], cache["v"]
+    ln, nch = cache["len"], cache["chunks"]
+    nk = new_kv["k"].astype(k.dtype)    # [L,B,tc,H,Dh]
+    nv = new_kv["v"].astype(v.dtype)
+    if ln + tc <= cap:
+        k = jnp.concatenate([k[:, :, :ln], nk], axis=2)
+        v = jnp.concatenate([v[:, :, :ln], nv], axis=2)
+        return {"k": k, "v": v, "len": ln + tc, "chunks": nch + 1}
+    sink = COND_TOKENS
+    k = jnp.concatenate([k[:, :, :sink], k[:, :, sink + tc:ln], nk], axis=2)
+    v = jnp.concatenate([v[:, :, :sink], v[:, :, sink + tc:ln], nv], axis=2)
+    return {"k": k, "v": v, "len": ln, "chunks": nch + 1}
+
+
+def sigma_schedule(steps: int) -> np.ndarray:
+    """Rectified-flow time grid 1 -> 0 (noise -> data)."""
+    return np.linspace(1.0, 0.0, steps + 1)
+
+
+def serve_chunk(cfg: ModelConfig, p: Params, cache: Dict[str, Any],
+                noise: jax.Array, fidelity: FidelityConfig = HIGHEST_QUALITY,
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Generate one chunk under a fidelity configuration.
+
+    noise: [B, T_c, LATENT_CH].  Returns (clean chunk latents, new cache).
+    """
+    tc = chunk_tokens(cfg)
+    ctx_k, ctx_v = visible_context(cfg, cache, fidelity.window)
+    q_offset = COND_TOKENS + cache["chunks"] * tc
+
+    grid = sigma_schedule(fidelity.steps)
+    x = noise
+    for i in range(fidelity.steps):
+        t = jnp.full((noise.shape[0],), float(grid[i]), jnp.float32)
+        v_pred, _ = chunk_forward(cfg, p, x, t, ctx_k, ctx_v,
+                                  q_offset=q_offset,
+                                  sparsity=fidelity.sparsity)
+        dt = float(grid[i] - grid[i + 1])
+        x = x - dt * v_pred.astype(x.dtype)     # Euler step toward data
+
+    # context KV for future chunks comes from a clean-context pass
+    t0 = jnp.zeros((noise.shape[0],), jnp.float32)
+    _, clean_kv = chunk_forward(cfg, p, x, t0, ctx_k, ctx_v,
+                                q_offset=q_offset)
+    if fidelity.quant == "fp8":
+        clean_kv = {k_: v_.astype(jnp.float8_e4m3fn)
+                    for k_, v_ in clean_kv.items()}
+    cache = append_chunk_kv(cfg, cache, clean_kv)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# training: causal-forcing style denoising over a chunk sequence
+# ---------------------------------------------------------------------------
+
+def train_loss(cfg: ModelConfig, p: Params,
+               batch: Dict[str, jax.Array]) -> jax.Array:
+    """Flow-matching loss over a sequence of chunks with causal context.
+
+    batch: latents [B, n_chunks, T_c, LATENT_CH], cond [B, 77, d_model],
+           t [B, n_chunks] denoise times, noise (same shape as latents).
+    Chunks are processed in a Python loop (static, growing context), the
+    exact teacher-forced analogue of ``serve_chunk``'s rolling window.
+    """
+    lat, cond = batch["latents"], batch["cond"]
+    t_all, noise = batch["t"], batch["noise"]
+    b, n_chunks, tc, _ = lat.shape
+    cache = init_cache(cfg, p, cond)
+    total = jnp.zeros((), jnp.float32)
+    for c in range(n_chunks):
+        x0, eps, t = lat[:, c], noise[:, c], t_all[:, c]
+        x_t = (1.0 - t[:, None, None]) * x0 + t[:, None, None] * eps
+        target = eps - x0                       # rectified-flow velocity
+        ctx_k, ctx_v = visible_context(cfg, cache, cfg.ardit_window_chunks)
+        q_offset = COND_TOKENS + c * chunk_tokens(cfg)
+        pred, _ = chunk_forward(cfg, p, x_t, t, ctx_k, ctx_v,
+                                q_offset=q_offset)
+        total = total + jnp.mean((pred.astype(jnp.float32)
+                                  - target.astype(jnp.float32)) ** 2)
+        # clean pass provides the causal context for the next chunk
+        _, clean_kv = chunk_forward(cfg, p, x0, jnp.zeros_like(t),
+                                    ctx_k, ctx_v, q_offset=q_offset)
+        cache = append_chunk_kv(cfg, cache, clean_kv)
+    return total / n_chunks

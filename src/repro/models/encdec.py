@@ -1,0 +1,234 @@
+"""Whisper-style encoder-decoder.
+
+Per the assignment the conv/mel frontend is a STUB: the encoder consumes
+precomputed frame embeddings [B, n_frontend_tokens, d_model].  The decoder
+is a causal transformer with cross-attention over encoder states; decode
+shapes exercise the decoder (self-attn KV cache of seq_len + precomputed
+cross-attn KV).  RoPE replaces Whisper's learned positional tables (noted
+in DESIGN.md SS3) so arbitrary assigned sequence lengths need no tables.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.logical import shard
+from repro.models import layers as L
+from repro.models.attention import decode_attention, mha
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_enc_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ks = L.split_keys(key, 2)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attn(cfg, ks[0], dtype),
+        "mlp": L.init_mlp(cfg, ks[1], dtype),
+    }
+
+
+def _init_dec_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ks = L.split_keys(key, 3)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "cross_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attn(cfg, ks[0], dtype),
+        "cross": L.init_attn(cfg, ks[1], dtype),
+        "mlp": L.init_mlp(cfg, ks[2], dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_enc, k_dec, k_head = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_dec_layers)
+    return {
+        "embed": L.dense_init(k_embed, (cfg.padded_vocab, cfg.d_model), dtype,
+                              scale=0.02),
+        "enc_layers": jax.vmap(
+            lambda k: _init_enc_layer(cfg, k, dtype))(enc_keys),
+        "dec_layers": jax.vmap(
+            lambda k: _init_dec_layer(cfg, k, dtype))(dec_keys),
+        "enc_final_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, p: Params, audio_embeds: jax.Array) -> jax.Array:
+    """audio_embeds [B, T_a, D] (stub frontend output) -> encoder states."""
+    h = shard(audio_embeds.astype(jnp.dtype(cfg.param_dtype)),
+              "batch", None, "embed")
+    positions = jnp.arange(h.shape[1])
+
+    def body(hh, lp):
+        a_in = L.rmsnorm(hh, lp["attn_norm"], cfg.norm_eps)
+        hh = hh + L.attn_block(cfg, lp["attn"], a_in, positions=positions,
+                               causal=False)
+        f_in = L.rmsnorm(hh, lp["mlp_norm"], cfg.norm_eps)
+        hh = hh + L.mlp_block(cfg, lp["mlp"], f_in)
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, p["enc_layers"])
+    return L.rmsnorm(h, p["enc_final_norm"], cfg.norm_eps)
+
+
+def _cross_kv(cfg: ModelConfig, lp: Params, enc: jax.Array):
+    """Precompute cross-attention K/V from encoder states (no RoPE)."""
+    b, t, _ = enc.shape
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (enc @ lp["wk"]).reshape(b, t, hkv, dh)
+    v = (enc @ lp["wv"]).reshape(b, t, hkv, dh)
+    if cfg.qkv_bias:
+        k = k + lp["bk"].reshape(hkv, dh)
+        v = v + lp["bv"].reshape(hkv, dh)
+    return k, v
+
+
+def _cross_attn(cfg: ModelConfig, lp: Params, x: jax.Array,
+                k: jax.Array, v: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    hq, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ lp["wq"]).reshape(b, s, hq, dh)
+    if cfg.qkv_bias:
+        q = q + lp["bq"].reshape(hq, dh)
+    o = mha(q, k, v, n_kv_heads=cfg.n_kv_heads, causal=False)
+    return o.reshape(b, s, hq * dh) @ lp["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decoder: train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _dec_layer(cfg: ModelConfig, lp: Params, h: jax.Array, *,
+               positions: jax.Array, cross_k, cross_v,
+               sparsity: float = 0.0, window: int = 0, sink: int = 0):
+    a_in = L.rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+    h = h + L.attn_block(cfg, lp["attn"], a_in, positions=positions,
+                         window=window, sink=sink, sparsity=sparsity)
+    c_in = L.rmsnorm(h, lp["cross_norm"], cfg.norm_eps)
+    h = h + _cross_attn(cfg, lp["cross"], c_in, cross_k, cross_v)
+    f_in = L.rmsnorm(h, lp["mlp_norm"], cfg.norm_eps)
+    return h + L.mlp_block(cfg, lp["mlp"], f_in)
+
+
+def forward(cfg: ModelConfig, p: Params, tokens: jax.Array,
+            audio_embeds: jax.Array, *, sparsity: float = 0.0,
+            remat: bool = False) -> jax.Array:
+    enc = encode(cfg, p, audio_embeds)
+    h = shard(jnp.take(p["embed"], tokens, axis=0), "batch", None, "embed")
+    positions = jnp.arange(h.shape[1])
+
+    def body(hh, lp):
+        ck, cv = _cross_kv(cfg, lp["cross"], enc)
+        return _dec_layer(cfg, lp, hh, positions=positions,
+                          cross_k=ck, cross_v=cv, sparsity=sparsity), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, p["dec_layers"])
+    return h
+
+
+def _unembed(cfg: ModelConfig, p: Params, h: jax.Array) -> jax.Array:
+    h = L.rmsnorm(h, p["final_norm"], cfg.norm_eps)
+    return shard(h @ p["lm_head"], "batch", None, "vocab")
+
+
+def train_loss(cfg: ModelConfig, p: Params,
+               batch: Dict[str, jax.Array]) -> jax.Array:
+    from repro.models.transformer import chunked_ce
+    h = forward(cfg, p, batch["tokens"], batch["audio_embeds"], remat=True)
+    return chunked_ce(
+        lambda hb: L.rmsnorm(hb, p["final_norm"], cfg.norm_eps) @ p["lm_head"],
+        h, batch["targets"], batch.get("loss_mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: Optional[int] = None) -> Dict[str, Any]:
+    enc_len = enc_len or cfg.n_frontend_tokens
+    kv_dtype = jnp.dtype(cfg.kv_dtype)
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((cfg.n_dec_layers, batch, max_len, hkv, dh), kv_dtype),
+        "v": jnp.zeros((cfg.n_dec_layers, batch, max_len, hkv, dh), kv_dtype),
+        "ck": jnp.zeros((cfg.n_dec_layers, batch, enc_len, hkv, dh), kv_dtype),
+        "cv": jnp.zeros((cfg.n_dec_layers, batch, enc_len, hkv, dh), kv_dtype),
+    }
+
+
+def prefill(cfg: ModelConfig, p: Params, tokens: jax.Array, *,
+            audio_embeds: jax.Array, max_len: Optional[int] = None,
+            sparsity: float = 0.0, **_):
+    """Returns (last logits [B,V], cache {self k/v, cross k/v}, len [B])."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    enc = encode(cfg, p, audio_embeds)
+    h = jnp.take(p["embed"], tokens, axis=0)
+    positions = jnp.arange(s)
+    kv_dtype = jnp.dtype(cfg.kv_dtype)
+
+    def body(hh, lp):
+        ck, cv = _cross_kv(cfg, lp["cross"], enc)
+        a_in = L.rmsnorm(hh, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(cfg, lp["attn"], a_in, positions)
+        o = mha(q, k, v, n_kv_heads=cfg.n_kv_heads, causal=True,
+                sparsity=sparsity)
+        hh = hh + o.reshape(b, s, -1) @ lp["attn"]["wo"]
+        c_in = L.rmsnorm(hh, lp["cross_norm"], cfg.norm_eps)
+        hh = hh + _cross_attn(cfg, lp["cross"], c_in, ck, cv)
+        f_in = L.rmsnorm(hh, lp["mlp_norm"], cfg.norm_eps)
+        hh = hh + L.mlp_block(cfg, lp["mlp"], f_in)
+        pad = max_len - s
+        k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(kv_dtype)
+        v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(kv_dtype)
+        return hh, {"k": shard(k_c, "batch", "seq_kv", "kv_heads", None),
+                    "v": shard(v_c, "batch", "seq_kv", "kv_heads", None),
+                    "ck": ck.astype(kv_dtype), "cv": cv.astype(kv_dtype)}
+
+    h, cache = jax.lax.scan(body, h, p["dec_layers"])
+    logits = _unembed(cfg, p, h[:, -1:])[:, 0]
+    return logits, cache, jnp.full((b,), s, jnp.int32)
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Dict[str, Any],
+                token: jax.Array, pos: jax.Array, **_):
+    """One decoder step.  token [B,1], pos [B].  Returns (logits, cache)."""
+    b = token.shape[0]
+    h = jnp.take(p["embed"], token, axis=0)
+    positions = pos[:, None]
+
+    def write(c, new):
+        return jax.vmap(lambda cb, nb, pb: jax.lax.dynamic_update_slice(
+            cb, nb.astype(cb.dtype), (pb, 0, 0)))(c, new, pos)
+
+    def body(hh, xs):
+        lp, pc = xs
+        a_in = L.rmsnorm(hh, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(cfg, lp["attn"], a_in, positions)
+        kc, vc = write(pc["k"], k), write(pc["v"], v)
+        o = decode_attention(q, kc, vc, n_kv_heads=cfg.n_kv_heads,
+                             cache_len=pos + 1)
+        hh = hh + o.reshape(b, 1, -1) @ lp["attn"]["wo"]
+        c_in = L.rmsnorm(hh, lp["cross_norm"], cfg.norm_eps)
+        hh = hh + _cross_attn(cfg, lp["cross"], c_in, pc["ck"], pc["cv"])
+        f_in = L.rmsnorm(hh, lp["mlp_norm"], cfg.norm_eps)
+        hh = hh + L.mlp_block(cfg, lp["mlp"], f_in)
+        return hh, {"k": kc, "v": vc, "ck": pc["ck"], "cv": pc["cv"]}
+
+    h, cache = jax.lax.scan(body, h, (p["dec_layers"], cache))
+    return _unembed(cfg, p, h)[:, 0], cache

@@ -1,0 +1,263 @@
+"""Jamba-style hybrid model: Mamba + attention interleave with MoE.
+
+Layer l is an attention layer iff ``l % attn_every == attn_every // 2``;
+the FFN is MoE iff ``l % moe_every == moe_every - 1`` (Jamba places MoE on
+every other layer).  Layers are grouped into *periods* of
+``lcm(attn_every, moe_every)`` sublayers; per-period params are stacked and
+consumed by ``lax.scan`` so HLO size is O(one period), not O(n_layers).
+
+Attention layers keep a bounded sink+window KV cache (ring buffer at decode
+time), so ``long_500k`` decode is sub-quadratic: the Mamba state carries
+long-range context, windowed attention covers local structure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.logical import shard
+from repro.models import kvcache
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.attention import decode_attention
+
+Params = Dict[str, Any]
+
+
+def period_len(cfg: ModelConfig) -> int:
+    return math.lcm(cfg.attn_every, cfg.moe_every or 1)
+
+
+def sublayer_kinds(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    """[(mixer, ffn)] per sublayer within one period."""
+    out = []
+    for j in range(period_len(cfg)):
+        mixer = "attn" if j % cfg.attn_every == cfg.attn_every // 2 else "mamba"
+        ffn = ("moe" if cfg.n_experts and
+               j % cfg.moe_every == cfg.moe_every - 1 else "mlp")
+        out.append((mixer, ffn))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_period(cfg: ModelConfig, key, dtype) -> Params:
+    kinds = sublayer_kinds(cfg)
+    ks = L.split_keys(key, 2 * len(kinds))
+    p: Params = {}
+    for j, (mixer, ffn) in enumerate(kinds):
+        sub: Params = {
+            "mixer_norm": jnp.ones((cfg.d_model,), dtype),
+            "ffn_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        if mixer == "attn":
+            sub["attn"] = L.init_attn(cfg, ks[2 * j], dtype)
+        else:
+            sub["mamba"] = S.init_mamba(cfg, ks[2 * j], dtype)
+        if ffn == "moe":
+            sub["moe"] = L.init_moe(cfg, ks[2 * j + 1], dtype)
+        else:
+            sub["mlp"] = L.init_mlp(cfg, ks[2 * j + 1], dtype)
+        p[f"sub{j}"] = sub
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    pl = period_len(cfg)
+    assert cfg.n_layers % pl == 0, (cfg.n_layers, pl)
+    n_periods = cfg.n_layers // pl
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    pkeys = jax.random.split(k_layers, n_periods)
+    stacked = jax.vmap(lambda k: init_period(cfg, k, dtype))(pkeys)
+    return {
+        "embed": L.dense_init(k_embed, (cfg.padded_vocab, cfg.d_model), dtype,
+                              scale=0.02),
+        "periods": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward / train
+# ---------------------------------------------------------------------------
+
+def _period_fwd(cfg: ModelConfig, pp: Params, h: jax.Array, *,
+                positions: jax.Array, sparsity: float = 0.0):
+    aux = jnp.zeros((), jnp.float32)
+    for j, (mixer, ffn) in enumerate(sublayer_kinds(cfg)):
+        sub = pp[f"sub{j}"]
+        x = L.rmsnorm(h, sub["mixer_norm"], cfg.norm_eps)
+        if mixer == "attn":
+            h = h + L.attn_block(cfg, sub["attn"], x, positions=positions,
+                                 window=cfg.attn_window, sink=cfg.attn_sink,
+                                 sparsity=sparsity)
+        else:
+            h = h + S.mamba_block(cfg, sub["mamba"], x)
+        f = L.rmsnorm(h, sub["ffn_norm"], cfg.norm_eps)
+        if ffn == "moe":
+            h = h + L.moe_block(cfg, sub["moe"], f)
+            aux = aux + L.moe_block.last_aux
+        else:
+            h = h + L.mlp_block(cfg, sub["mlp"], f)
+    return h, aux
+
+
+def forward(cfg: ModelConfig, p: Params, tokens: jax.Array, *,
+            sparsity: float = 0.0, remat: bool = False):
+    h = shard(jnp.take(p["embed"], tokens, axis=0), "batch", None, "embed")
+    positions = jnp.arange(h.shape[1])
+
+    def body(carry, pp):
+        hh, aux = carry
+        hh, a = _period_fwd(cfg, pp, hh, positions=positions,
+                            sparsity=sparsity)
+        return (hh, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (h, aux), _ = jax.lax.scan(body_fn, (h, jnp.zeros((), jnp.float32)),
+                               p["periods"])
+    return h, aux
+
+
+def _unembed(cfg: ModelConfig, p: Params, h: jax.Array) -> jax.Array:
+    h = L.rmsnorm(h, p["final_norm"], cfg.norm_eps)
+    return shard(h @ p["lm_head"], "batch", None, "vocab")
+
+
+def train_loss(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+               aux_weight: float = 0.01) -> jax.Array:
+    from repro.models.transformer import chunked_ce
+    h, aux = forward(cfg, p, batch["tokens"], remat=True)
+    loss = chunked_ce(
+        lambda hb: L.rmsnorm(hb, p["final_norm"], cfg.norm_eps) @ p["lm_head"],
+        h, batch["targets"], batch.get("loss_mask"))
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: windowed ring-buffer KV for attention sublayers + mamba states
+# ---------------------------------------------------------------------------
+
+def cache_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    return kvcache.capacity(seq_len, cfg.attn_window, cfg.attn_sink)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    pl = period_len(cfg)
+    n_periods = cfg.n_layers // pl
+    kinds = sublayer_kinds(cfg)
+    cap = cache_capacity(cfg, max_len)
+    kv_dtype = jnp.dtype(cfg.kv_dtype)
+    di, h, hd, n = S.dims(cfg)
+    conv_ch = di + 2 * S.N_GROUPS * cfg.ssm_state
+    cache: Dict[str, Any] = {}
+    for j, (mixer, _) in enumerate(kinds):
+        if mixer == "attn":
+            shp = (n_periods, batch, cap, cfg.n_kv_heads, cfg.head_dim)
+            cache[f"sub{j}"] = {"k": jnp.zeros(shp, kv_dtype),
+                                "v": jnp.zeros(shp, kv_dtype)}
+        else:
+            cache[f"sub{j}"] = {
+                "conv": jnp.zeros((n_periods, batch, cfg.ssm_conv - 1,
+                                   conv_ch), jnp.dtype(cfg.param_dtype)),
+                "ssm": jnp.zeros((n_periods, batch, h, hd, n), jnp.float32),
+            }
+    return cache
+
+
+def prefill(cfg: ModelConfig, p: Params, tokens: jax.Array, *,
+            max_len: Optional[int] = None, sparsity: float = 0.0, **_):
+    """Returns (last-position logits, cache, cache_len [B])."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    cap = cache_capacity(cfg, max_len)
+    sink, window = cfg.attn_sink, cfg.attn_window
+    positions = jnp.arange(s)
+    kv_dtype = jnp.dtype(cfg.kv_dtype)
+    h = jnp.take(p["embed"], tokens, axis=0)
+
+    def place_kv(k):                       # [B,S,H,D] -> [B,cap,H,D]
+        return kvcache.place_prefill(k, cap, sink, window)
+
+    def body(hh, pp):
+        sub_cache = {}
+        for j, (mixer, ffn) in enumerate(sublayer_kinds(cfg)):
+            sub = pp[f"sub{j}"]
+            x = L.rmsnorm(hh, sub["mixer_norm"], cfg.norm_eps)
+            if mixer == "attn":
+                q, k, v = L.attn_qkv(cfg, sub["attn"], x, positions)
+                from repro.models.attention import mha
+                o = mha(q, k, v, n_kv_heads=cfg.n_kv_heads, causal=True,
+                        window=window, sink=sink, sparsity=sparsity)
+                o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+                hh = hh + o @ sub["attn"]["wo"]
+                sub_cache[f"sub{j}"] = {
+                    "k": place_kv(k).astype(kv_dtype),
+                    "v": place_kv(v).astype(kv_dtype)}
+            else:
+                out, (conv_s, ssm_s) = S.mamba_block(
+                    cfg, sub["mamba"], x, return_state=True)
+                hh = hh + out
+                sub_cache[f"sub{j}"] = {"conv": conv_s, "ssm": ssm_s}
+            f = L.rmsnorm(hh, sub["ffn_norm"], cfg.norm_eps)
+            if ffn == "moe":
+                hh = hh + L.moe_block(cfg, sub["moe"], f)
+            else:
+                hh = hh + L.mlp_block(cfg, sub["mlp"], f)
+        return hh, sub_cache
+
+    h, cache = jax.lax.scan(body, h, p["periods"])
+    logits = _unembed(cfg, p, h[:, -1:])[:, 0]
+    return logits, cache, jnp.full((b,), s, jnp.int32)
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Dict[str, Any],
+                token: jax.Array, pos: jax.Array, **_):
+    """One decode step with ring-buffer windowed attention caches."""
+    b = token.shape[0]
+    sink, window = cfg.attn_sink, cfg.attn_window
+    h = jnp.take(p["embed"], token, axis=0)
+    positions = pos[:, None]
+
+    def body(hh, xs):
+        pp, pc = xs
+        new_cache = {}
+        for j, (mixer, ffn) in enumerate(sublayer_kinds(cfg)):
+            sub, subc = pp[f"sub{j}"], pc[f"sub{j}"]
+            x = L.rmsnorm(hh, sub["mixer_norm"], cfg.norm_eps)
+            if mixer == "attn":
+                q, k, v = L.attn_qkv(cfg, sub["attn"], x, positions)
+                cap = subc["k"].shape[1]
+                ring_mode = bool(window) and cap == sink + window
+                dest = kvcache.ring_dest(pos, cap, sink) if ring_mode else pos
+                kc = kvcache.write_token(subc["k"], k, dest)
+                vc = kvcache.write_token(subc["v"], v, dest)
+                o = decode_attention(q, kc, vc, n_kv_heads=cfg.n_kv_heads,
+                                     cache_len=kvcache.n_valid(pos, cap),
+                                     window=0 if ring_mode else window,
+                                     sink=sink)
+                o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+                hh = hh + o @ sub["attn"]["wo"]
+                new_cache[f"sub{j}"] = {"k": kc, "v": vc}
+            else:
+                out, (c2, s2) = S.mamba_decode(cfg, sub["mamba"], x,
+                                               subc["conv"], subc["ssm"])
+                hh = hh + out
+                new_cache[f"sub{j}"] = {"conv": c2, "ssm": s2}
+            f = L.rmsnorm(hh, sub["ffn_norm"], cfg.norm_eps)
+            if ffn == "moe":
+                hh = hh + L.moe_block(cfg, sub["moe"], f)
+            else:
+                hh = hh + L.mlp_block(cfg, sub["mlp"], f)
+        return hh, new_cache
+
+    h, cache = jax.lax.scan(body, h, (p["periods"], cache))
+    return _unembed(cfg, p, h)[:, 0], cache

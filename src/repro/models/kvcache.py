@@ -1,0 +1,65 @@
+"""Sink + ring-buffer KV cache helpers (paper SS2.1 "sink+local").
+
+Layout: slots [0, sink) hold the attention sink; slots [sink, cap) are a
+ring over the sliding window.  When ``cap >= seq_len`` the ring degenerates
+to a plain linear cache (dest == pos), so the same code serves both the
+full-cache and the windowed-adaptation paths.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def capacity(seq_len: int, window: int, sink: int) -> int:
+    """Cache capacity in tokens for a stream of ``seq_len``."""
+    if window:
+        return min(seq_len, sink + window)
+    return seq_len
+
+
+def ring_dest(pos: jax.Array, cap: int, sink: int) -> jax.Array:
+    """Write slot for absolute position ``pos`` (per-batch array ok)."""
+    ring = cap - sink
+    wrapped = sink + (pos - sink) % jnp.maximum(ring, 1)
+    return jnp.where(pos < cap, jnp.minimum(pos, cap - 1),
+                     wrapped).astype(jnp.int32)
+
+
+def write_token(cache: jax.Array, new: jax.Array,
+                dest: jax.Array) -> jax.Array:
+    """cache [B,cap,H,D]; new [B,1,H,D]; dest [B] -> updated cache."""
+    return jax.vmap(lambda cb, nb, db: jax.lax.dynamic_update_slice(
+        cb, nb.astype(cb.dtype), (db, 0, 0)))(cache, new, dest)
+
+
+def n_valid(pos: jax.Array, cap: int) -> jax.Array:
+    """Number of resident (valid) cache entries after writing ``pos``."""
+    return jnp.minimum(pos + 1, cap)
+
+
+def place_prefill(k: jax.Array, cap: int, sink: int,
+                  window: int) -> jax.Array:
+    """[B,S,H,D] -> [B,cap,H,D]: full copy if it fits, else sink+ring gather.
+
+    Ring slot r holds the LAST token t < S with (t - sink) % ring == r.
+    Gather (not scatter) so duplicate ring slots resolve deterministically.
+    """
+    b, s = k.shape[:2]
+    if cap >= s:
+        return jnp.pad(k, ((0, 0), (0, cap - s)) + ((0, 0),) * (k.ndim - 2))
+    assert window > 0, (
+        f"cache capacity {cap} < sequence {s} without a sliding window "
+        f"— caller must size max_len to the full prefill length")
+    ring = cap - sink
+    slots = jnp.arange(cap)
+    r = slots - sink
+    ring_tok = sink + r + ((s - 1 - sink - r) // ring) * ring
+    tok_idx = jnp.where(slots < sink, slots, ring_tok)
+    valid = (tok_idx >= 0) & (tok_idx < s)
+    tok_idx = jnp.clip(tok_idx, 0, s - 1)
+    out = k[:, tok_idx]
+    shape = (1, cap) + (1,) * (k.ndim - 2)
+    return out * valid.reshape(shape).astype(k.dtype)

@@ -1,0 +1,288 @@
+"""Shared layer substrate: norms, RoPE, MLP, MoE, attention blocks.
+
+Pure-functional: params are nested dicts of arrays; every apply fn takes the
+config + params explicitly.  Stacked-layer params (leading L axis) are
+consumed via ``lax.scan`` by the model drivers for O(1-layer) compile time.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.logical import shard
+from repro.models import attention as attn_lib
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B,S,H,D]; positions: [S] or [B,S] (absolute)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs  # [1,S,half]
+    else:
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs     # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg: ModelConfig, key, dtype) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * dh), dtype),
+        "wk": dense_init(ks[1], (d, hkv * dh), dtype),
+        "wv": dense_init(ks[2], (d, hkv * dh), dtype),
+        "wo": dense_init(ks[3], (hq * dh, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def attn_qkv(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array):
+    """Project + RoPE.  Returns q [B,S,Hq,Dh], k,v [B,S,Hkv,Dh]."""
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    q = shard(rope(q, positions, cfg.rope_theta), "batch", None, "heads", None)
+    k = shard(rope(k, positions, cfg.rope_theta), "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def attn_block(cfg: ModelConfig, p: Params, x: jax.Array, *,
+               positions: jax.Array, q_offset: int = 0,
+               window: int = 0, sink: int = 0, sparsity: float = 0.0,
+               kv_override=None, causal: bool = True,
+               block_q: int = 512, block_kv: int = 512) -> jax.Array:
+    """Self-attention (or cross-attention via kv_override=(k,v))."""
+    b, s, _ = x.shape
+    q, k, v = attn_qkv(cfg, p, x, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    o = attn_lib.mha(q, k, v, n_kv_heads=cfg.n_kv_heads, causal=causal,
+                     q_offset=q_offset, window=window, sink=sink,
+                     sparsity=sparsity, block_q=block_q, block_kv=block_kv)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return shard(o @ p["wo"], "batch", "seq_sp", "embed")
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    if cfg.act == "swiglu":
+        return {"w_gate": dense_init(ks[0], (d, f), dtype),
+                "w_up": dense_init(ks[1], (d, f), dtype),
+                "w_down": dense_init(ks[2], (f, d), dtype)}
+    return {"wi": dense_init(ks[0], (d, f), dtype),
+            "wo": dense_init(ks[1], (f, d), dtype)}
+
+
+def mlp_block(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = shard(h, "batch", None, "ff")
+        return shard(h @ p["w_down"], "batch", "seq_sp", "embed")
+    h = jax.nn.gelu(x @ p["wi"])
+    h = shard(h, "batch", None, "ff")
+    return shard(h @ p["wo"], "batch", "seq_sp", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-based grouped dispatch; expert-TP sharding by default)
+# ---------------------------------------------------------------------------
+
+def _slot_maps(e: int, cap: int, s: int, a_e, slot, a_t, w):
+    """Per-slot inverse maps: token index and weight of each (e, c) slot
+    (out-of-capacity assignments land on row ``s`` -> dropped)."""
+    def one(eg, sg, tg, wg):
+        tok_of = jnp.full((e, cap), s, jnp.int32)
+        tok_of = tok_of.at[eg, sg].set(tg.astype(jnp.int32), mode="drop")
+        w_of = jnp.zeros((e, cap), jnp.float32)
+        w_of = w_of.at[eg, sg].set(wg.astype(jnp.float32), mode="drop")
+        return tok_of, w_of
+    return jax.vmap(one)(a_e, slot, a_t, w)
+
+
+def _slot_scatter_to_tokens(s: int, buf, tok_of, w_of):
+    """Scatter-add expert-slot values back to token space: [B,E,C,D] ->
+    [B,S,D].  Under EP (buf expert-sharded) GSPMD reduces a per-TOKEN
+    partial — k-times less traffic than gathering per assignment."""
+    e, cap, d = buf.shape[1], buf.shape[2], buf.shape[3]
+
+    def one(ob, tokb, wb):
+        vals = ob.reshape(e * cap, d) * wb.reshape(-1, 1).astype(ob.dtype)
+        y = jnp.zeros((s, d), ob.dtype)
+        return y.at[tokb.reshape(-1)].add(vals, mode="drop")
+    return jax.vmap(one)(buf, tok_of, w_of)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _moe_dispatch(e: int, cap: int, s: int, x, a_e, slot, a_t, keep):
+    """Token->slot dispatch [B,S,D] -> [B,E,C,D] with a TOKEN-granular
+    backward: autodiff of the forward scatter would gather the buffer
+    cotangent per ASSIGNMENT ([B,S*k,D] through the EP all-reduce); the
+    custom bwd scatter-adds per SLOT instead ([B,S,D]).  Capacity masks
+    and routing indices are stop-gradient (standard for top-k MoE)."""
+    def one(xg, eg, sg, tg, kg):
+        buf = jnp.zeros((e, cap) + xg.shape[-1:], xg.dtype)
+        vals = xg[tg] * kg[:, None]
+        return buf.at[eg, jnp.clip(sg, 0, cap - 1)].add(vals, mode="drop")
+    return jax.vmap(one)(x, a_e, slot, a_t, keep)
+
+
+def _moe_dispatch_fwd(e, cap, s, x, a_e, slot, a_t, keep):
+    buf = _moe_dispatch(e, cap, s, x, a_e, slot, a_t, keep)
+    tok_of, keep_of = _slot_maps(e, cap, s, a_e, slot, a_t, keep)
+    return buf, (tok_of, keep_of, a_e, keep)
+
+
+def _moe_dispatch_bwd(e, cap, s, res, g):
+    import numpy as _np
+    tok_of, keep_of, a_e, keep = res
+    dx = _slot_scatter_to_tokens(s, g, tok_of, keep_of).astype(keep.dtype)
+    zint = _np.zeros(a_e.shape, jax.dtypes.float0)
+    return (dx, zint, zint, zint, jnp.zeros(keep.shape, keep.dtype))
+
+
+_moe_dispatch.defvjp(_moe_dispatch_fwd, _moe_dispatch_bwd)
+
+def init_moe(cfg: ModelConfig, key, dtype) -> Params:
+    d, fe, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = split_keys(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "we_gate": dense_init(ks[1], (e, d, fe), dtype),
+        "we_up": dense_init(ks[2], (e, d, fe), dtype),
+        "we_down": dense_init(ks[3], (e, fe, d), dtype),
+    }
+
+
+def moe_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    return max(1, int(math.ceil(
+        tokens_per_group * cfg.top_k / cfg.n_experts * cfg.capacity_factor)))
+
+
+def moe_block(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Token-choice top-k MoE with per-sequence grouping.
+
+    x: [B,S,D].  Dispatch is a within-group scatter (local under batch=data
+    sharding); expert FFN hidden dim is sharded over "model" (expert-TP).
+    Returns [B,S,D] plus stores aux loss in ``moe_block.last_aux``.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(s, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                   # [B,S,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                          # [E]
+    ce = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=(0, 1, 2))
+    moe_block.last_aux = e * jnp.sum(me * ce)
+
+    # ---- dispatch ---------------------------------------------------------
+    a_e = idx.reshape(b, s * k)                                # expert of asgn
+    a_g = gate_vals.reshape(b, s * k)
+    a_t = jnp.broadcast_to(jnp.repeat(jnp.arange(s), k)[None, :],
+                           (b, s * k))                         # token of asgn
+    oh = jax.nn.one_hot(a_e, e, dtype=jnp.int32)               # [B,S*k,E]
+    slot = jnp.take_along_axis(jnp.cumsum(oh, axis=1) - 1,
+                               a_e[..., None], axis=-1)[..., 0]
+    keep = (slot < cap).astype(x.dtype)                        # capacity drop
+
+    buf = _moe_dispatch(e, cap, s, x, a_e, slot, a_t, keep)    # [B,E,C,D]
+    tok_of, gate_of = _slot_maps(e, cap, s, a_e, slot, a_t,
+                                 a_g * keep.astype(a_g.dtype))
+    # expert-TP (default): dispatch buffer replicated over "model", the
+    # expert hidden dim sharded.  EP (cfg.moe_ep): the EXPERT dim sharded
+    # over "model" — GSPMD emits the all-to-all dispatch/return.
+    buf = shard(buf, "batch", "experts", None, None)
+
+    # ---- expert FFN ---------------------------------------------------------
+    hg = jnp.einsum("becd,edf->becf", buf, p["we_gate"])
+    hu = jnp.einsum("becd,edf->becf", buf, p["we_up"])
+    h = shard(jax.nn.silu(hg) * hu, "batch", "experts", None, "expert_ff")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["we_down"])
+    out_buf = shard(out_buf, "batch", "experts", None, "embed")
+
+    # ---- combine: scatter-add from expert slots back to tokens -------------
+    # (gathering per-ASSIGNMENT would move [B, S*k, D] through the EP
+    #  all-reduce; scattering per-SLOT moves only [B, S, D] — the return
+    #  path is per-token, k-times smaller)
+    y = _slot_scatter_to_tokens(s, out_buf, tok_of, gate_of)
+    return shard(y, "batch", "seq_sp", "embed")
+
+
+moe_block.last_aux = 0.0
+
+
+def ffn_block(cfg: ModelConfig, p: Params, x: jax.Array,
+              use_moe: bool) -> jax.Array:
+    return moe_block(cfg, p, x) if use_moe else mlp_block(cfg, p, x)

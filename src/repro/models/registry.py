@@ -1,0 +1,126 @@
+"""Uniform model API: family -> (init, loss, prefill, decode, cache) plus
+``input_specs`` / ``cache_specs`` ShapeDtypeStruct stand-ins for the
+multi-pod dry-run (weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+Sds = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable                    # (cfg, key) -> params
+    loss: Callable                    # (cfg, params, batch) -> scalar
+    prefill: Optional[Callable]       # (cfg, params, tokens, **kw)
+    decode_step: Optional[Callable]   # (cfg, params, cache, token, pos)
+    init_cache: Optional[Callable]    # (cfg, batch, max_len) -> cache
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models import transformer as M
+        return ModelAPI(M.init_params, M.train_loss, M.prefill,
+                        M.decode_step, M.init_cache)
+    if fam == "ssm":
+        from repro.models import ssm as M
+        return ModelAPI(M.init_params, M.train_loss, M.prefill,
+                        M.decode_step,
+                        lambda cfg, b, _ml: M.init_state(cfg, b))
+    if fam == "hybrid":
+        from repro.models import hybrid as M
+        return ModelAPI(M.init_params, M.train_loss, M.prefill,
+                        M.decode_step, M.init_cache)
+    if fam == "encdec":
+        from repro.models import encdec as M
+        return ModelAPI(M.init_params, M.train_loss, M.prefill,
+                        M.decode_step, M.init_cache)
+    if fam == "ardit":
+        from repro.models import ardit as M
+        return ModelAPI(M.init_params, M.train_loss, None, None, None)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def init_fn(cfg: ModelConfig) -> Callable:
+    api = get_api(cfg)
+    return lambda key: api.init(cfg, key)
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct, no allocation)
+# ---------------------------------------------------------------------------
+
+def _embed_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch stand-ins for the given shape cell.
+
+    train:   the full train batch (tokens/targets or latents for AR-DiT).
+    prefill: {tokens [B,S]} (+ frontend stubs).
+    decode:  {token [B,1], pos [B]} — the cache comes from ``cache_specs``.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "ardit":
+        from repro.models import ardit as A
+        tc = A.chunk_tokens(cfg)
+        n_chunks = max(1, s // tc)
+        return {
+            "latents": Sds((b, n_chunks, tc, A.LATENT_CH), _embed_dtype(cfg)),
+            "cond": Sds((b, A.COND_TOKENS, cfg.d_model), _embed_dtype(cfg)),
+            "t": Sds((b, n_chunks), jnp.float32),
+            "noise": Sds((b, n_chunks, tc, A.LATENT_CH), _embed_dtype(cfg)),
+        }
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {"tokens": None, "targets": None}
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_frontend_tokens
+            batch = {"tokens": Sds((b, s_text), i32),
+                     "targets": Sds((b, s_text), i32),
+                     "img_embeds": Sds((b, cfg.n_frontend_tokens,
+                                        cfg.d_model), _embed_dtype(cfg))}
+        elif cfg.family == "encdec":
+            batch = {"tokens": Sds((b, s), i32),
+                     "targets": Sds((b, s), i32),
+                     "audio_embeds": Sds((b, cfg.n_frontend_tokens,
+                                          cfg.d_model), _embed_dtype(cfg))}
+        else:
+            batch = {"tokens": Sds((b, s), i32), "targets": Sds((b, s), i32)}
+        return batch
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_frontend_tokens
+            return {"tokens": Sds((b, s_text), i32),
+                    "img_embeds": Sds((b, cfg.n_frontend_tokens,
+                                       cfg.d_model), _embed_dtype(cfg))}
+        if cfg.family == "encdec":
+            return {"tokens": Sds((b, s), i32),
+                    "audio_embeds": Sds((b, cfg.n_frontend_tokens,
+                                         cfg.d_model), _embed_dtype(cfg))}
+        return {"tokens": Sds((b, s), i32)}
+    # decode: one new token against a cache of seq_len
+    return {"token": Sds((b, 1), i32), "pos": Sds((b,), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """ShapeDtypeStruct pytree of the decode cache for the shape cell."""
+    api = get_api(cfg)
+    assert api.init_cache is not None, cfg.name
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(lambda: get_api(cfg).init(
+        cfg, jax.random.PRNGKey(0)))

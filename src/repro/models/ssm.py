@@ -1,0 +1,247 @@
+"""Mamba-2 (SSD) model substrate: block init/apply, full model with
+train / prefill / decode paths.  Attention-free; per-token decode is O(1)
+state update, so ``long_500k`` runs natively (DESIGN.md SS4).
+
+Block layout follows Mamba-2 (arXiv:2405.21060): separate projections per
+component (z, x, B, C, dt) so tensor-parallel sharding never splits a
+projection across semantic boundaries; depthwise causal conv over (x,B,C);
+SSD scan; gated RMSNorm; out projection.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.logical import shard
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+N_GROUPS = 1
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, n_ssm_heads, head_dim, state)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    assert d_inner % hd == 0, (d_inner, hd)
+    return d_inner, d_inner // hd, hd, cfg.ssm_state
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def init_mamba(cfg: ModelConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    di, h, hd, n = dims(cfg)
+    g = N_GROUPS
+    ks = L.split_keys(key, 7)
+    # dt bias: init so softplus(dt_bias) spans [1e-3, 1e-1] (Mamba-2 default)
+    u = jax.random.uniform(ks[5], (h,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))       # inv softplus
+    conv_ch = di + 2 * g * n
+    return {
+        "wz": L.dense_init(ks[0], (d, di), dtype),
+        "wx": L.dense_init(ks[1], (d, di), dtype),
+        "wB": L.dense_init(ks[2], (d, g * n), dtype),
+        "wC": L.dense_init(ks[3], (d, g * n), dtype),
+        "wdt": L.dense_init(ks[4], (d, h), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_w": L.dense_init(ks[6], (conv_ch, cfg.ssm_conv), dtype,
+                               scale=1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "norm_w": jnp.ones((di,), dtype),
+        "out": L.dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv.  x [B,S,C], w [C,K], prev [B,K-1,C] or None."""
+    k = w.shape[1]
+    if prev is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[None, None, :, i].astype(jnp.float32)
+              for i in range(k))
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, w: jax.Array,
+                eps: float) -> jax.Array:
+    return L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                     w, eps)
+
+
+def mamba_block(cfg: ModelConfig, p: Params, x: jax.Array, *,
+                conv_state: Optional[jax.Array] = None,
+                ssm_state: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """Full-sequence Mamba-2 block.  x [B,S,D] -> [B,S,D].
+
+    With ``return_state``, also returns (conv_state [B,K-1,C],
+    ssm_state [B,H,P,N]) after the last position.
+    """
+    b, s, _ = x.shape
+    di, h, hd, n = dims(cfg)
+    g = N_GROUPS
+    z = shard(x @ p["wz"], "batch", None, "inner")
+    xi = shard(x @ p["wx"], "batch", None, "inner")
+    Bp = x @ p["wB"]
+    Cp = x @ p["wC"]
+    dt = jax.nn.softplus(
+        (x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])    # [B,S,H]
+
+    xbc = jnp.concatenate([xi, Bp, Cp], axis=-1)
+    new_conv_state = xbc[:, -(cfg.ssm_conv - 1):, :] if return_state else None
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xi, Bp, Cp = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(b, s, h, hd)
+    y, final_state = ssd_ops.ssd(
+        xh, dt, A, Bp.reshape(b, s, g, n), Cp.reshape(b, s, g, n),
+        chunk=cfg.ssm_chunk, init_state=ssm_state)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = _gated_norm(y.reshape(b, s, di), z, p["norm_w"], cfg.norm_eps)
+    out = shard(y @ p["out"], "batch", None, "embed")
+    if return_state:
+        return out, (new_conv_state, final_state)
+    return out
+
+
+def mamba_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                 conv_state: jax.Array, ssm_state: jax.Array):
+    """One-token step.  x [B,1,D]; states as produced by mamba_block.
+
+    Returns (out [B,1,D], (conv_state, ssm_state)).
+    """
+    b = x.shape[0]
+    di, h, hd, n = dims(cfg)
+    g = N_GROUPS
+    z = x @ p["wz"]
+    xi = x @ p["wx"]
+    Bp = x @ p["wB"]
+    Cp = x @ p["wC"]
+    dt = jax.nn.softplus(
+        (x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+
+    xbc = jnp.concatenate([xi, Bp, Cp], axis=-1)                  # [B,1,C]
+    window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    new_conv_state = window[:, 1:]
+    out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(out + p["conv_b"].astype(jnp.float32))
+    xbc = xbc.astype(x.dtype)[:, None, :]
+    xi, Bp, Cp = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ssd_ops.ssd_decode(
+        xi.reshape(b, h, hd), dt, A,
+        Bp.reshape(b, g, n), Cp.reshape(b, g, n), ssm_state)
+    y = y + xi.reshape(b, h, hd) * p["D"].astype(y.dtype)[None, :, None]
+    y = _gated_norm(y.reshape(b, 1, di), z, p["norm_w"], cfg.norm_eps)
+    return y @ p["out"], (new_conv_state, new_ssm)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def init_layer(cfg: ModelConfig, key, dtype) -> Params:
+    return {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "mamba": init_mamba(cfg, key, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(cfg, k, dtype))(layer_keys)
+    return {
+        "embed": L.dense_init(k_embed, (cfg.padded_vocab, cfg.d_model), dtype,
+                              scale=0.02),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def forward(cfg: ModelConfig, p: Params, tokens: jax.Array, *,
+            remat: bool = False) -> jax.Array:
+    h = shard(jnp.take(p["embed"], tokens, axis=0), "batch", None, "embed")
+
+    def body(hh, lp):
+        x = L.rmsnorm(hh, lp["norm"], cfg.norm_eps)
+        return hh + mamba_block(cfg, lp["mamba"], x), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, p["layers"])
+    return h
+
+
+def _unembed(cfg: ModelConfig, p: Params, h: jax.Array) -> jax.Array:
+    h = L.rmsnorm(h, p["final_norm"], cfg.norm_eps)
+    return shard(h @ p["embed"].T, "batch", None, "vocab")
+
+
+def train_loss(cfg: ModelConfig, p: Params,
+               batch: Dict[str, jax.Array]) -> jax.Array:
+    from repro.models.transformer import chunked_ce
+    h = forward(cfg, p, batch["tokens"], remat=True)
+    return chunked_ce(
+        lambda hb: L.rmsnorm(hb, p["final_norm"], cfg.norm_eps) @ p["embed"].T,
+        h, batch["targets"], batch.get("loss_mask"))
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    di, h, hd, n = dims(cfg)
+    conv_ch = di + 2 * N_GROUPS * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch),
+                          jnp.dtype(cfg.param_dtype)),
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, hd, n), jnp.float32),
+    }
+
+
+def prefill(cfg: ModelConfig, p: Params, tokens: jax.Array, **_):
+    """Returns (last-position logits [B,V], state, cache_len [B])."""
+    b, s = tokens.shape
+    h = jnp.take(p["embed"], tokens, axis=0)
+
+    def body(hh, lp):
+        x = L.rmsnorm(hh, lp["norm"], cfg.norm_eps)
+        out, (conv_s, ssm_s) = mamba_block(cfg, lp["mamba"], x,
+                                           return_state=True)
+        return hh + out, {"conv": conv_s, "ssm": ssm_s}
+
+    h, state = jax.lax.scan(body, h, p["layers"])
+    logits = _unembed(cfg, p, h[:, -1:])[:, 0]
+    return logits, state, jnp.full((b,), s, jnp.int32)
+
+
+def decode_step(cfg: ModelConfig, p: Params, state: Dict[str, jax.Array],
+                token: jax.Array, pos: jax.Array, **_):
+    """One decode step.  token [B,1].  Returns (logits [B,V], state)."""
+    h = jnp.take(p["embed"], token, axis=0)
+
+    def body(hh, xs):
+        lp, conv_s, ssm_s = xs
+        x = L.rmsnorm(hh, lp["norm"], cfg.norm_eps)
+        out, (c2, s2) = mamba_decode(cfg, lp["mamba"], x, conv_s, ssm_s)
+        return hh + out, {"conv": c2, "ssm": s2}
+
+    h, state = jax.lax.scan(body, h, (p["layers"], state["conv"],
+                                      state["ssm"]))
+    return _unembed(cfg, p, h)[:, 0], state

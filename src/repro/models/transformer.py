@@ -1,0 +1,257 @@
+"""Dense / MoE / VLM decoder-only transformer with train, prefill and
+decode paths.  Layers are scanned (stacked params, O(1-layer) HLO).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.logical import shard
+from repro.models import kvcache
+from repro.models import layers as L
+from repro.models.attention import decode_attention
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ks = L.split_keys(key, 4)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attn(cfg, ks[0], dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = L.init_moe(cfg, ks[1], dtype)
+    else:
+        p["mlp"] = L.init_mlp(cfg, ks[2], dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(cfg, k, dtype))(layer_keys)
+    p: Params = {
+        "embed": L.dense_init(k_embed, (cfg.padded_vocab, cfg.d_model), dtype,
+                              scale=0.02),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab),
+                                    dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, p: Params, tokens: jax.Array,
+           img_embeds: Optional[jax.Array]) -> jax.Array:
+    h = jnp.take(p["embed"], tokens, axis=0)
+    if img_embeds is not None:                       # VLM: prepend patch stub
+        h = jnp.concatenate([img_embeds.astype(h.dtype), h], axis=1)
+    return shard(h, "batch", "seq_sp", "embed")
+
+
+def _unembed(cfg: ModelConfig, p: Params, h: jax.Array) -> jax.Array:
+    h = L.rmsnorm(h, p["final_norm"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return shard(h @ w, "batch", None, "vocab")
+
+
+def _layer_fwd(cfg: ModelConfig, lp: Params, h: jax.Array, *,
+               positions: jax.Array, q_offset: int = 0,
+               window: int = 0, sink: int = 0, sparsity: float = 0.0,
+               block_q: int = 512) -> Tuple[jax.Array, jax.Array]:
+    a_in = L.rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+    h = h + L.attn_block(cfg, lp["attn"], a_in, positions=positions,
+                         q_offset=q_offset, window=window, sink=sink,
+                         sparsity=sparsity, block_q=block_q)
+    f_in = L.rmsnorm(h, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.n_experts:
+        h = h + L.moe_block(cfg, lp["moe"], f_in)
+        aux = L.moe_block.last_aux
+    else:
+        h = h + L.mlp_block(cfg, lp["mlp"], f_in)
+        aux = jnp.zeros((), jnp.float32)
+    return h, aux
+
+
+def forward(cfg: ModelConfig, p: Params, tokens: jax.Array, *,
+            img_embeds: Optional[jax.Array] = None,
+            window: int = 0, sink: int = 0, sparsity: float = 0.0,
+            remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (hidden [B,S,D], moe_aux scalar)."""
+    h = _embed(cfg, p, tokens, img_embeds)
+    positions = jnp.arange(h.shape[1])
+    window = window or cfg.attn_window
+    sink = sink or cfg.attn_sink
+
+    def body(carry, lp):
+        hh, aux = carry
+        hh, a = _layer_fwd(cfg, lp, hh, positions=positions, window=window,
+                           sink=sink, sparsity=sparsity)
+        if cfg.bf16_backward:
+            from repro.distributed.precision import bf16_cotangent
+            hh = bf16_cotangent(hh)
+        return (hh, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (h, aux), _ = jax.lax.scan(body_fn, (h, jnp.zeros((), jnp.float32)),
+                               p["layers"])
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def chunked_ce(logits_fn, h: jax.Array, targets: jax.Array,
+               mask: Optional[jax.Array], block: int = 1024) -> jax.Array:
+    """Cross-entropy computed in S-blocks to bound the logits working set."""
+    b, s, _ = h.shape
+    block = min(block, s)
+    n = s // block
+    rem = s - n * block
+
+    def ce_block(h_blk, t_blk, m_blk):
+        logits = logits_fn(h_blk).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_blk[..., None], axis=-1)[..., 0]
+        losses = (lse - gold) * m_blk
+        return jnp.sum(losses), jnp.sum(m_blk)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        s_, c_ = ce_block(*xs)
+        return (tot + s_, cnt + c_), None
+
+    hb = h[:, :n * block].reshape(b, n, block, -1).swapaxes(0, 1)
+    tb = targets[:, :n * block].reshape(b, n, block).swapaxes(0, 1)
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    mb = mask[:, :n * block].reshape(b, n, block).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hb, tb, mb))
+    if rem:
+        s_, c_ = ce_block(h[:, n * block:], targets[:, n * block:],
+                          mask[:, n * block:])
+        tot, cnt = tot + s_, cnt + c_
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(cfg: ModelConfig, p: Params, batch: Dict[str, jax.Array],
+               aux_weight: float = 0.01) -> jax.Array:
+    img = batch.get("img_embeds")
+    h, aux = forward(cfg, p, batch["tokens"], img_embeds=img, remat=True)
+    if img is not None:                 # loss only on text positions
+        h = h[:, img.shape[1]:]
+    w = (lambda x: x @ (p["embed"].T if cfg.tie_embeddings else p["lm_head"]))
+    loss = chunked_ce(lambda hb: w(L.rmsnorm(hb, p["final_norm"],
+                                             cfg.norm_eps)),
+                      h, batch["targets"], batch.get("loss_mask"))
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    cap = kvcache.capacity(max_len, cfg.attn_window, cfg.attn_sink)
+    kv_dtype = jnp.dtype(cfg.kv_dtype)
+    shp = (cfg.n_layers, batch, cap, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shp, kv_dtype), "v": jnp.zeros(shp, kv_dtype)}
+
+
+def prefill(cfg: ModelConfig, p: Params, tokens: jax.Array, *,
+            img_embeds: Optional[jax.Array] = None,
+            max_len: Optional[int] = None,
+            window: int = 0, sink: int = 0, sparsity: float = 0.0):
+    """Returns (last-position logits [B,V], cache, cache_len [B])."""
+    h = _embed(cfg, p, tokens, img_embeds)
+    b, s, _ = h.shape
+    max_len = max_len or s
+    window = window or cfg.attn_window
+    sink = sink or cfg.attn_sink
+    cap = kvcache.capacity(max_len, window, sink)
+    positions = jnp.arange(s)
+    kv_dtype = jnp.dtype(cfg.kv_dtype)
+
+    def body(h, lp):
+        a_in = L.rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(cfg, lp["attn"], a_in, positions)
+        from repro.models.attention import mha
+        o = mha(q, k, v, n_kv_heads=cfg.n_kv_heads, causal=True,
+                window=window, sink=sink, sparsity=sparsity)
+        o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+        h = h + shard(o @ lp["attn"]["wo"], "batch", "seq_sp", "embed")
+        f_in = L.rmsnorm(h, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.n_experts:
+            h = h + L.moe_block(cfg, lp["moe"], f_in)
+        else:
+            h = h + L.mlp_block(cfg, lp["mlp"], f_in)
+        k_c = kvcache.place_prefill(k, cap, sink, window).astype(kv_dtype)
+        v_c = kvcache.place_prefill(v, cap, sink, window).astype(kv_dtype)
+        k_c = shard(k_c, "batch", "seq_kv", "kv_heads", None)
+        v_c = shard(v_c, "batch", "seq_kv", "kv_heads", None)
+        return h, {"k": k_c, "v": v_c}
+
+    h, cache = jax.lax.scan(body, h, p["layers"])
+    logits = _unembed(cfg, p, h[:, -1:])[:, 0]
+    cache_len = jnp.full((b,), s, jnp.int32)
+    return logits, cache, cache_len
+
+
+def decode_step(cfg: ModelConfig, p: Params, cache: Dict[str, Any],
+                token: jax.Array, pos: jax.Array, *,
+                window: int = 0, sink: int = 0):
+    """One decode step.  token [B,1], pos [B] (write position = current len).
+
+    With a ring cache (cap == sink + window < seq_len) eviction replaces
+    masking; with a full-length cache the window mask applies.
+    Returns (logits [B,V], new cache).
+    """
+    h = _embed(cfg, p, token, None)
+    b = token.shape[0]
+    positions = pos[:, None]
+    window = window or cfg.attn_window
+    sink = sink or cfg.attn_sink
+    cap = cache["k"].shape[2]
+    ring_mode = bool(window) and cap == sink + window
+    dest = kvcache.ring_dest(pos, cap, sink) if ring_mode else pos
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        a_in = L.rmsnorm(h, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(cfg, lp["attn"], a_in, positions)
+        kc = kvcache.write_token(kc, k, dest)
+        vc = kvcache.write_token(vc, v, dest)
+        o = decode_attention(q, kc, vc, n_kv_heads=cfg.n_kv_heads,
+                             cache_len=kvcache.n_valid(pos, cap),
+                             window=0 if ring_mode else window,
+                             sink=sink)
+        o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        h = h + o @ lp["attn"]["wo"]
+        f_in = L.rmsnorm(h, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.n_experts:
+            h = h + L.moe_block(cfg, lp["moe"], f_in)
+        else:
+            h = h + L.mlp_block(cfg, lp["mlp"], f_in)
+        return h, {"k": kc, "v": vc}
+
+    h, cache = jax.lax.scan(body, h, (p["layers"], cache["k"], cache["v"]))
+    logits = _unembed(cfg, p, h)[:, 0]
+    return logits, cache

@@ -1,0 +1,3 @@
+from repro.profiler.profiles import (  # noqa: F401
+    ChunkProfile, ModelProfile, get_profile,
+)

@@ -1,0 +1,115 @@
+"""Offline profiler: latency / quality surfaces per fidelity configuration.
+
+The paper profiles every candidate configuration offline (App. A): average
+per-chunk latency L (ms) and VBench quality Q per config.  On real
+hardware this is a measurement pass; in this repo the latency surface is
+an analytic cost model calibrated to the paper's operating points (a
+Self-Forcing-class 1.3B AR-DiT at 480p generates a 3-latent-frame chunk
+in ~0.72 s at the highest-quality config on one H100 — just inside the
+16 fps real-time budget of 0.75 s/chunk), and the quality surface is a
+deterministic response model reproducing App. A's frontier shape:
+
+    latency(cfg) = S * (t_fixed + t_mlp*q(Q) + t_attn*vis(W)*(1-rho)*q(Q))
+    quality(cfg) = q_max - a_S(4-S)^1.6 - a_r*rho^2.5*vis(W)^0.5
+                   - a_W*(1 - vis(W))^1.4 - a_Q*[fp8] - interactions
+
+Both surfaces are exposed through ``ModelProfile`` so BMPR (SS5.2), the
+service-credit estimator (Eq. 1), and the cluster simulator read one
+consistent timing prior — exactly the role the paper's offline profiler
+plays.  Constants live here, with their derivations, so swapping in real
+measurements is a one-file change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+from repro.core.fidelity import FidelityConfig, candidate_space
+
+# -- timing constants (seconds), per H100-class worker, 480p, 3-frame chunk --
+# Derivation: the highest-quality reference (S=4, rho=0, W=7, bf16)
+# lands at 0.72 s/chunk — JUST inside the 0.75 s playout budget, matching
+# Self-Forcing's ~17 fps single-GPU rate.  A solo stream is sustainable
+# at top fidelity; pressure comes from worker SHARING (two streams on a
+# worker run at an effective 1.44 s cadence and bleed ~0.7 s of slack per
+# chunk), which is what slack-driven reallocation + BMPR absorb and
+# slack-blind baselines do not (Fig. 15's URGENT/RELAXED imbalance).
+# Per-step split: fixed overhead 40 ms, MLP+projections 90 ms,
+# full-window attention 50 ms; fp8 keeps tensor-core paths ~1.6x faster
+# on the quantizable share (SageAttention2 reports 1.6-2.1x).
+T_FIXED = 0.040
+T_MLP = 0.090
+T_ATTN = 0.050
+FP8_FACTOR = 0.625
+W_MAX = 7
+
+# -- quality constants (VBench points, 0-100) --------------------------------
+# q_max matches the paper's reported ~81.1 VBench for Causal-Forcing; knob
+# penalties are shaped so the 90-config surface spans ~6 VBench points and
+# the median (the paper's global quality floor) sits ~1.2 under q_max.
+Q_MAX = {"causal-forcing": 81.3, "self-forcing": 80.9}
+A_S = 0.55
+A_RHO = 2.6
+A_W = 1.1
+A_Q = 0.35
+A_INT = 0.8          # rho x low-S interaction (fewer steps amplify sparsity)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkProfile:
+    fidelity: FidelityConfig
+    latency: float           # seconds per chunk on one worker (SP1)
+    quality: float           # VBench points
+
+
+def chunk_latency(cfg: FidelityConfig, *, sp_degree: int = 1,
+                  model: str = "causal-forcing") -> float:
+    """Profiled per-chunk generation time (SS2.1: highly profileable)."""
+    vis = min(cfg.window, W_MAX) / W_MAX
+    qf = FP8_FACTOR if cfg.quant == "fp8" else 1.0
+    step = T_FIXED + T_MLP * qf + T_ATTN * vis * (1.0 - cfg.sparsity) * qf
+    lat = cfg.steps * step
+    if sp_degree > 1:
+        # Ulysses SP2: compute halves, all-to-all adds ~12% of the split
+        # compute (intra-node NVLink / ICI); fixed overhead not split.
+        compute = lat - cfg.steps * T_FIXED
+        lat = cfg.steps * T_FIXED + compute / sp_degree * 1.12
+    return lat
+
+
+def chunk_quality(cfg: FidelityConfig, *,
+                  model: str = "causal-forcing") -> float:
+    vis = min(cfg.window, W_MAX) / W_MAX
+    q = Q_MAX.get(model, 81.0)
+    q -= A_S * (4 - cfg.steps) ** 1.6
+    q -= A_RHO * (cfg.sparsity ** 2.5) * (vis ** 0.5)
+    q -= A_W * (1.0 - vis) ** 1.4
+    q -= A_Q * (1.0 if cfg.quant == "fp8" else 0.0)
+    q -= A_INT * cfg.sparsity * (4 - cfg.steps) / 2.0
+    return q
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """All 90 profiled points for one AR-DiT model (App. A)."""
+    model: str
+    points: Tuple[ChunkProfile, ...]
+
+    def latency(self, cfg: FidelityConfig, sp_degree: int = 1) -> float:
+        return chunk_latency(cfg, sp_degree=sp_degree, model=self.model)
+
+    def quality(self, cfg: FidelityConfig) -> float:
+        return chunk_quality(cfg, model=self.model)
+
+    @property
+    def by_key(self) -> Dict[str, ChunkProfile]:
+        return {p.fidelity.key: p for p in self.points}
+
+
+@functools.lru_cache(maxsize=None)
+def get_profile(model: str = "causal-forcing") -> ModelProfile:
+    pts = tuple(ChunkProfile(c, chunk_latency(c, model=model),
+                             chunk_quality(c, model=model))
+                for c in candidate_space())
+    return ModelProfile(model, pts)

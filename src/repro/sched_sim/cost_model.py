@@ -1,0 +1,87 @@
+"""Modeled hardware constants for the cluster simulator.
+
+Everything the simulator cannot measure on this CPU container is derived
+here, with the derivation recorded (DESIGN.md SS8).  Swapping in measured
+values is a one-file change.
+
+Testbed (paper SS7.1): 2 nodes x 8 H100-80GB, NVLink 900 GB/s/GPU
+intra-node, 400 Gb/s InfiniBand across nodes.
+
+KV page accounting (Self-Forcing-class AR-DiT, 480p):
+    tokens/latent-frame = 880; 12 KV heads x 128 head dim; 30 layers
+    page = 1 latent frame across all layers (frame-granularity paging,
+    SS4.4 footnote: frame-level paging avoids fragmentation)
+    page bytes = 880 * 12 * 128 * 2(K,V) * 2(bf16) * 30 = 162.3 MB
+    full stream (cond sink + 7-chunk window = 21 frames + sink) ~ 3.5 GB
+    pool per worker = kappa * 80 GB = 64 GB ~ 394 pages (~18 streams)
+
+Transfer model (paper App. D.2 reports 31.8 ms avg / 118.4 ms P95 per
+KV transfer, 4.4 ms avg residual wait under layer-wise streaming):
+    effective intra-node P2P   200 GB/s  (NVLink practical share)
+    effective cross-node RDMA   40 GB/s  (400 Gb/s IB, ~80% efficiency)
+    fixed submission overhead    4 ms    (page lookup, CUDA events)
+A ~2 GB average resident state then costs ~14 ms intra / ~54 ms cross —
+the observed 31.8 ms average falls between, and first-layer readiness
+(1/30 of the bytes) lands at ~4-6 ms, matching the residual-wait table.
+
+SDV2 batching (SS7.1): batched diffusion steps amortize weight reads;
+we model batch-of-b per-step latency as t_step * (0.4 + 0.6 b)
+(throughput rises ~1.7x at b=4 while per-chunk latency rises ~2.8x),
+consistent with SS7.2's observation that SDV2 "increases per-chunk
+latency" while raising aggregate FPS.
+"""
+from __future__ import annotations
+
+# --- cluster topology (paper testbed) ---------------------------------------
+N_WORKERS = 16
+WORKERS_PER_NODE = 8
+
+# --- playout (SS7.1) ---------------------------------------------------------
+FPS = 16
+PIXEL_FRAMES_PER_CHUNK = 12          # 3 latent frames x 4 VAE temporal rate
+CHUNK_SECONDS = PIXEL_FRAMES_PER_CHUNK / FPS      # 0.75 s
+STREAM_FRAMES = (81, 129, 161, 241)  # ~5-15 s at 16 fps (App. B)
+
+# --- KV paging ---------------------------------------------------------------
+PAGE_BYTES = 880 * 12 * 128 * 2 * 2 * 30         # 162.3 MB / latent frame
+FRAMES_PER_CHUNK = 3
+SINK_PAGES = 1                        # cond tokens ~ one page equivalent
+MAX_WINDOW_CHUNKS = 7
+POOL_BYTES = int(0.8 * 80e9)          # kappa = 0.8 of 80 GB VRAM (SS4.4)
+POOL_PAGES = POOL_BYTES // PAGE_BYTES
+
+# --- transfer engine ----------------------------------------------------------
+BW_INTRA = 200e9
+BW_INTER = 40e9
+TRANSFER_OVERHEAD_S = 0.004
+N_LAYERS = 30
+
+# --- baseline modeling --------------------------------------------------------
+SDV2_BATCH = 4
+
+
+def sdv2_batch_step_factor(b: int) -> float:
+    """Per-step latency multiplier for a lockstep batch of ``b``.
+
+    A 1.3B AR-DiT at 480p is compute-bound at batch 1 (2640-token chunks
+    saturate the GPU), so batching amortizes little: ~10% per added
+    stream.  Throughput gain at b=4 is b/factor = 1.08x while every
+    member's chunk latency inflates 3.4x — which is exactly SS7.2's
+    observation that SDV2 raises aggregate FPS but not per-stream
+    timeliness, leaving multi-stream workers URGENT (Fig. 15)."""
+    return 1.0 + 0.9 * (b - 1)
+
+
+def stream_pages(chunks_resident: int) -> int:
+    """Pages held by a stream with ``chunks_resident`` chunks in window."""
+    return SINK_PAGES + min(chunks_resident,
+                            MAX_WINDOW_CHUNKS) * FRAMES_PER_CHUNK
+
+
+def stream_bytes(chunks_resident: int) -> int:
+    return stream_pages(chunks_resident) * PAGE_BYTES
+
+
+TS_RECONFIG_S = 0.30     # TridentServe SP/parallelism reconfiguration stall
+                         # (SS7.2: "parallelism reconfiguration also delays
+                         #  the first chunk, inflating TTFC")

@@ -1,0 +1,93 @@
+"""Evaluation metrics (paper SS7.1).
+
+    QoE = CPR = mean over streams of (fraction of chunks ready by their
+          playout deadlines)
+    TTFC = mean time from arrival to first playable chunk
+    quality = mean profiled VBench over all delivered chunks
+    stalls = per-stream count + duration distribution (Fig. 14)
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List
+
+from repro.sched_sim.simulator import SimResult
+
+
+@dataclasses.dataclass(frozen=True)
+class Summary:
+    qoe: float
+    ttfc: float
+    quality: float
+    stalls_per_stream: float
+    avg_stall_ms: float
+    n_streams: int
+    n_chunks: int
+    n_rehomings: int
+    n_sp_events: int
+
+    def row(self) -> str:
+        return (f"QoE={self.qoe:.3f} TTFC={self.ttfc:.2f}s "
+                f"VBench={self.quality:.2f} "
+                f"stalls/stream={self.stalls_per_stream:.2f} "
+                f"avg_stall={self.avg_stall_ms:.0f}ms")
+
+
+def summarize(res: SimResult) -> Summary:
+    cprs: List[float] = []
+    ttfcs: List[float] = []
+    quals: List[float] = []
+    stall_counts: List[int] = []
+    stall_durs: List[float] = []
+    n_chunks = 0
+    for s in res.streams.values():
+        if not s.ready_times:
+            continue
+        hits = sum(1 for r, d in zip(s.ready_times, s.deadlines) if r <= d)
+        cprs.append(hits / max(len(s.ready_times), 1))
+        if s.first_chunk_time is not None:
+            ttfcs.append(s.first_chunk_time - s.arrival)
+        quals.extend(s.qualities)
+        stall_counts.append(len(s.stall_events))
+        stall_durs.extend(s.stall_events)
+        n_chunks += len(s.ready_times)
+    return Summary(
+        qoe=statistics.mean(cprs) if cprs else 0.0,
+        ttfc=statistics.mean(ttfcs) if ttfcs else float("inf"),
+        quality=statistics.mean(quals) if quals else 0.0,
+        stalls_per_stream=statistics.mean(stall_counts) if stall_counts
+        else 0.0,
+        avg_stall_ms=1000.0 * statistics.mean(stall_durs) if stall_durs
+        else 0.0,
+        n_streams=len(cprs), n_chunks=n_chunks,
+        n_rehomings=res.n_rehomings, n_sp_events=res.n_sp_events)
+
+
+def stall_histogram(res: SimResult,
+                    edges=(0.1, 0.25, 0.5, 1.0, 2.0, 5.0)) -> Dict[str, int]:
+    durs = [d for s in res.streams.values() for d in s.stall_events]
+    hist: Dict[str, int] = {}
+    lo = 0.0
+    for e in edges:
+        hist[f"{lo:.2f}-{e:.2f}s"] = sum(1 for d in durs if lo <= d < e)
+        lo = e
+    hist[f">{edges[-1]:.2f}s"] = sum(1 for d in durs if d >= edges[-1])
+    return hist
+
+
+def transfer_stats(res: SimResult) -> Dict[str, float]:
+    log = res.engine.log
+    if not log:
+        return {"n": 0, "avg_ms": 0.0, "p95_ms": 0.0,
+                "avg_residual_ms": 0.0, "p95_residual_ms": 0.0}
+    totals = sorted(t.total for t in log)
+    waits = sorted(t.residual_wait for t in log)
+
+    def p95(xs):
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+    return {"n": len(log),
+            "avg_ms": 1000 * statistics.mean(totals),
+            "p95_ms": 1000 * p95(totals),
+            "avg_residual_ms": 1000 * statistics.mean(waits),
+            "p95_residual_ms": 1000 * p95(waits)}

@@ -1,0 +1,444 @@
+"""Discrete-event cluster simulator (paper SS7 testbed on a virtual clock).
+
+The simulator owns the event loop, playout bookkeeping, worker execution
+and the paged-KV pools; ALL control decisions come from policy objects —
+SlackServe's policy calls the real ``repro.core`` control plane, baselines
+implement SS7.1's SDV2 / TS / TS-chunk behaviors.  Execution is modeled at
+*denoise-step* granularity, so step-boundary preemption (SS3.1) is exact.
+
+Event kinds: arrival, tick, step_done, stream_ready (transfer finished /
+atomic-safety reinsertion), prompt_switch, pause_end, worker_unblock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import queues as q_mod
+from repro.core import slack as slack_mod
+from repro.core.control_plane import ControlPlane, ControlConfig
+from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
+from repro.core.state_plane import AsyncTransferEngine, PagedKVPool
+from repro.core.types import ClusterView, Stream, Tier, Worker
+from repro.profiler.profiles import ModelProfile, get_profile
+from repro.sched_sim import cost_model as cm
+from repro.sched_sim.workloads import StreamSpec
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_workers: int = cm.N_WORKERS
+    workers_per_node: int = cm.WORKERS_PER_NODE
+    model: str = "causal-forcing"
+    transfer_protocol: str = "async-stream"
+    tick_interval: float = 3.0
+    pool_pages: int = cm.POOL_PAGES
+    max_time: float = 3.0e4
+
+
+@dataclasses.dataclass
+class SimResult:
+    streams: Dict[int, Stream]
+    engine: AsyncTransferEngine
+    n_rehomings: int
+    n_sp_events: int
+    worker_tier_samples: List[Tuple[int, int, int]]   # (urgent, mixed, relaxed)
+    fidelity_counts: Dict[str, int]
+    control_tick_times: List[float]
+
+
+class Simulator:
+    def __init__(self, config: SimConfig, specs: Sequence[StreamSpec],
+                 policy: "Policy"):
+        self.cfg = config
+        self.specs = {s.sid: s for s in specs}
+        self.policy = policy
+        self.profile: ModelProfile = get_profile(config.model)
+        self.engine = AsyncTransferEngine(
+            protocol=config.transfer_protocol, bw_intra=cm.BW_INTRA,
+            bw_inter=cm.BW_INTER, overhead=cm.TRANSFER_OVERHEAD_S,
+            n_layers=cm.N_LAYERS)
+        workers = [Worker(w, node=w // config.workers_per_node)
+                   for w in range(config.n_workers)]
+        self.view = ClusterView({}, workers, config.workers_per_node)
+        self.pools = [PagedKVPool(config.pool_pages)
+                      for _ in range(config.n_workers)]
+        self.blocked_until = [0.0] * config.n_workers
+        self.in_transfer: Dict[int, float] = {}       # sid -> ready time
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, str, Any]] = []
+        self._seq = itertools.count()
+        self.worker_tier_samples: List[Tuple[int, int, int]] = []
+        self.fidelity_counts: Dict[str, int] = {}
+        # per-worker execution context: list of (sid) running in lockstep
+        self.batch: List[List[int]] = [[] for _ in range(config.n_workers)]
+        policy.attach(self)
+
+    # ------------------------------------------------------------------ events
+    def push(self, t: float, kind: str, payload: Any = None) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def run(self) -> SimResult:
+        for spec in self.specs.values():
+            self.push(spec.arrival, "arrival", spec.sid)
+            for st in spec.switches:
+                self.push(spec.arrival + st, "prompt_switch", spec.sid)
+            for (ps, dur) in spec.pauses:
+                self.push(spec.arrival + ps, "pause", (spec.sid, dur))
+        self.push(self.cfg.tick_interval, "tick", None)
+
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if t > self.cfg.max_time:
+                break
+            self.now = t
+            getattr(self, f"_on_{kind}")(payload)
+            if kind != "tick" and self._all_done():
+                break
+        return SimResult(self.view.streams, self.engine,
+                         getattr(self.policy, "n_rehomings", 0),
+                         getattr(self.policy, "n_sp_events", 0),
+                         self.worker_tier_samples, self.fidelity_counts,
+                         getattr(self.policy, "tick_times", []))
+
+    def _all_done(self) -> bool:
+        return (len(self.view.streams) == len(self.specs)
+                and all(s.done for s in self.view.streams.values()))
+
+    # ------------------------------------------------------------------ admission
+    def _on_arrival(self, sid: int) -> None:
+        spec = self.specs[sid]
+        first_est = self.policy.first_chunk_estimate()
+        ttfc_slack = self.policy.initial_slack(first_est)
+        home = self.policy.choose_home()
+        s = Stream(sid=sid, arrival=self.now, target_chunks=spec.chunks,
+                   chunk_seconds=cm.CHUNK_SECONDS, home=home,
+                   ttfc_slack=ttfc_slack,
+                   next_deadline=self.now + ttfc_slack)
+        s.t_next = first_est
+        self.view.streams[sid] = s
+        self.policy.on_admit(s)
+        self.view.workers[home].queue.append(sid)
+        self.pools[home].alloc(sid, cm.SINK_PAGES)
+        s.resident_on.add(home)
+        self._try_dispatch(home)
+
+    # ------------------------------------------------------------------ control
+    def _on_tick(self, _: None) -> None:
+        self.policy.on_tick(self.now)
+        # sample worker classes (Fig. 15)
+        counts = q_mod.tier_counts(self.view)
+        cls = [q_mod.worker_class(counts[w.wid]) for w in self.view.workers]
+        self.worker_tier_samples.append(
+            (cls.count("urgent"), cls.count("mixed"), cls.count("relaxed")))
+        for w in self.view.workers:
+            self._try_dispatch(w.wid)
+        if not self._all_done():
+            self.push(self.now + self.cfg.tick_interval, "tick", None)
+
+    # ------------------------------------------------------------------ playout
+    def _on_prompt_switch(self, sid: int) -> None:
+        s = self.view.streams.get(sid)
+        if s is None or s.done:
+            return
+        # chunks buffered under the old condition are useless: slack resets
+        s.next_deadline = self.now + s.ttfc_slack
+        s.step_done = 0                        # abort in-flight chunk work
+        s.remaining = 0.0
+
+    def _on_pause(self, payload: Tuple[int, float]) -> None:
+        sid, dur = payload
+        s = self.view.streams.get(sid)
+        if s is None or s.done:
+            return
+        s.next_deadline += dur                 # playout halts; slack grows
+
+    # ------------------------------------------------------------------ execution
+    def _runnable(self, sid: int) -> bool:
+        s = self.view.streams[sid]
+        return (not s.done and not s.finished and sid not in self.in_transfer)
+
+    def _try_dispatch(self, wid: int) -> None:
+        w = self.view.workers[wid]
+        if self.batch[wid] or self.now < self.blocked_until[wid]:
+            return
+        if w.donated_to is not None:
+            sid = w.donated_to
+            s = self.view.streams[sid]
+            home_w = self.view.workers[s.home]
+            if (self._runnable(sid) and not self.batch[s.home]
+                    and sid in home_w.queue
+                    and self.now >= self.blocked_until[s.home]):
+                self._start_batch(s.home, [sid], sp=2)
+                return
+            # donated stream not dispatchable right now: serve own queue
+            # (the donor re-joins at the stream's next boundary)
+        self.policy.order(w)
+        cand: List[int] = []
+        for sid in list(w.queue):
+            if self._runnable(sid):
+                s = self.view.streams[sid]
+                if wid not in s.resident_on:
+                    self._restore(sid, wid)      # non-resident: stream back
+                    continue
+                cand.append(sid)
+                if len(cand) >= self.policy.batch_size:
+                    break
+        if cand:
+            sp = 1
+            s0 = self.view.streams[cand[0]]
+            if (len(cand) == 1 and s0.sp_donor is not None):
+                donor = self.view.workers[s0.sp_donor]
+                if not self.batch[donor.wid] and \
+                        self.now >= self.blocked_until[donor.wid]:
+                    sp = 2
+            self._start_batch(wid, cand[:1] if sp == 2 else cand, sp=sp)
+
+    def _start_batch(self, wid: int, sids: List[int], sp: int = 1) -> None:
+        w = self.view.workers[wid]
+        b = len(sids)
+        for sid in sids:
+            s = self.view.streams[sid]
+            if sid in w.queue:
+                w.queue.remove(sid)
+            if s.chunk_started is None or s.step_done == 0:
+                fid, lat = self.policy.select_fidelity(s, self.now)
+                s.next_fidelity = fid
+                s.t_next = lat
+                s.chunk_started = self.now
+                s.step_done = 0
+            s.running_on = ((wid, s.sp_donor) if sp == 2 and s.sp_donor
+                            is not None else (wid,))
+            step_t = self._step_time(s, b, sp)
+            s.remaining = (s.next_fidelity.steps - s.step_done) * step_t
+        self.batch[wid] = list(sids)
+        if sp == 2 and self.view.streams[sids[0]].sp_donor is not None:
+            self.batch[self.view.streams[sids[0]].sp_donor] = list(sids)
+        step_t = self._step_time(self.view.streams[sids[0]], b, sp)
+        self.push(self.now + step_t, "step_done", (wid, list(sids)))
+
+    def _step_time(self, s: Stream, batch: int, sp: int) -> float:
+        """Per-step wall time.  A lockstep batch of b shares the unit, so
+        every member sees t_step * batch_factor(b); pipeline-parallel
+        units (SDV2) divide the step time by their pipeline speedup."""
+        lat = self.profile.latency(s.next_fidelity, sp_degree=sp)
+        step = lat / s.next_fidelity.steps
+        step /= getattr(self.policy, "pipeline_speedup", 1.0)
+        if batch > 1:
+            step *= cm.sdv2_batch_step_factor(batch)
+        return step
+
+    def _on_step_done(self, payload: Tuple[int, List[int]]) -> None:
+        wid, sids = payload
+        if self.batch[wid] != sids:
+            return                              # stale event (preempted)
+        done_chunk: List[int] = []
+        for sid in sids:
+            s = self.view.streams[sid]
+            s.step_done += 1
+            sp = len(s.running_on or (wid,))
+            step_t = self._step_time(s, len(sids), sp)
+            s.remaining = (s.next_fidelity.steps - s.step_done) * step_t
+            if s.step_done >= s.next_fidelity.steps:
+                done_chunk.append(sid)
+        if done_chunk:
+            for sid in done_chunk:
+                self._complete_chunk(sid, wid)
+        # release batch and redispatch (step/chunk boundary = safe point)
+        for sid in sids:
+            s = self.view.streams[sid]
+            if sid in done_chunk:
+                continue
+            # chunk unfinished: requeue at the FRONT with partial progress
+            # (run-to-completion unless a lower-credit stream preempts at
+            #  this safe boundary; FIFO policies simply continue it)
+            s.running_on = None
+            if sid not in self.view.workers[wid].queue and not s.done:
+                self.view.workers[wid].queue.insert(0, sid)
+        # free every worker that ran this batch (home + any SP2 mirror —
+        # scan all mirrors so a mid-step donor release cannot leak one)
+        freed = []
+        for w2 in range(len(self.batch)):
+            if self.batch[w2] == sids:
+                self.batch[w2] = []
+                freed.append(w2)
+        for f in freed:
+            self._try_dispatch(f)
+
+    def _complete_chunk(self, sid: int, wid: int) -> None:
+        s = self.view.streams[sid]
+        ready = self.now
+        ddl = s.next_deadline
+        s.ready_times.append(ready)
+        s.deadlines.append(ddl)
+        if s.first_chunk_time is None:
+            s.first_chunk_time = ready
+        if ready > ddl:
+            s.stall_time += ready - ddl
+            s.stall_events.append(ready - ddl)
+        s.next_deadline = max(ddl, ready) + s.chunk_seconds
+        s.chunks_done += 1
+        s.step_done = 0
+        s.chunk_started = None
+        s.running_on = None
+        s.remaining = 0.0
+        fid = s.next_fidelity
+        s.qualities.append(self.profile.quality(fid))
+        s.fidelity_log.append(fid.key)
+        self.fidelity_counts[fid.key] = self.fidelity_counts.get(
+            fid.key, 0) + 1
+        # KV growth: allocate this chunk's pages (evict if needed, SS4.1)
+        self._grow_kv(sid, wid)
+        if s.finished:
+            s.done = True
+            for w_res in list(s.resident_on):
+                self.pools[w_res].release(sid)
+            s.resident_on.clear()
+            if s.sp_donor is not None:
+                self.view.workers[s.sp_donor].donated_to = None
+                s.sp_donor = None
+        else:
+            self.view.workers[wid].queue.append(sid)
+
+    # ------------------------------------------------------------------ state
+    def _grow_kv(self, sid: int, wid: int) -> None:
+        s = self.view.streams[sid]
+        pool = self.pools[wid]
+        want = cm.stream_pages(s.chunks_done)
+        delta = want - pool.pages_of(sid)
+        if delta <= 0:
+            return
+        while not pool.can_alloc(delta):
+            victim = q_mod.pick_eviction(
+                [x for x in pool.resident_sids()
+                 if self.view.streams[x].running_on is None],
+                self.view.streams, protect=sid)
+            if victim is None:
+                return                          # nothing evictable
+            pool.release(victim)
+            self.view.streams[victim].resident_on.discard(wid)
+        pool.alloc(sid, delta)
+        s.resident_on.add(wid)
+
+    def _restore(self, sid: int, wid: int) -> None:
+        """Evicted stream selected for dispatch: stream state back in
+        (host->device modeled at intra-node bandwidth)."""
+        s = self.view.streams[sid]
+        w = self.view.workers[wid]
+        if sid in w.queue:
+            w.queue.remove(sid)
+        n_bytes = cm.stream_bytes(s.chunks_done)
+        timing = self.engine.transfer(self.now, n_bytes, cross_node=False)
+        self.in_transfer[sid] = timing.first_layer_ready
+        pool = self.pools[wid]
+        want = cm.stream_pages(s.chunks_done)
+        while not pool.can_alloc(want):
+            victim = q_mod.pick_eviction(
+                [x for x in pool.resident_sids()
+                 if self.view.streams[x].running_on is None],
+                self.view.streams, protect=sid)
+            if victim is None:
+                break
+            pool.release(victim)
+            self.view.streams[victim].resident_on.discard(wid)
+        pool.alloc(sid, min(want, pool.free))
+        s.resident_on.add(wid)
+        self.push(timing.first_layer_ready, "stream_ready", (sid, wid))
+        if self.engine.blocks_dispatcher():
+            self.blocked_until[wid] = timing.complete
+
+    def _on_stream_ready(self, payload: Tuple[int, int]) -> None:
+        sid, wid = payload
+        self.in_transfer.pop(sid, None)
+        s = self.view.streams.get(sid)
+        if s is None or s.done:
+            return
+        w = self.view.workers[wid]
+        if sid not in w.queue and s.running_on is None:
+            w.queue.append(sid)
+        self._try_dispatch(wid)
+
+    def _on_worker_unblock(self, wid: int) -> None:
+        self._try_dispatch(wid)
+
+    # ------------------------------------------------------------------ used by policies
+    def migrate(self, sid: int, src: int, dst: int,
+                cross_node: bool) -> None:
+        """Re-homing state movement through the State Plane (SS4.4)."""
+        s = self.view.streams[sid]
+        n_bytes = cm.stream_bytes(s.chunks_done)
+        timing = self.engine.transfer(self.now, n_bytes,
+                                      cross_node=cross_node)
+        self.pools[src].release(sid)
+        s.resident_on.discard(src)
+        pool = self.pools[dst]
+        want = cm.stream_pages(s.chunks_done)
+        while not pool.can_alloc(want):
+            victim = q_mod.pick_eviction(
+                [x for x in pool.resident_sids()
+                 if self.view.streams[x].running_on is None],
+                self.view.streams, protect=sid)
+            if victim is None:
+                break
+            pool.release(victim)
+            self.view.streams[victim].resident_on.discard(dst)
+        pool.alloc(sid, min(want, pool.free))
+        s.resident_on.add(dst)
+        # atomic safety: out of every queue until first layer lands
+        for w in self.view.workers:
+            if sid in w.queue:
+                w.queue.remove(sid)
+        self.in_transfer[sid] = timing.first_layer_ready
+        self.push(timing.first_layer_ready, "stream_ready", (sid, dst))
+        if self.engine.blocks_dispatcher():
+            self.blocked_until[dst] = timing.complete
+            self.push(timing.complete, "worker_unblock", dst)
+
+    def sp_head_partition_transfer(self, sid: int, donor: int) -> None:
+        """Ulysses head-partition KV to the donor (App. C.4): half bytes."""
+        s = self.view.streams[sid]
+        n_bytes = cm.stream_bytes(s.chunks_done) // 2
+        timing = self.engine.transfer(self.now, n_bytes, cross_node=False)
+        self.in_transfer[sid] = timing.first_layer_ready
+        for w in self.view.workers:
+            if sid in w.queue:
+                w.queue.remove(sid)
+        self.push(timing.first_layer_ready, "stream_ready", (sid, s.home))
+
+
+# ---------------------------------------------------------------------------
+# policy interface
+# ---------------------------------------------------------------------------
+
+class Policy:
+    name = "base"
+    batch_size = 1
+
+    def attach(self, sim: Simulator) -> None:
+        self.sim = sim
+
+    # admission
+    def first_chunk_estimate(self) -> float:
+        raise NotImplementedError
+
+    def initial_slack(self, first_est: float) -> float:
+        return 4.0 * first_est
+
+    def choose_home(self) -> int:
+        return min(self.sim.view.workers, key=lambda w: w.load()).wid
+
+    def on_admit(self, s: Stream) -> None:
+        pass
+
+    # control
+    def on_tick(self, now: float) -> None:
+        pass
+
+    def order(self, worker: Worker) -> None:
+        pass
+
+    def select_fidelity(self, s: Stream,
+                        now: float) -> Tuple[FidelityConfig, float]:
+        raise NotImplementedError

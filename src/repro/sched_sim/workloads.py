@@ -1,0 +1,142 @@
+"""Workload generators (paper SS7.1 + App. B).
+
+All five workloads share per-stream settings: 946 VBench prompts, target
+lengths sampled from {81, 129, 161, 241} pixel frames (~5-15 s at 16 fps),
+480p, 3 latent frames per chunk (12 pixel frames -> 0.75 s of playout).
+
+    Steady         Poisson arrivals, lambda = 1 stream/s
+    Burst          Steady + 3 burst points (20/50/80% progress), each
+                   pulling 10% of all streams to arrive simultaneously
+    Prompt-switch  Steady + per-stream condition switches (1-3 by length)
+                   that reset playout slack to the initial TTFC
+    Pause          Steady + client pauses (1-3 by length, each 20% of the
+                   stream duration) during which slack accumulates
+    Trace          enterprise-trace-shaped arrivals: interleaved steady
+                   segments, bursts, and idle gaps
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import List, Optional, Tuple
+
+from repro.sched_sim import cost_model as cm
+
+N_PROMPTS = 946          # VBench prompt count
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    sid: int
+    arrival: float
+    frames: int                       # target pixel frames
+    switches: Tuple[float, ...] = ()  # prompt-switch times (relative, s)
+    pauses: Tuple[Tuple[float, float], ...] = ()   # (rel start, duration)
+
+    @property
+    def chunks(self) -> int:
+        return math.ceil(self.frames / cm.PIXEL_FRAMES_PER_CHUNK)
+
+    @property
+    def duration(self) -> float:
+        return self.frames / cm.FPS
+
+
+def _poisson_arrivals(n: int, rate: float, rng: random.Random) -> List[float]:
+    t, out = 0.0, []
+    for _ in range(n):
+        t += rng.expovariate(rate)
+        out.append(t)
+    return out
+
+
+def _lengths(n: int, rng: random.Random) -> List[int]:
+    return [rng.choice(cm.STREAM_FRAMES) for _ in range(n)]
+
+
+def steady(n: int = N_PROMPTS, rate: float = 1.0,
+           seed: int = 0) -> List[StreamSpec]:
+    rng = random.Random(seed)
+    arr = _poisson_arrivals(n, rate, rng)
+    return [StreamSpec(i, arr[i], f)
+            for i, f in enumerate(_lengths(n, rng))]
+
+
+def burst(n: int = N_PROMPTS, rate: float = 1.0,
+          seed: int = 0) -> List[StreamSpec]:
+    """10% of streams reassigned to each of 3 synchronized burst points."""
+    rng = random.Random(seed)
+    base = steady(n, rate, seed)
+    arrivals = sorted(s.arrival for s in base)
+    idx = list(range(n))
+    rng.shuffle(idx)
+    n_b = n // 10
+    out = [dataclasses.replace(s) for s in base]
+    cursor = 0
+    for frac in (0.2, 0.5, 0.8):
+        t_burst = arrivals[int(frac * (n - 1))]
+        for j in idx[cursor:cursor + n_b]:
+            out[j] = dataclasses.replace(out[j], arrival=t_burst)
+        cursor += n_b
+    return out
+
+
+def _n_events(frames: int) -> int:
+    return {81: 1, 129: 2, 161: 2, 241: 3}[frames]
+
+
+def prompt_switch(n: int = N_PROMPTS, rate: float = 1.0,
+                  seed: int = 0) -> List[StreamSpec]:
+    rng = random.Random(seed)
+    out = []
+    for s in steady(n, rate, seed):
+        ks = sorted(rng.uniform(0.1, 0.9) * s.duration
+                    for _ in range(_n_events(s.frames)))
+        out.append(dataclasses.replace(s, switches=tuple(ks)))
+    return out
+
+
+def pause(n: int = N_PROMPTS, rate: float = 1.0,
+          seed: int = 0) -> List[StreamSpec]:
+    rng = random.Random(seed)
+    out = []
+    for s in steady(n, rate, seed):
+        dur = 0.2 * s.duration
+        ps = tuple(sorted((rng.uniform(0.1, 0.9) * s.duration, dur)
+                          for _ in range(_n_events(s.frames))))
+        out.append(dataclasses.replace(s, pauses=ps))
+    return out
+
+
+def trace(n: int = N_PROMPTS, seed: int = 0) -> List[StreamSpec]:
+    """Enterprise-trace-shaped arrivals: alternating steady segments
+    (rates 0.6-1.6/s), flash bursts, and idle gaps (App. B)."""
+    rng = random.Random(seed)
+    arrivals: List[float] = []
+    t = 0.0
+    while len(arrivals) < n:
+        kind = rng.random()
+        if kind < 0.6:                       # steady segment
+            rate = rng.uniform(0.6, 1.6)
+            for _ in range(min(rng.randint(30, 120), n - len(arrivals))):
+                t += rng.expovariate(rate)
+                arrivals.append(t)
+        elif kind < 0.8:                     # flash burst
+            k = min(rng.randint(5, 25), n - len(arrivals))
+            arrivals.extend([t] * k)
+        else:                                # idle gap
+            t += rng.uniform(10.0, 40.0)
+    arrivals = arrivals[:n]
+    rng2 = random.Random(seed + 1)
+    return [StreamSpec(i, arrivals[i], rng2.choice(cm.STREAM_FRAMES))
+            for i in range(n)]
+
+
+WORKLOADS = {
+    "steady": steady,
+    "burst": burst,
+    "prompt_switch": prompt_switch,
+    "pause": pause,
+    "trace": lambda n=N_PROMPTS, rate=1.0, seed=0: trace(n, seed),
+}

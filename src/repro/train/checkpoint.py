@@ -1,0 +1,103 @@
+"""Sharded checkpoint/restart with elastic resharding.
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf plus a
+JSON index (tree structure, shapes, dtypes, step).  Saves run on a
+background thread (async — the train loop donates nothing and keeps
+stepping).  ``restore`` rebuilds the state under ANY mesh: leaves are
+loaded on host and ``jax.device_put`` against the new NamedShardings, so
+a job checkpointed on a (16,16) mesh restarts on (2,16,16), (8,8), or a
+single CPU device — the fault-tolerance path for node failures and
+elastic rescale at 1000+ node scale.
+
+Crash safety: writes go to ``step_<N>.tmp`` and are atomically renamed;
+``latest_step`` only ever sees complete checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = []
+    for path, leaf in leaves:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path)
+        named.append((name.replace("/", "__") or "leaf", leaf))
+    return named, treedef
+
+
+def save(ckpt_dir: str, step: int, state: Any, *,
+         blocking: bool = True) -> threading.Thread:
+    """Write ``state`` under ``ckpt_dir/step_<step>``.  With
+    ``blocking=False`` the device->host copy happens now but file IO runs
+    on a daemon thread (async checkpointing)."""
+    named, _ = _flatten_with_names(state)
+    host = [(n, np.asarray(x)) for n, x in named]
+
+    def _write():
+        tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        index: Dict[str, Any] = {"step": step, "leaves": []}
+        for i, (name, arr) in enumerate(host):
+            fn = f"{i:05d}.npy"
+            np.save(os.path.join(tmp, fn), arr)
+            index["leaves"].append({"name": name, "file": fn,
+                                    "shape": list(arr.shape),
+                                    "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    if blocking:
+        t.join()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_", 1)[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(ckpt_dir, d, "index.json"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, state_like: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Rebuild ``state_like``-shaped state from disk.
+
+    ``shardings``: optional NamedSharding pytree for the CURRENT mesh —
+    elastic resharding happens here (host load + device_put per leaf).
+    """
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    named_like, treedef = _flatten_with_names(state_like)
+    by_name = {e["name"]: e for e in index["leaves"]}
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(named_like))
+    out = []
+    for (name, like), shard in zip(named_like, shard_leaves):
+        entry = by_name[name]
+        arr = np.load(os.path.join(path, entry["file"]))
+        want_shape = tuple(like.shape)
+        assert tuple(arr.shape) == want_shape, (name, arr.shape, want_shape)
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

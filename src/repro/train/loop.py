@@ -1,0 +1,143 @@
+"""Distributed train step + loop.
+
+``make_train_step`` builds the jit-able step for any registered model
+family: loss (model-specific) -> grads -> AdamW.  Under a mesh the step
+is jit'd with NamedSharding in/out specs from ``distributed.sharding``
+(TP x FSDP x DP; ZeRO optimizer state).  Microbatching (gradient
+accumulation) runs as a ``lax.scan`` over microbatch slices so the
+compiled HLO is O(1) in the accumulation factor.  Remat is inside each
+model's ``forward`` (checkpointed scan over layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.distributed.logical import logical_axis_rules
+from repro.models import registry
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: opt.OptState
+
+
+def loss_for(cfg: ModelConfig) -> Callable:
+    api = registry.get_api(cfg)
+    return lambda params, batch: api.loss(cfg, params, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt.OptConfig,
+                    *, microbatches: int = 1) -> Callable:
+    """(state, batch) -> (state, metrics).  Pure; jit outside."""
+    loss_fn = loss_for(cfg)
+
+    def step(state: TrainState, batch: Dict[str, Any]):
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            def slice_mb(x, i):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def mb_body(acc, i):
+                mb = jax.tree_util.tree_map(
+                    functools.partial(slice_mb, i=i), batch)
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                acc_l, acc_g = acc
+                return (acc_l + l,
+                        jax.tree_util.tree_map(jnp.add, acc_g, g)), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                mb_body, (jnp.zeros(()), zero_g),
+                jnp.arange(microbatches))
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches,
+                                           grads)
+        params, opt_state, metrics = opt.adamw_update(
+            opt_cfg, state.params, grads, state.opt_state)
+        metrics["loss"] = loss
+        return TrainState(params, opt_state), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# sharded initialization / jit wiring
+# ---------------------------------------------------------------------------
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh) -> TrainState:
+    """NamedSharding pytree for TrainState (ZeRO: moments follow params)."""
+    p_specs = registry.param_specs(cfg)
+    p_shard = shd.param_shardings(p_specs, mesh, ep=cfg.moe_ep,
+                                  layout=cfg.parallel_layout)
+    scalar = NamedSharding(mesh, P())
+    return TrainState(
+        params=p_shard,
+        opt_state=opt.OptState(
+            step=scalar,
+            m=jax.tree_util.tree_map(lambda s: s, p_shard),
+            v=jax.tree_util.tree_map(lambda s: s, p_shard)))
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_spec: Any) -> Any:
+    bp = shd.batch_pspec(mesh, layout=cfg.parallel_layout)
+
+    def shard_leaf(leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(mesh, P(*(tuple(bp) + (None,) * (nd - 1))))
+    return jax.tree_util.tree_map(shard_leaf, batch_spec)
+
+
+def lower_train_step(cfg: ModelConfig, mesh: Mesh, shape,
+                     opt_cfg: Optional[opt.OptConfig] = None,
+                     microbatches: int = 1):
+    """Lower (not run) the sharded train step for the dry-run."""
+    opt_cfg = opt_cfg or opt.OptConfig(
+        schedule="wsd" if cfg.name.startswith("minicpm") else "cosine")
+    step = make_train_step(cfg, opt_cfg, microbatches=microbatches)
+    st_shard = state_shardings(cfg, mesh)
+    batch_spec = registry.input_specs(cfg, shape)
+    b_shard = batch_shardings(cfg, mesh, batch_spec)
+
+    p_specs = registry.param_specs(cfg)
+    state_spec = TrainState(
+        params=p_specs,
+        opt_state=opt.OptState(
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                p_specs),
+            jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                p_specs)))
+
+    def wrapped(state, batch):
+        with logical_axis_rules(mesh, shd.train_rules(
+                mesh, ep=cfg.moe_ep, layout=cfg.parallel_layout)):
+            return step(state, batch)
+
+    scalar = NamedSharding(mesh, P())
+    metrics_shard = {"grad_norm": scalar, "lr": scalar, "loss": scalar}
+    jitted = jax.jit(wrapped,
+                     in_shardings=(jax.tree_util.tree_map(
+                         lambda s: s, st_shard), b_shard),
+                     out_shardings=(st_shard, metrics_shard))
+    return jitted.lower(state_spec, batch_spec)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state), None),
+    lambda _, c: TrainState(*c))

@@ -1,0 +1,102 @@
+"""AdamW + LR schedules (cosine, and the WSD schedule minicpm-2b was
+trained with — arXiv:2404.06395).  Pure-JAX (no optax in the container);
+moments are fp32 and follow the parameter sharding (ZeRO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"          # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1           # WSD: final fraction spent decaying
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def lr_at(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    if cfg.schedule == "wsd":
+        # warmup -> stable -> decay (1-sqrt decay over the final fraction)
+        decay_start = cfg.total_steps * (1.0 - cfg.decay_frac)
+        frac = jnp.clip((s - decay_start)
+                        / jnp.maximum(cfg.total_steps - decay_start, 1.0),
+                        0.0, 1.0)
+        return cfg.lr * warm * (1.0 - (1.0 - 0.1) * jnp.sqrt(frac))
+    # cosine to 10% of peak
+    t = jnp.clip(s / cfg.total_steps, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params: Any) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay on matrices only (no norms / biases / scalars)."""
+    name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+    return name not in ("attn_norm", "mlp_norm", "final_norm", "norm",
+                        "norm_w", "mixer_norm", "ffn_norm", "cross_norm",
+                        "enc_final_norm", "bq", "bk", "bv", "conv_b",
+                        "dt_bias", "A_log", "D", "mod_b")
+
+
+def adamw_update(cfg: OptConfig, params: Any, grads: Any,
+                 state: OptState) -> Tuple[Any, OptState, Dict[str, Any]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * g32 * g32
+        u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        if _decay_mask(path):
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * u
+        return p2.astype(p.dtype), m2, v2
+
+    flat = jax.tree_util.tree_map_with_path(upd, params, grads,
+                                            state.m, state.v)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda t: isinstance(t,
+                                                                     tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_m, new_v), metrics

@@ -1,0 +1,9 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — tests must
+see the real (single) CPU device; only the dry-run forces 512."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

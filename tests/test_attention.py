@@ -1,0 +1,128 @@
+"""Attention-substrate semantics: block schedules, knobs, decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (decode_attention, mha,
+                                    sparse_keep_list)
+
+KEY = jax.random.PRNGKey(1)
+
+
+def naive_mha(q, k, v, n_kv, causal=True, q_offset=0, window=0, sink=0):
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    g = hq // n_kv
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(d)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= (k_pos[None, :] > q_pos[:, None] - window) | \
+                    (k_pos[None, :] < sink)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("blocks", [(16, 16), (32, 64), (512, 512)])
+def test_blocked_equals_naive_causal(blocks):
+    bq, bkv = blocks
+    q = jax.random.normal(KEY, (2, 64, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, 64, 2, 16))
+    out = mha(q, k, v, n_kv_heads=2, block_q=bq, block_kv=bkv)
+    ref = naive_mha(q, k, v, 2)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window,sink", [(24, 8), (16, 0), (100, 4)])
+def test_windowed_equals_naive(window, sink):
+    q = jax.random.normal(KEY, (1, 64, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 1, 16))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 1, 16))
+    out = mha(q, k, v, n_kv_heads=1, window=window, sink=sink,
+              block_q=16, block_kv=16)
+    ref = naive_mha(q, k, v, 1, window=window, sink=sink)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_window_sink_overlap_regression():
+    """Regression: rounding the window start below the sink must not
+    double-count sink tokens (fixed in the blocked windowed path)."""
+    q = jax.random.normal(KEY, (1, 128, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 1, 16))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 128, 1, 16))
+    out = mha(q, k, v, n_kv_heads=1, window=48, sink=16,
+              block_q=32, block_kv=32)
+    ref = naive_mha(q, k, v, 1, window=48, sink=16)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_chunk_offset_cross_kv():
+    """AR-DiT pattern: q for a chunk at offset, longer KV."""
+    q = jax.random.normal(KEY, (1, 32, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 96, 4, 16))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 96, 4, 16))
+    out = mha(q, k, v, n_kv_heads=4, q_offset=64)
+    ref = naive_mha(q, k, v, 4, q_offset=64)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_full_attention():
+    S = 17
+    q_all = jax.random.normal(KEY, (2, S, 4, 8))
+    k_all = jax.random.normal(jax.random.PRNGKey(2), (2, S, 2, 8))
+    v_all = jax.random.normal(jax.random.PRNGKey(3), (2, S, 2, 8))
+    full = naive_mha(q_all, k_all, v_all, 2)
+    cache_k = jnp.pad(k_all, ((0, 0), (0, 7), (0, 0), (0, 0)))
+    cache_v = jnp.pad(v_all, ((0, 0), (0, 7), (0, 0), (0, 0)))
+    out = decode_attention(q_all[:, -1:], cache_k, cache_v, n_kv_heads=2,
+                           cache_len=jnp.full((2,), S, jnp.int32))
+    np.testing.assert_allclose(out[:, 0], full[:, -1], rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_decode_windowed_mask():
+    S, W, SK = 20, 6, 2
+    q = jax.random.normal(KEY, (1, 1, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 2, 8))
+    out = decode_attention(q, k, v, n_kv_heads=2,
+                           cache_len=jnp.array([S]), window=W, sink=SK)
+    # manual: valid = pos < S and (pos > S-1-W or pos < SK)
+    kk, vv = k[:, :S], v[:, :S]
+    pos = jnp.arange(S)
+    valid = (pos > S - 1 - W) | (pos < SK)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk[:, :, :, :]) / np.sqrt(8)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_sparse_keep_list_invariants():
+    for n_kv in (1, 3, 10, 40):
+        for rho in (0.0, 0.5, 0.9):
+            keep = sparse_keep_list(1, [n_kv], rho)[0]
+            assert 0 in keep                 # sink block always kept
+            assert (n_kv - 1) in keep        # diagonal always kept
+            assert keep == sorted(set(keep))
+    # higher sparsity keeps fewer blocks
+    k_lo = len(sparse_keep_list(1, [32], 0.3)[0])
+    k_hi = len(sparse_keep_list(1, [32], 0.9)[0])
+    assert k_hi < k_lo
+
+
+def test_sparsity_reduces_to_dense_at_zero():
+    q = jax.random.normal(KEY, (1, 64, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 2, 16))
+    a = mha(q, k, v, n_kv_heads=2, sparsity=0.0, block_q=16, block_kv=16)
+    b = mha(q, k, v, n_kv_heads=2, block_q=16, block_kv=16)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

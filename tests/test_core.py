@@ -1,0 +1,224 @@
+"""SlackServe core: service credit, tiers, queues, re-homing, elastic
+SP, BMPR — the paper's control mechanisms, unit-tested."""
+import pytest
+
+from repro.core import elastic_sp, queues, rehoming, slack
+from repro.core.bmpr import (BMPR, FixedLevelSwitcher, StaticFidelity,
+                             pareto_frontier)
+from repro.core.fidelity import HIGHEST_QUALITY, candidate_space
+from repro.core.types import ClusterView, Stream, Tier, Worker
+from repro.profiler.profiles import get_profile
+
+
+def mk_stream(sid, home=0, deadline=10.0, t_next=1.0, running=None,
+              remaining=0.0, **kw):
+    s = Stream(sid=sid, arrival=0.0, target_chunks=10, chunk_seconds=0.75,
+               home=home, ttfc_slack=3.0, next_deadline=deadline, **kw)
+    s.t_next = t_next
+    s.running_on = running
+    s.remaining = remaining
+    return s
+
+
+def mk_view(n_workers=4, per_node=2):
+    return ClusterView({}, [Worker(w, node=w // per_node)
+                            for w in range(n_workers)], per_node)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 + tiers
+# ---------------------------------------------------------------------------
+
+def test_service_credit_formula():
+    s = mk_stream(0, deadline=10.0, t_next=2.0)
+    assert slack.service_credit(s, now=4.0) == pytest.approx(10 - 4 - 2)
+    s.running_on = (0,)
+    s.remaining = 1.5
+    assert slack.service_credit(s, now=4.0) == pytest.approx(
+        10 - 4 - (1.5 + 2.0))
+
+
+def test_tier_thresholds_alpha():
+    t = 1.0
+    assert slack.classify(1.9, t, alpha=2.0) is Tier.URGENT
+    assert slack.classify(2.0, t, alpha=2.0) is Tier.NORMAL
+    assert slack.classify(4.0, t, alpha=2.0) is Tier.NORMAL
+    assert slack.classify(4.1, t, alpha=2.0) is Tier.RELAXED
+    # alpha sweep (Table 3): thresholds scale
+    assert slack.classify(2.5, t, alpha=3.0) is Tier.URGENT
+    assert slack.classify(6.5, t, alpha=3.0) is Tier.RELAXED
+
+
+def test_queue_order_and_eviction():
+    view = mk_view()
+    for i, ddl in enumerate([5.0, 2.0, 9.0]):
+        s = mk_stream(i, deadline=ddl)
+        slack.update_stream_credit(s, now=0.0)
+        view.streams[i] = s
+        view.workers[0].queue.append(i)
+    queues.order_all(view)
+    assert view.workers[0].queue == [1, 0, 2]      # lowest credit first
+    # credit-aware eviction evicts the HIGHEST credit (least likely stall)
+    victim = queues.pick_eviction([0, 1, 2], view.streams)
+    assert victim == 2
+    assert queues.pick_eviction([0, 1, 2], view.streams, protect=2) == 0
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: re-homing
+# ---------------------------------------------------------------------------
+
+def _loaded_view():
+    view = mk_view(4, per_node=2)
+    # w0: two queued URGENT; w1: RELAXED only; w2 (other node): empty
+    for i, (home, ddl) in enumerate([(0, 1.0), (0, 1.2), (1, 30.0)]):
+        s = mk_stream(i, home=home, deadline=ddl)
+        slack.update_stream_credit(s, now=0.0)
+        view.streams[i] = s
+        view.workers[home].queue.append(i)
+    return view
+
+
+def test_rehoming_moves_urgent_to_relaxed_intranode_first():
+    view = _loaded_view()
+    plan = rehoming.plan_rehoming(view, now=0.0)
+    assert plan, "should migrate"
+    assert all(m.src == 0 for m in plan)
+    # intra-node receiver (w1, same node as w0) preferred over w2/w3
+    assert plan[0].dst == 1
+    assert not plan[0].cross_node
+    # lowest-credit urgent stream moves first
+    assert plan[0].sid == 0
+
+
+def test_rehoming_caps_and_cooldown():
+    view = mk_view(4, per_node=2)
+    for i in range(5):                  # five urgent on w0
+        s = mk_stream(i, home=0, deadline=1.0 + 0.01 * i)
+        slack.update_stream_credit(s, now=0.0)
+        view.streams[i] = s
+        view.workers[0].queue.append(i)
+    plan = rehoming.plan_rehoming(view, now=0.0)
+    assert len(plan) <= rehoming.CAP_SEND        # send cap = 2
+    per_dst = {}
+    for m in plan:
+        per_dst[m.dst] = per_dst.get(m.dst, 0) + 1
+    assert all(v <= rehoming.CAP_RECV for v in per_dst.values())
+    # migrated streams are in cooldown: immediate replan moves OTHERS
+    plan2 = rehoming.plan_rehoming(view, now=1.0)
+    assert not ({m.sid for m in plan} & {m.sid for m in plan2})
+    # after the cooldown they are eligible again
+    for s in view.streams.values():
+        s.next_deadline = 1.0 + 61.0             # still urgent later
+        slack.update_stream_credit(s, now=61.0)
+    plan3 = rehoming.plan_rehoming(view, now=100.0)
+    assert plan3
+
+
+def test_rehoming_no_receivers_under_global_pressure():
+    view = mk_view(2, per_node=2)
+    for i in range(4):
+        s = mk_stream(i, home=i % 2, deadline=0.5)
+        slack.update_stream_credit(s, now=0.0)
+        view.streams[i] = s
+        view.workers[i % 2].queue.append(i)
+    assert rehoming.plan_rehoming(view, now=0.0) == []
+
+
+# ---------------------------------------------------------------------------
+# SS4.3: elastic SP
+# ---------------------------------------------------------------------------
+
+def test_elastic_sp_trigger_and_donor_selection():
+    view = mk_view(4, per_node=2)
+    s0 = mk_stream(0, home=0, deadline=-1.0)       # projected miss: C<0
+    r1 = mk_stream(1, home=1, deadline=50.0)       # relaxed on w1
+    r3 = mk_stream(2, home=3, deadline=90.0)       # relaxed, OTHER node
+    for s in (s0, r1, r3):
+        slack.update_stream_credit(s, now=0.0)
+        view.streams[s.sid] = s
+        view.workers[s.home].queue.append(s.sid)
+    decs = elastic_sp.plan_elastic_sp(view, now=0.0)
+    expands = [d for d in decs if d.kind == "expand"]
+    assert len(expands) == 1 and expands[0].sid == 0
+    assert expands[0].donor == 1                   # same-node donor only
+
+
+def test_elastic_sp_release_at_normal():
+    view = mk_view(2, per_node=2)
+    s = mk_stream(0, home=0, deadline=50.0)        # recovered
+    s.sp_donor = 1
+    view.workers[1].donated_to = 0
+    slack.update_stream_credit(s, now=0.0)
+    view.streams[0] = s
+    decs = elastic_sp.plan_elastic_sp(view, now=0.0)
+    assert any(d.kind == "release" and d.sid == 0 for d in decs)
+
+
+def test_elastic_sp_exclude_just_migrated():
+    view = mk_view(4, per_node=2)
+    s0 = mk_stream(0, home=0, deadline=-1.0)
+    r1 = mk_stream(1, home=1, deadline=50.0)
+    for s in (s0, r1):
+        slack.update_stream_credit(s, now=0.0)
+        view.streams[s.sid] = s
+        view.workers[s.home].queue.append(s.sid)
+    decs = elastic_sp.plan_elastic_sp(view, now=0.0, exclude={0})
+    assert not [d for d in decs if d.kind == "expand"]
+
+
+# ---------------------------------------------------------------------------
+# SS5: BMPR
+# ---------------------------------------------------------------------------
+
+def test_pareto_frontier_nondominated_sorted():
+    prof = get_profile()
+    f = pareto_frontier(prof)
+    pts = f.points
+    assert len(pts) >= 5
+    for i in range(len(pts) - 1):
+        assert pts[i].latency < pts[i + 1].latency
+        assert pts[i].quality < pts[i + 1].quality
+    # every candidate is dominated by or equal to some frontier point
+    for p in prof.points:
+        assert any(q.latency <= p.latency and q.quality >= p.quality
+                   for q in pts)
+
+
+def test_bmpr_quality_mode_picks_best_within_budget():
+    b = BMPR(get_profile())
+    d = b.select(10.0)
+    assert d.mode == "quality"
+    assert d.fidelity == HIGHEST_QUALITY
+
+
+def test_bmpr_speed_recovery_respects_floor():
+    b = BMPR(get_profile())
+    d = b.select(0.0)                   # impossible budget
+    assert d.mode == "speed-recovery"
+    assert d.quality >= b.frontier.q_floor
+    # NOT simply the globally fastest config (which is below the floor)
+    fastest = min(b.profile.points, key=lambda p: p.latency)
+    assert d.latency > fastest.latency
+    assert fastest.quality < b.frontier.q_floor
+
+
+def test_bmpr_monotone_quality_in_budget():
+    b = BMPR(get_profile())
+    quals = [b.select(x).quality for x in (0.25, 0.4, 0.6, 0.9)]
+    assert quals == sorted(quals)
+
+
+def test_fixed_level_switcher_three_levels():
+    f = FixedLevelSwitcher(get_profile())
+    assert f.select(10.0).mode == "slow"
+    assert f.select(0.05).mode == "fast"
+
+
+def test_static_policy_constant():
+    p = StaticFidelity()
+    assert p.select(0.01).fidelity == p.select(10.0).fidelity
+
+
+def test_fidelity_space_is_90():
+    assert len(candidate_space()) == 90

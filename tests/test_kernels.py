@@ -1,0 +1,199 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_mha_pallas
+from repro.kernels.flash_attention.ref import flash_mha_ref
+from repro.kernels.paged_attention.kernel import paged_decode_attention_pallas
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.fp8_matmul.kernel import fp8_matmul_pallas
+from repro.kernels.fp8_matmul.ref import fp8_matmul_ref, quantize_fp8_ref
+from repro.kernels.ssd_scan.kernel import ssd_pallas
+from repro.kernels.ssd_scan.ref import ssd_ref, ssd_decode_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, Sq, Skv, Hq, Hkv, D, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 3)
+    return (jax.random.normal(ks[0], (B, Sq, Hq, D), dtype),
+            jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype),
+            jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype))
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,D", [
+        (2, 64, 64, 4, 2, 16),
+        (1, 128, 128, 2, 2, 32),
+        (1, 96, 96, 8, 1, 64),
+    ])
+    def test_causal_gqa(self, B, Sq, Skv, Hq, Hkv, D):
+        q, k, v = _qkv(B, Sq, Skv, Hq, Hkv, D)
+        out = flash_mha_pallas(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2), block_q=32, block_kv=32,
+                               interpret=True).swapaxes(1, 2)
+        ref = flash_mha_ref(q, k, v, n_kv_heads=Hkv,
+                            block_q=32, block_kv=32)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+    def test_non_causal(self):
+        q, k, v = _qkv(2, 64, 64, 4, 4, 16)
+        out = flash_mha_pallas(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2), causal=False,
+                               block_q=32, block_kv=32,
+                               interpret=True).swapaxes(1, 2)
+        ref = flash_mha_ref(q, k, v, n_kv_heads=4, causal=False)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+    def test_chunk_offset(self):
+        q, k, v = _qkv(1, 64, 128, 4, 4, 16)
+        out = flash_mha_pallas(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2), q_offset=64,
+                               block_q=32, block_kv=32,
+                               interpret=True).swapaxes(1, 2)
+        ref = flash_mha_ref(q, k, v, n_kv_heads=4, q_offset=64,
+                            block_q=32, block_kv=32)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("window,sink", [(48, 16), (40, 0), (96, 32)])
+    def test_sink_window(self, window, sink):
+        q, k, v = _qkv(1, 128, 128, 2, 1, 16)
+        out = flash_mha_pallas(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2), window=window, sink=sink,
+                               block_q=32, block_kv=32,
+                               interpret=True).swapaxes(1, 2)
+        ref = flash_mha_ref(q, k, v, n_kv_heads=1, window=window,
+                            sink=sink, block_q=32, block_kv=32)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("rho", [0.6, 0.7, 0.9])
+    def test_block_sparse(self, rho):
+        q, k, v = _qkv(1, 256, 256, 4, 2, 16)
+        out = flash_mha_pallas(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2), sparsity=rho,
+                               block_q=32, block_kv=32,
+                               interpret=True).swapaxes(1, 2)
+        ref = flash_mha_ref(q, k, v, n_kv_heads=2, sparsity=rho,
+                            block_q=32, block_kv=32)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+    def test_bf16(self):
+        q, k, v = _qkv(1, 64, 64, 2, 2, 32, jnp.bfloat16)
+        out = flash_mha_pallas(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2), block_q=32, block_kv=32,
+                               interpret=True).swapaxes(1, 2)
+        ref = flash_mha_ref(q, k, v, n_kv_heads=2)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("B,Hq,Hkv,D,page,npg,ptot", [
+        (2, 4, 2, 16, 8, 4, 16),
+        (3, 8, 8, 32, 16, 3, 12),
+        (1, 4, 1, 64, 8, 6, 8),
+    ])
+    def test_vs_ref(self, B, Hq, Hkv, D, page, npg, ptot):
+        ks = jax.random.split(KEY, 5)
+        q = jax.random.normal(ks[0], (B, Hq, D))
+        kp = jax.random.normal(ks[1], (ptot, page, Hkv, D))
+        vp = jax.random.normal(ks[2], (ptot, page, Hkv, D))
+        bt = jax.random.randint(ks[3], (B, npg), 0, ptot)
+        lengths = jax.random.randint(ks[4], (B,), 1, npg * page + 1)
+        out = paged_decode_attention_pallas(q, kp, vp, bt, lengths,
+                                            interpret=True)
+        ref = paged_decode_attention_ref(q, kp, vp, bt, lengths)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+    def test_length_one(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, 4, 16))
+        kp = jax.random.normal(ks[1], (4, 8, 2, 16))
+        vp = jax.random.normal(ks[2], (4, 8, 2, 16))
+        bt = jnp.zeros((2, 2), jnp.int32)
+        lengths = jnp.ones((2,), jnp.int32)
+        out = paged_decode_attention_pallas(q, kp, vp, bt, lengths,
+                                            interpret=True)
+        ref = paged_decode_attention_ref(q, kp, vp, bt, lengths)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+class TestFp8Matmul:
+    @pytest.mark.parametrize("M,K,N", [(64, 64, 64), (128, 256, 64),
+                                       (32, 32, 32)])
+    def test_vs_ref(self, M, K, N):
+        ks = jax.random.split(KEY, 2)
+        x = jax.random.normal(ks[0], (M, K))
+        w = jax.random.normal(ks[1], (K, N))
+        xq, sx = quantize_fp8_ref(x, 1)
+        wq, sw = quantize_fp8_ref(w, 0)
+        out = fp8_matmul_pallas(xq, wq, sx, sw, block_m=32, block_n=32,
+                                block_k=32, interpret=True)
+        ref = fp8_matmul_ref(xq, wq, sx, sw)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_quantization_error_bounded(self):
+        x = jax.random.normal(KEY, (64, 128))
+        xq, sx = quantize_fp8_ref(x, 1)
+        deq = xq.astype(jnp.float32) * sx
+        # e4m3 relative error within a scaled block is < 2^-2 of the max
+        err = jnp.max(jnp.abs(deq - x))
+        amax = jnp.max(jnp.abs(x))
+        assert float(err) < float(amax) * 0.07
+
+
+class TestSSD:
+    @pytest.mark.parametrize("B,S,H,P,N,chunk", [
+        (2, 64, 4, 16, 8, 16),
+        (1, 100, 2, 8, 16, 32),     # non-divisible padding path
+        (2, 33, 3, 8, 4, 8),
+    ])
+    def test_vs_ref(self, B, S, H, P, N, chunk):
+        ks = jax.random.split(KEY, 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+        Bm = jax.random.normal(ks[3], (B, S, 1, N))
+        Cm = jax.random.normal(ks[4], (B, S, 1, N))
+        y1, f1 = ssd_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+        y2, f2 = ssd_ref(x, dt, A, Bm, Cm, chunk=chunk)
+        np.testing.assert_allclose(y1, y2, rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(f1, f2, rtol=5e-4, atol=5e-4)
+
+    def test_init_state_continuation(self):
+        ks = jax.random.split(KEY, 6)
+        B, S, H, P, N = 2, 48, 2, 8, 4
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+        Bm = jax.random.normal(ks[3], (B, S, 1, N))
+        Cm = jax.random.normal(ks[4], (B, S, 1, N))
+        s0 = jax.random.normal(ks[5], (B, H, P, N))
+        y1, f1 = ssd_pallas(x, dt, A, Bm, Cm, chunk=16, init_state=s0,
+                            interpret=True)
+        y2, f2 = ssd_ref(x, dt, A, Bm, Cm, chunk=16, init_state=s0)
+        np.testing.assert_allclose(y1, y2, rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(f1, f2, rtol=5e-4, atol=5e-4)
+
+    def test_chunked_equals_sequential(self):
+        """SSD chunked scan == naive per-token recurrence."""
+        ks = jax.random.split(KEY, 5)
+        B, S, H, P, N = 1, 19, 2, 4, 4
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+        Bm = jax.random.normal(ks[3], (B, S, 1, N))
+        Cm = jax.random.normal(ks[4], (B, S, 1, N))
+        st = jnp.zeros((B, H, P, N))
+        ys = []
+        for t in range(S):
+            y, st = ssd_decode_ref(x[:, t], dt[:, t], A, Bm[:, t],
+                                   Cm[:, t], st)
+            ys.append(y)
+        y_seq = jnp.stack(ys, 1)
+        y_chunk, f_chunk = ssd_ref(x, dt, A, Bm, Cm, chunk=8)
+        np.testing.assert_allclose(y_chunk, y_seq, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(f_chunk, st, rtol=2e-4, atol=2e-4)

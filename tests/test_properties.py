@@ -1,0 +1,160 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import slack
+from repro.core.bmpr import BMPR
+from repro.core.types import Stream, Tier
+from repro.kernels.fp8_matmul.ref import quantize_fp8_ref
+from repro.kernels.ssd_scan.ref import ssd_decode_ref, ssd_ref
+from repro.models import kvcache
+from repro.profiler.profiles import get_profile
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked == sequential for arbitrary shapes/chunks
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(s=st.integers(3, 40), h=st.integers(1, 3), p=st.integers(1, 8),
+       n=st.integers(1, 8), chunk=st.integers(2, 16), seed=st.integers(0, 99))
+def test_ssd_chunked_equals_sequential(s, h, p, n, chunk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (1, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (1, s, 1, n))
+    Cm = jax.random.normal(ks[4], (1, s, 1, n))
+    y_c, f_c = ssd_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    state = jnp.zeros((1, h, p, n))
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_ref(x[:, t], dt[:, t], A, Bm[:, t],
+                                  Cm[:, t], state)
+        ys.append(y)
+    np.testing.assert_allclose(y_c, jnp.stack(ys, 1), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(f_c, state, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# ring cache: ring_dest/place_prefill consistency
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(s=st.integers(1, 60), sink=st.integers(0, 8),
+       window=st.integers(2, 20))
+def test_ring_cache_holds_exactly_window_and_sink(s, sink, window):
+    cap = kvcache.capacity(s, window, sink)
+    assert cap <= s and cap <= sink + window
+    # simulate writes token by token; cache must end holding the sink
+    # tokens plus the last min(window, s - sink) tokens
+    slots = -np.ones(cap, np.int64)
+    for pos in range(s):
+        d = int(kvcache.ring_dest(jnp.asarray(pos), cap, sink))
+        assert 0 <= d < cap
+        slots[d] = pos
+    expected = set(range(min(sink, s)))
+    ring = cap - sink
+    expected |= set(range(max(min(sink, s), s - ring), s))
+    assert set(slots[slots >= 0].tolist()) == expected
+
+    # place_prefill puts the same tokens in the same slots
+    k = jnp.arange(1, s + 1, dtype=jnp.float32).reshape(1, s, 1, 1)
+    placed = np.asarray(kvcache.place_prefill(k, cap, sink, window))[0, :, 0, 0]
+    for slot in range(cap):
+        if slots[slot] >= 0:
+            assert placed[slot] == slots[slot] + 1
+
+
+# ---------------------------------------------------------------------------
+# fp8 quantization error bound
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 16), k=st.integers(1, 64), seed=st.integers(0, 99),
+       scale=st.floats(1e-3, 1e3))
+def test_fp8_quant_relative_error(m, k, seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, k)) * scale
+    q, s = quantize_fp8_ref(x, axis=1)
+    deq = q.astype(jnp.float32) * s
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    err = jnp.abs(deq - x)
+    # e4m3 has >= 2 mantissa bits near amax: error <= amax/8 everywhere
+    assert bool(jnp.all(err <= amax / 8.0 + 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# service credit / tiers
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(ddl=st.floats(-10, 100), now=st.floats(0, 100),
+       t_next=st.floats(0.01, 5), rem=st.floats(0, 5),
+       running=st.booleans())
+def test_service_credit_definition(ddl, now, t_next, rem, running):
+    s = Stream(sid=0, arrival=0.0, target_chunks=1, chunk_seconds=0.75,
+               home=0, ttfc_slack=1.0, next_deadline=ddl)
+    s.t_next = t_next
+    s.remaining = rem
+    s.running_on = (0,) if running else None
+    c = slack.service_credit(s, now)
+    expected = (ddl - now) - ((rem if running else 0.0) + t_next)
+    assert c == np.float64(expected)
+    tier = slack.classify(c, t_next)
+    if c < 2 * t_next:
+        assert tier is Tier.URGENT
+    elif c > 4 * t_next:
+        assert tier is Tier.RELAXED
+    else:
+        assert tier is Tier.NORMAL
+
+
+# ---------------------------------------------------------------------------
+# BMPR: selection is Pareto-consistent for any budget
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(budget=st.floats(0.0, 3.0))
+def test_bmpr_selection_invariants(budget):
+    b = BMPR(get_profile())
+    d = b.select(budget)
+    assert d.quality >= b.frontier.q_floor
+    if d.mode == "quality":
+        assert d.latency <= budget
+        # no frontier point within budget+floor has higher quality
+        for p in b.frontier.points:
+            if p.latency <= budget and p.quality >= b.frontier.q_floor:
+                assert d.quality >= p.quality
+    else:
+        # infeasible budget: minimal latency above the floor
+        for p in b.frontier.points:
+            if p.quality >= b.frontier.q_floor:
+                assert d.latency <= p.latency
+
+
+# ---------------------------------------------------------------------------
+# online-softmax merge is order-robust (flash attention foundation)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 99), n_seg=st.integers(2, 5))
+def test_online_softmax_merge_associativity(seed, n_seg):
+    from repro.models.attention import (_init_acc, _merge, _segment_attn,
+                                        _finalize)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, H, G, Q, D, S = 1, 1, 2, 4, 8, 8 * n_seg
+    q = jax.random.normal(ks[0], (B, Q, H, G, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    full = _finalize(_merge(_init_acc(B, H, G, Q, D),
+                            _segment_attn(q, k, v, None, 1.0)), jnp.float32)
+    acc = _init_acc(B, H, G, Q, D)
+    for i in range(n_seg):
+        seg = slice(i * 8, (i + 1) * 8)
+        acc = _merge(acc, _segment_attn(q, k[:, seg], v[:, seg], None, 1.0))
+    np.testing.assert_allclose(_finalize(acc, jnp.float32), full,
+                               rtol=1e-5, atol=1e-5)

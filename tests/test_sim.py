@@ -1,0 +1,122 @@
+"""Cluster simulator end-to-end: workloads, policies, metrics."""
+import pytest
+
+from repro.sched_sim import cost_model as cm
+from repro.sched_sim.metrics import (stall_histogram, summarize,
+                                     transfer_stats)
+from repro.sched_sim.policies import SDV2Policy, make_policy
+from repro.sched_sim.simulator import SimConfig, Simulator
+from repro.sched_sim.workloads import (WORKLOADS, burst, pause,
+                                       prompt_switch, steady, trace)
+
+
+class TestWorkloads:
+    def test_steady_counts_and_rate(self):
+        specs = steady(n=200, rate=2.0, seed=1)
+        assert len(specs) == 200
+        assert all(s.frames in cm.STREAM_FRAMES for s in specs)
+        # Poisson(2/s): 200 arrivals in ~100s
+        assert 60 < specs[-1].arrival < 160
+
+    def test_burst_preserves_total_and_synchronizes(self):
+        specs = burst(n=200, seed=0)
+        assert len(specs) == 200
+        from collections import Counter
+        c = Counter(s.arrival for s in specs)
+        peaks = [v for v in c.values() if v >= 10]
+        assert len(peaks) == 3                     # three burst points
+
+    def test_prompt_switch_counts_by_length(self):
+        specs = prompt_switch(n=100, seed=0)
+        for s in specs:
+            want = {81: 1, 129: 2, 161: 2, 241: 3}[s.frames]
+            assert len(s.switches) == want
+            assert all(0 < t < s.duration for t in s.switches)
+
+    def test_pause_duration_fraction(self):
+        specs = pause(n=50, seed=0)
+        for s in specs:
+            for (_, dur) in s.pauses:
+                assert dur == pytest.approx(0.2 * s.duration)
+
+    def test_trace_nonstationary(self):
+        specs = trace(n=300, seed=0)
+        assert len(specs) == 300
+        gaps = [specs[i + 1].arrival - specs[i].arrival
+                for i in range(len(specs) - 1)]
+        assert max(gaps) > 5.0                     # idle gaps exist
+        assert min(gaps) == 0.0                    # bursts exist
+
+
+class TestEndToEnd:
+    def _run(self, policy_name, n=120, workload="steady"):
+        specs = WORKLOADS[workload](n=n, rate=1.0, seed=0)
+        cfg = (SDV2Policy.sim_config() if policy_name == "sdv2"
+               else SimConfig())
+        return Simulator(cfg, specs, make_policy(policy_name)).run()
+
+    def test_slackserve_beats_baselines(self):
+        scores = {}
+        for p in ("slackserve", "sdv2", "ts", "ts-chunk"):
+            scores[p] = summarize(self._run(p)).qoe
+        assert scores["slackserve"] > 0.8
+        for p in ("sdv2", "ts", "ts-chunk"):
+            assert scores["slackserve"] > scores[p], scores
+
+    def test_ablation_order(self):
+        """Fig. 12: each mechanism adds QoE."""
+        qoe = {}
+        for p in ("credit-only", "credit+bmpr", "credit+bmpr+rehome",
+                  "slackserve"):
+            qoe[p] = summarize(self._run(p)).qoe
+        assert qoe["credit-only"] < qoe["credit+bmpr"]
+        assert qoe["credit+bmpr"] <= qoe["credit+bmpr+rehome"] + 0.02
+        assert qoe["slackserve"] >= qoe["credit+bmpr"] - 0.02
+
+    def test_all_streams_complete(self):
+        res = self._run("slackserve", n=60)
+        assert all(s.done for s in res.streams.values())
+        for s in res.streams.values():
+            assert len(s.ready_times) == s.target_chunks
+            assert len(s.deadlines) == s.target_chunks
+
+    def test_quality_floor_bounds_degradation(self):
+        """SS7.5: BMPR bounds quality loss even under pressure."""
+        res = self._run("slackserve", n=150)
+        s = summarize(res)
+        assert s.quality > 0.985 * 81.3            # < 1.5% drop
+
+    def test_pause_accumulates_slack(self):
+        q_st = summarize(self._run("slackserve", workload="steady")).qoe
+        q_pa = summarize(self._run("slackserve", workload="pause")).qoe
+        assert q_pa >= q_st - 0.01                 # pause least adversarial
+
+    def test_transfer_protocol_ordering(self):
+        """Fig. 13: async-stream >= async-nostream >= sync on QoE."""
+        specs = WORKLOADS["steady"](n=120, rate=1.0, seed=0)
+        qoe = {}
+        for proto in ("sync", "async-nostream", "async-stream"):
+            res = Simulator(SimConfig(transfer_protocol=proto), specs,
+                            make_policy("slackserve")).run()
+            qoe[proto] = summarize(res).qoe
+        assert qoe["async-stream"] >= qoe["sync"] - 0.02
+        st = transfer_stats(res)
+        assert st["avg_residual_ms"] <= st["avg_ms"]
+
+    def test_stall_histogram_consistency(self):
+        res = self._run("ts", n=80)
+        hist = stall_histogram(res)
+        total_events = sum(len(s.stall_events)
+                           for s in res.streams.values())
+        assert sum(hist.values()) == total_events
+
+    def test_elastic_sp_invariants(self):
+        """A donor serves at most one borrowed stream; donors and homes
+        are disjoint at any dispatch."""
+        specs = WORKLOADS["burst"](n=100, rate=1.0, seed=0)
+        sim = Simulator(SimConfig(), specs, make_policy("slackserve"))
+        res = sim.run()
+        # post-run: all donations released for finished streams
+        for s in res.streams.values():
+            if s.done:
+                assert s.sp_donor is None

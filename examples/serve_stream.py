@@ -3,6 +3,11 @@ generation with playout-slack bookkeeping (the paper's mechanism on a
 live model instead of the simulator).
 
     PYTHONPATH=src python examples/serve_stream.py [n_streams] [chunks]
+    PYTHONPATH=src python examples/serve_stream.py --batched [n] [chunks]
+
+``--batched`` serves all streams through the credit-ordered micro-batch
+executor (one jitted denoise step per sub-batch) instead of one stream
+at a time.
 """
 import os
 import sys
@@ -13,10 +18,13 @@ from repro.serve.executor import serve_session
 
 
 def main():
-    n_streams = int(sys.argv[1]) if len(sys.argv) > 1 else 2
-    chunks = int(sys.argv[2]) if len(sys.argv) > 2 else 4
+    args = [a for a in sys.argv[1:] if a != "--batched"]
+    batched = "--batched" in sys.argv[1:]
+    n_streams = int(args[0]) if args else 2
+    chunks = int(args[1]) if len(args) > 1 else 4
     streams = serve_session(n_streams=n_streams,
-                            chunks_per_stream=chunks)
+                            chunks_per_stream=chunks,
+                            batched=batched)
     print("\nper-stream fidelity decisions:")
     for s in streams:
         print(f"  stream {s.sid}: {s.fidelity_log}")

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tiered test runner.
+#
+#   scripts/run_tests.sh            fast tier (-m "not slow"), < 2 min
+#   scripts/run_tests.sh --slow     full suite, including JAX-compiling
+#                                   model/kernel/sharding tests
+#
+# Extra arguments are forwarded to pytest, e.g.
+#   scripts/run_tests.sh -k batcher -x
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--slow" ]]; then
+    shift
+    exec python -m pytest -q "$@"
+fi
+exec python -m pytest -q -m "not slow" "$@"

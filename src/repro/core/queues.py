@@ -23,19 +23,32 @@ def order_all(view: ClusterView) -> None:
         order_queue(w, view.streams)
 
 
-def next_dispatch(worker: Worker, streams: Dict[int, Stream],
-                  now: float) -> Optional[int]:
-    """Lowest-credit runnable stream on this worker (paused/migrating
-    streams are skipped; atomic safety keeps mid-transfer streams out of
-    the queue entirely, SS4.4)."""
+def next_dispatch_set(worker: Worker, streams: Dict[int, Stream],
+                      now: float,
+                      max_batch: Optional[int] = None) -> List[int]:
+    """Credit-ordered runnable streams on this worker, lowest credit
+    first, up to ``max_batch`` (paused/migrating streams are skipped;
+    atomic safety keeps mid-transfer streams out of the queue entirely,
+    SS4.4).  The batched executor composes its denoise-step micro-batch
+    from this set; ``next_dispatch`` is the sequential special case."""
+    out: List[int] = []
     for sid in worker.queue:
         s = streams[sid]
         if s.done or s.finished:
             continue
-        if s.paused_until > now and s.chunks_done >= s.target_chunks:
+        if s.paused_until > now:
             continue
-        return sid
-    return None
+        out.append(sid)
+        if max_batch is not None and len(out) >= max_batch:
+            break
+    return out
+
+
+def next_dispatch(worker: Worker, streams: Dict[int, Stream],
+                  now: float) -> Optional[int]:
+    """Lowest-credit runnable stream on this worker (or None)."""
+    sids = next_dispatch_set(worker, streams, now, max_batch=1)
+    return sids[0] if sids else None
 
 
 def pick_eviction(resident_sids: List[int], streams: Dict[int, Stream],

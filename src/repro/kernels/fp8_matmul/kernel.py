@@ -14,6 +14,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 
 def _kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_scr):
@@ -60,7 +64,7 @@ def fp8_matmul_pallas(x_q: jax.Array, w_q: jax.Array,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, ki: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_q, w_q, sx, sw)

@@ -11,6 +11,8 @@ Two modes:
     PYTHONPATH=src python -m repro.launch.serve --sim \
         --workload steady --policy slackserve --streams 300
     PYTHONPATH=src python -m repro.launch.serve --real --streams 2
+    PYTHONPATH=src python -m repro.launch.serve --real --batched \
+        --streams 4 --max-batch 4
 """
 from __future__ import annotations
 
@@ -29,14 +31,20 @@ def main() -> None:
     ap.add_argument("--model", default="causal-forcing")
     ap.add_argument("--chunks", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batched", action="store_true",
+                    help="credit-ordered micro-batch executor (--real)")
+    ap.add_argument("--max-batch", type=int, default=4)
     args = ap.parse_args()
 
     if args.real:
         from repro.serve.executor import serve_session
         streams = serve_session(n_streams=args.streams,
-                                chunks_per_stream=args.chunks)
+                                chunks_per_stream=args.chunks,
+                                batched=args.batched,
+                                max_batch=args.max_batch)
+        mode = "batched" if args.batched else "sequential"
         print(f"served {len(streams)} streams x "
-              f"{args.chunks} chunks (real model)")
+              f"{args.chunks} chunks (real model, {mode})")
         return
 
     from repro.sched_sim.metrics import summarize, transfer_stats

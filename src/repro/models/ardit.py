@@ -19,6 +19,7 @@ which there are at most ``window_chunks + 1``.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
@@ -28,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed.logical import shard
+from repro.models import kvcache
 from repro.models import layers as L
 from repro.models.attention import mha, sparse_keep_list
 
@@ -139,25 +141,43 @@ def cache_sparse_index(cfg: ModelConfig, ctx_len: int,
 
 def chunk_forward(cfg: ModelConfig, p: Params, x_chunk: jax.Array,
                   t: jax.Array, ctx_k: Optional[jax.Array],
-                  ctx_v: Optional[jax.Array], *, q_offset: int,
-                  sparsity: float = 0.0) -> Tuple[jax.Array, Dict[str, Any]]:
+                  ctx_v: Optional[jax.Array], *, q_offset,
+                  sparsity: float = 0.0,
+                  ctx_mask: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One DiT pass over a chunk.
 
     x_chunk [B, T_c, LATENT_CH]; t [B] denoise time; ctx_k/v
     [L, B, ctx_len, Hkv, Dh] visible context (or None).  Returns
     (prediction [B, T_c, LATENT_CH], {"k","v"} per-layer chunk KV).
+
+    ``q_offset`` is either a host int (all streams at the same absolute
+    position) or a per-stream [B] array (the batched executor's stacked
+    streams sit at different chunk indices).  ``ctx_mask`` [B, ctx_len]
+    marks the context tokens each stream may attend to (ring-cache
+    residency + fidelity window + sparsity baked in by the caller);
+    when given, the static ``sparsity`` gather is skipped.
     """
     b, tc, _ = x_chunk.shape
     d = cfg.d_model
     h = shard(x_chunk.astype(p["in_proj"].dtype) @ p["in_proj"],
               "batch", None, "embed")
     temb = _time_embed(p, t, d)                                   # [B,D]
-    positions = q_offset + jnp.arange(tc)
+    q_off = jnp.asarray(q_offset)
+    if q_off.ndim:                                  # per-stream offsets
+        positions = q_off[:, None] + jnp.arange(tc)[None, :]      # [B,Tc]
+    else:
+        positions = q_off + jnp.arange(tc)                        # [Tc]
     ones = jnp.ones((d,), h.dtype)
 
     keep_idx = None
+    kv_mask = None
     if ctx_k is not None:
-        keep_idx = cache_sparse_index(cfg, ctx_k.shape[2], sparsity)
+        if ctx_mask is not None:
+            kv_mask = jnp.concatenate(
+                [ctx_mask, jnp.ones((b, tc), bool)], axis=1)
+        else:
+            keep_idx = cache_sparse_index(cfg, ctx_k.shape[2], sparsity)
 
     def body(hh, xs):
         lp = xs["layer"]
@@ -173,7 +193,8 @@ def chunk_forward(cfg: ModelConfig, p: Params, x_chunk: jax.Array,
             v_all = jnp.concatenate([vc.astype(v.dtype), v], axis=1)
         else:
             k_all, v_all = k, v
-        o = mha(q, k_all, v_all, n_kv_heads=cfg.n_kv_heads, causal=False)
+        o = mha(q, k_all, v_all, n_kv_heads=cfg.n_kv_heads, causal=False,
+                kv_mask=kv_mask)
         o = o.reshape(b, tc, cfg.n_heads * cfg.head_dim)
         hh = hh + g1[:, None, :] * shard(o @ lp["attn"]["wo"],
                                          "batch", None, "embed")
@@ -257,6 +278,46 @@ def sigma_schedule(steps: int) -> np.ndarray:
     return np.linspace(1.0, 0.0, steps + 1)
 
 
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("sparsity",))
+def chunk_step(cfg: ModelConfig, p: Params, x: jax.Array, t: jax.Array,
+               ctx_k: Optional[jax.Array], ctx_v: Optional[jax.Array],
+               q_offset, ctx_mask: Optional[jax.Array],
+               sparsity: float = 0.0):
+    """Jitted one-denoise-step entry for the batched serving path (the
+    sequential ``serve_chunk`` stays eager, as originally shipped).
+    Shapes are static per (ctx extent, batch, sparsity), so a batched
+    session compiles once per (sub-batch size, fill extent)."""
+    return chunk_forward(cfg, p, x, t, ctx_k, ctx_v, q_offset=q_offset,
+                         sparsity=sparsity, ctx_mask=ctx_mask)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def denoise_step(cfg: ModelConfig, p: Params, x: jax.Array, t: jax.Array,
+                 dt: jax.Array, ctx_k: jax.Array, ctx_v: jax.Array,
+                 q_offset: jax.Array, dn_mask: Optional[jax.Array],
+                 cl_mask: Optional[jax.Array], is_denoise: jax.Array):
+    """Fused batched executor step: forward + Euler update in ONE jitted
+    call.  Rows in their denoise phase use the sparsified mask and a
+    nonzero ``dt``; rows in their clean-context phase use the full-window
+    mask and dt=0 (their ``new_kv`` is what matters).  Phase is data, so
+    one executable serves every phase mix of a sub-batch.  Masks are
+    None when the whole (extent-sliced) context is visible to every
+    stream — the fill-homogeneous, unsparsified common case — which
+    skips the per-score mask selects entirely."""
+    if dn_mask is None and cl_mask is None:
+        mask = None
+    else:
+        ones = jnp.ones(ctx_k.shape[1:3], bool)
+        mask = jnp.where(is_denoise[:, None],
+                         ones if dn_mask is None else dn_mask,
+                         ones if cl_mask is None else cl_mask)
+    v_pred, new_kv = chunk_forward(cfg, p, x, t, ctx_k, ctx_v,
+                                   q_offset=q_offset, ctx_mask=mask)
+    x_new = x - dt[:, None, None] * v_pred.astype(x.dtype)
+    return x_new, new_kv
+
+
 def serve_chunk(cfg: ModelConfig, p: Params, cache: Dict[str, Any],
                 noise: jax.Array, fidelity: FidelityConfig = HIGHEST_QUALITY,
                 ) -> Tuple[jax.Array, Dict[str, Any]]:
@@ -287,6 +348,119 @@ def serve_chunk(cfg: ModelConfig, p: Params, cache: Dict[str, Any],
                     for k_, v_ in clean_kv.items()}
     cache = append_chunk_kv(cfg, cache, clean_kv)
     return x, cache
+
+
+# ---------------------------------------------------------------------------
+# batched serving: leading stream-batch axis over per-stream ring caches
+# ---------------------------------------------------------------------------
+# The batched executor stacks streams along the cache batch axis.  Unlike
+# the sequential cache (host-side len/chunks, shapes grow with fill), the
+# batched cache is a fixed-capacity chunk-granular ring per stream: the
+# sink (cond) tokens sit in slots [0, COND_TOKENS) and chunk c lands in
+# the ring slot ``kvcache.chunk_slot(c, window_chunks, ...)``.  Streams at
+# different chunk indices coexist in one batch; per-stream positions come
+# from ``chunks`` and per-stream visibility (residency + fidelity window
+# + sparsity) is a boolean mask, so every denoise step is one jitted call
+# at full-capacity static shapes regardless of fill.
+
+
+def init_batched_cache(cfg: ModelConfig, p: Params, cond: jax.Array,
+                       kv_dtype: Optional[str] = None) -> Dict[str, Any]:
+    """Fixed-capacity ring cache for a batch of streams.
+
+    cond: [B, COND_TOKENS, d_model] per-stream conditioning.  Returns
+    {"k","v"} of [L, B, cap, Hkv, Dh] plus host-side per-stream chunk
+    counts ``chunks`` [B].
+    """
+    dt = jnp.dtype(kv_dtype or cfg.kv_dtype)
+    cond = cond.astype(p["cond_proj"].dtype) @ p["cond_proj"]
+    positions = jnp.arange(COND_TOKENS)
+
+    def kv_of(lp):
+        _, k, v = L.attn_qkv(cfg, lp, cond, positions)
+        return k, v
+
+    ks, vs = jax.vmap(kv_of)(p["layers"]["attn"])   # [L,B,COND,H,Dh]
+    pad = ((0, 0), (0, 0), (0, cache_capacity(cfg) - COND_TOKENS),
+           (0, 0), (0, 0))
+    return {"k": jnp.pad(ks.astype(dt), pad),
+            "v": jnp.pad(vs.astype(dt), pad),
+            "chunks": np.zeros(cond.shape[0], np.int64)}
+
+
+def batched_context_mask(cfg: ModelConfig, chunks: np.ndarray, window: int,
+                         sparsity: float = 0.0) -> np.ndarray:
+    """Per-stream context-visibility mask [B, cap] over the ring cache.
+
+    Marks, for each stream, the sink tokens plus the tokens of its last
+    ``min(window, resident)`` chunks that survive the rho sparsity drop —
+    the exact token set ``visible_context`` + ``cache_sparse_index`` give
+    the sequential path, mapped through the ring permutation.
+    """
+    tc = chunk_tokens(cfg)
+    w_max = cfg.ardit_window_chunks
+    mask = np.zeros((len(chunks), cache_capacity(cfg)), bool)
+    for i, n in enumerate(np.asarray(chunks, np.int64)):
+        w = min(window, int(n), w_max)
+        ctx_len = COND_TOKENS + w * tc
+        keep = cache_sparse_index(cfg, ctx_len, sparsity)
+        idx = np.arange(ctx_len) if keep is None else keep
+        mask[i, idx[idx < COND_TOKENS]] = True
+        body = idx[idx >= COND_TOKENS] - COND_TOKENS
+        if w and body.size:
+            c_abs = (int(n) - w) + body // tc       # absolute chunk index
+            slot = COND_TOKENS + (c_abs % w_max) * tc + body % tc
+            mask[i, slot] = True
+    return mask
+
+
+def append_chunk_kv_batched(cfg: ModelConfig, cache: Dict[str, Any],
+                            new_kv: Dict[str, jax.Array]) -> Dict[str, Any]:
+    """Ring-write one new chunk of KV per stream at its own slot."""
+    tc = chunk_tokens(cfg)
+    chunks = np.asarray(cache["chunks"], np.int64)
+    dest = kvcache.chunk_slot(jnp.asarray(chunks), cfg.ardit_window_chunks,
+                              COND_TOKENS, tc)
+    return {"k": kvcache.write_block_layers(cache["k"], new_kv["k"], dest),
+            "v": kvcache.write_block_layers(cache["v"], new_kv["v"], dest),
+            "chunks": chunks + 1}
+
+
+def serve_chunk_batched(cfg: ModelConfig, p: Params, cache: Dict[str, Any],
+                        noise: jax.Array,
+                        fidelity: FidelityConfig = HIGHEST_QUALITY,
+                        ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One chunk for every stream of a batched cache under one shared
+    fidelity configuration (= one same-fidelity sub-batch).
+
+    noise: [B, T_c, LATENT_CH]; streams may sit at different chunk
+    indices.  Per stream, numerically equivalent to ``serve_chunk``.
+    """
+    tc = chunk_tokens(cfg)
+    chunks = np.asarray(cache["chunks"], np.int64)
+    q_offset = jnp.asarray(COND_TOKENS + chunks * tc, jnp.int32)
+    dn_mask = jnp.asarray(batched_context_mask(
+        cfg, chunks, fidelity.window, fidelity.sparsity))
+
+    grid = sigma_schedule(fidelity.steps)
+    x = noise
+    for i in range(fidelity.steps):
+        t = jnp.full((noise.shape[0],), float(grid[i]), jnp.float32)
+        v_pred, _ = chunk_step(cfg, p, x, t, cache["k"], cache["v"],
+                               q_offset, dn_mask)
+        dt = float(grid[i] - grid[i + 1])
+        x = x - dt * v_pred.astype(x.dtype)
+
+    # clean-context pass sees the full (unsparsified) window
+    clean_mask = jnp.asarray(batched_context_mask(
+        cfg, chunks, fidelity.window))
+    t0 = jnp.zeros((noise.shape[0],), jnp.float32)
+    _, clean_kv = chunk_step(cfg, p, x, t0, cache["k"], cache["v"],
+                             q_offset, clean_mask)
+    if fidelity.quant == "fp8":
+        clean_kv = {k_: v_.astype(jnp.float8_e4m3fn)
+                    for k_, v_ in clean_kv.items()}
+    return x, append_chunk_kv_batched(cfg, cache, clean_kv)
 
 
 # ---------------------------------------------------------------------------

@@ -40,13 +40,17 @@ def _segment_attn(q, k, v, mask, scale):
     s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if mask is not None:
-        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        # [bq,skv] shared across batch, or [B,bq,skv] per-batch (the
+        # batched serving executor's per-stream KV-validity masks)
+        mask = mask[None, None, None] if mask.ndim == 2 \
+            else mask[:, None, None]
+        s = jnp.where(mask, s, -jnp.inf)
     m = jnp.max(s, axis=-1)                                   # [B,H,G,bq]
     # Guard fully-masked rows (all -inf).
     m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
     p = jnp.exp(s - m_safe[..., None])
     if mask is not None:
-        p = jnp.where(mask[None, None, None], p, 0.0)
+        p = jnp.where(mask, p, 0.0)
     l = jnp.sum(p, axis=-1)                                   # [B,H,G,bq]
     pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
     return m_safe, l, pv
@@ -111,6 +115,7 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
         window: int = 0,
         sink: int = 0,
         sparsity: float = 0.0,
+        kv_mask: Optional[jax.Array] = None,
         block_q: int = 512,
         block_kv: int = 512) -> jax.Array:
     """Multi-head attention with GQA + fidelity knobs.
@@ -118,6 +123,9 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
     q: [B,Sq,Hq,D]; k,v: [B,Skv,Hkv,D].  Returns [B,Sq,Hq,D].
     ``q_offset``: absolute position of q[0] relative to k[0] (for chunk-wise
     generation and decode, where Skv > Sq).
+    ``kv_mask``: optional [B,Skv] per-batch KV validity (non-causal/direct
+    path only) — the batched serving executor masks ring-cache slots that
+    are unfilled, outside a stream's fidelity window, or sparsity-dropped.
     """
     b, sq, hq, d = q.shape
     skv = k.shape[1]
@@ -138,9 +146,13 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
             if window:
                 mask &= (k_pos[None, :] > q_pos[:, None] - window) | \
                         (k_pos[None, :] < sink)
+        if kv_mask is not None:
+            km = kv_mask[:, None, :]                     # [B,1,Skv]
+            mask = km if mask is None else mask[None] & km
         m, l, pv = _segment_attn(qg, k, v, mask, scale)
         out = _finalize((m, l, pv), dtype)
         return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+    assert kv_mask is None, "kv_mask is only supported on the direct path"
 
     # ---- blocked paths -----------------------------------------------------
     block_q = min(block_q, sq)

@@ -7,6 +7,7 @@ full-cache and the windowed-adaptation paths.
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
@@ -38,6 +39,62 @@ def write_token(cache: jax.Array, new: jax.Array,
 def n_valid(pos: jax.Array, cap: int) -> jax.Array:
     """Number of resident (valid) cache entries after writing ``pos``."""
     return jnp.minimum(pos + 1, cap)
+
+
+def chunk_slot(chunk_idx: jax.Array, window_chunks: int, sink: int,
+               chunk_tokens: int) -> jax.Array:
+    """First-token slot of absolute chunk ``chunk_idx`` in the
+    chunk-granular ring: slots [0, sink) hold the attention sink and the
+    ring holds ``window_chunks`` chunks of ``chunk_tokens`` each.
+    ``chunk_idx`` may be a per-stream batch array."""
+    return (sink + (chunk_idx % window_chunks) * chunk_tokens).astype(
+        jnp.int32)
+
+
+def write_block(cache: jax.Array, new: jax.Array,
+                dest: jax.Array) -> jax.Array:
+    """cache [B,cap,...]; new [B,T,...]; dest [B] first-token slot.
+
+    Block-granular sibling of ``write_token``: writes a contiguous
+    T-token block per batch row at a per-row slot (the batched serving
+    executor appends one chunk's KV per stream this way)."""
+    return jax.vmap(lambda cb, nb, db: jax.lax.dynamic_update_slice(
+        cb, nb.astype(cb.dtype),
+        (db,) + (0,) * (cb.ndim - 1)))(cache, new, dest)
+
+
+@jax.jit
+def write_block_layers(cache: jax.Array, new: jax.Array,
+                       dest: jax.Array) -> jax.Array:
+    """``write_block`` lifted over a leading layer axis, jitted (eager
+    vmap re-traces per call, which dominates append cost on CPU).
+
+    cache [L,B,cap,...]; new [L,B,T,...]; dest [B]."""
+    return jax.vmap(write_block, in_axes=(0, 0, None))(cache, new, dest)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def pool_write_chunk(pool: jax.Array, new: jax.Array, rows: jax.Array,
+                     dest: jax.Array) -> jax.Array:
+    """Scatter one chunk of KV per stream straight into a stacked pool.
+
+    pool [L,Bmax,cap,...]; new [L,b,T,...]; rows [b] pool rows; dest [b]
+    first-token slots.  The pool buffer is donated so the update can be
+    performed in place where the backend supports it (avoids the
+    gather-modify-scatter round trip of updating via a sub-batch view).
+    """
+    for i in range(new.shape[1]):
+        pool = jax.lax.dynamic_update_slice(
+            pool, new[:, i:i + 1].astype(pool.dtype),
+            (0, rows[i], dest[i]) + (0,) * (pool.ndim - 3))
+    return pool
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def gather_rows(pool: jax.Array, rows: jax.Array, extent: int) -> jax.Array:
+    """pool [L,Bmax,cap,...] -> [L,b,extent,...] for the given rows
+    (jitted: one fused gather instead of eager fancy-indexing)."""
+    return pool[:, rows, :extent]
 
 
 def place_prefill(k: jax.Array, cap: int, sink: int,

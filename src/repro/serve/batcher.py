@@ -1,0 +1,431 @@
+"""Batched multi-stream serving executor (continuous cross-request
+batching at denoise-step granularity).
+
+The sequential ``ChunkExecutor`` generates chunks one stream at a time,
+so the control plane's credit ordering cannot exploit any batch
+parallelism.  This module adds the execution-side counterpart of the
+paper's step-boundary preemption (SS3.1): every scheduler iteration
+composes a *micro-batch* from the credit-ordered runnable set (lowest
+credit first, up to ``max_batch``), splits it into same-fidelity
+sub-batches, and advances each sub-batch by ONE denoise step with a
+single jitted batched ``ardit.denoise_step`` call over the stacked
+per-stream ring KV caches.  Streams join and leave the batch at step
+boundaries; measured whole-chunk wall time feeds the latency EMAs so
+BMPR budgets and service-credit estimates stay honest (re-profiling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import queues, slack
+from repro.core.bmpr import BMPR
+from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
+from repro.core.types import Stream, Worker
+from repro.models import ardit as A
+from repro.models import kvcache
+from repro.profiler.profiles import get_profile
+from repro.serve.executor import EMA_DECAY, ChunkExecutor, ServedStream
+
+
+def compose_batch(sids: Sequence[int],
+                  fidelity_of: Callable[[int], FidelityConfig],
+                  max_batch: int) -> List[List[int]]:
+    """Credit-ordered micro-batch composition.
+
+    ``sids`` is the runnable set already ordered by service credit
+    ascending (``queues.next_dispatch_set``).  Takes the lowest-credit
+    ``max_batch`` streams and splits them into same-fidelity sub-batches
+    (``FidelityConfig.key``), preserving credit order within and across
+    groups — the first group contains the most urgent stream.
+    """
+    groups: Dict[str, List[int]] = {}
+    for sid in list(sids)[:max_batch]:
+        groups.setdefault(fidelity_of(sid).key, []).append(sid)
+    return list(groups.values())
+
+
+class KVPool:
+    """Stacked per-stream ring KV caches: one [L, Bmax, cap, Hkv, Dh]
+    pair with a free-slot list.  Sub-batches gather their rows, run, and
+    scatter back — the device-side analogue of the simulator's paged
+    pools (residency is whole-stream here; paged defrag is an open
+    ROADMAP item)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, max_streams: int):
+        self.cfg, self.params = cfg, params
+        cap = A.cache_capacity(cfg)
+        shape = (cfg.n_layers, max_streams, cap, cfg.n_kv_heads,
+                 cfg.head_dim)
+        dt = jnp.dtype(cfg.kv_dtype)
+        self.k = jnp.zeros(shape, dt)
+        self.v = jnp.zeros(shape, dt)
+        self.chunks = np.zeros(max_streams, np.int64)
+        self._free = list(range(max_streams))
+        self._tc = A.chunk_tokens(cfg)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def alloc(self, cond: jax.Array) -> int:
+        """Admit one stream: write its cond (sink) KV into a free slot."""
+        if not self._free:
+            raise RuntimeError("KVPool exhausted: no free stream slots")
+        slot = self._free.pop(0)
+        sub = A.init_batched_cache(self.cfg, self.params, cond)
+        self.k = self.k.at[:, slot:slot + 1].set(
+            sub["k"].astype(self.k.dtype))
+        self.v = self.v.at[:, slot:slot + 1].set(
+            sub["v"].astype(self.v.dtype))
+        self.chunks[slot] = 0
+        return slot
+
+    def release(self, slot: int) -> None:
+        # stale ring contents are invisible (masks derive from chunks=0)
+        self.chunks[slot] = 0
+        self._free.append(slot)
+
+    def append(self, slots: Sequence[int], new_kv: Dict[str, jax.Array],
+               quant: str) -> None:
+        """Ring-write one finished chunk of KV per stream straight into
+        the pool and advance its chunk count (``new_kv`` rows align
+        with ``slots``)."""
+        if quant == "fp8":
+            new_kv = {k: v.astype(jnp.float8_e4m3fn)
+                      for k, v in new_kv.items()}
+        idx = np.asarray(slots)
+        dest = np.asarray(kvcache.chunk_slot(
+            self.chunks[idx], self.cfg.ardit_window_chunks,
+            A.COND_TOKENS, self._tc))
+        rows = jnp.asarray(idx, jnp.int32)
+        dest = jnp.asarray(dest, jnp.int32)
+        self.k = kvcache.pool_write_chunk(self.k, new_kv["k"], rows, dest)
+        self.v = kvcache.pool_write_chunk(self.v, new_kv["v"], rows, dest)
+        self.chunks[idx] += 1
+
+
+@dataclasses.dataclass
+class InflightChunk:
+    """One stream's chunk mid-generation (step-granular state)."""
+    x: jax.Array                      # [1, T_c, LATENT_CH] latents
+    fidelity: FidelityConfig
+    step: int = 0                     # denoise steps completed
+    started: float = 0.0              # session clock at chunk start
+    active_s: float = 0.0             # wall spent in steps (not held out)
+
+    @property
+    def phase(self) -> str:
+        """'denoise' while steps remain, then one 'clean' KV pass."""
+        return "denoise" if self.step < self.fidelity.steps else "clean"
+
+
+class BatchedChunkExecutor(ChunkExecutor):
+    """Multi-stream executor over a shared KV pool.
+
+    ``run_step`` advances one same-fidelity sub-batch by a single
+    denoise step (or the clean-context pass that finishes a chunk), so
+    the scheduler can recompose the batch between any two steps.
+    """
+
+    def __init__(self, cfg: Optional[ModelConfig] = None,
+                 params: Optional[Any] = None, seed: int = 0,
+                 max_streams: int = 16):
+        super().__init__(cfg=cfg, params=params, seed=seed)
+        self.pool = KVPool(self.cfg, self.params, max_streams)
+        self.slot: Dict[int, int] = {}
+        self.inflight: Dict[int, InflightChunk] = {}
+        self.chunks: Dict[int, List[jax.Array]] = {}
+        self.fidelity_log: Dict[int, List[str]] = {}
+        self.step_ema: Dict[str, float] = {}      # per-step wall seconds
+        # gathered context + masks are constant across the steps of a
+        # chunk (they change only when a stream's chunk count does), so
+        # they are cached per (group, fill, fidelity) chunk boundary
+        self._boundary_cache: Dict[tuple, Dict[str, Any]] = {}
+        self._staging_cache: Dict[tuple, tuple] = {}
+
+    # ---- stream lifecycle --------------------------------------------------
+    def admit(self, sid: int, seed: int = 0) -> None:
+        key = jax.random.PRNGKey(1000 + seed)
+        cond = jax.random.normal(
+            key, (1, A.COND_TOKENS, self.cfg.d_model)) * 0.02
+        self.slot[sid] = self.pool.alloc(cond)
+        self.chunks[sid] = []
+        self.fidelity_log[sid] = []
+        # boundary keys are (sids, fills, fid) and would collide with a
+        # previous stream of the same id at the same fill — drop them
+        self._boundary_cache.clear()
+
+    def retire(self, sid: int) -> None:
+        self.pool.release(self.slot.pop(sid))
+        self.inflight.pop(sid, None)
+        self._boundary_cache.clear()
+
+    def begin_chunk(self, sid: int, fidelity: FidelityConfig,
+                    now: float) -> None:
+        """Start a chunk at a step boundary (noise seeding matches the
+        sequential path so the two executors are comparable)."""
+        key = jax.random.PRNGKey(len(self.chunks[sid]) * 7919 + sid)
+        tc = A.chunk_tokens(self.cfg)
+        noise = jax.random.normal(key, (1, tc, A.LATENT_CH))
+        self.inflight[sid] = InflightChunk(x=noise, fidelity=fidelity,
+                                           started=now)
+
+    def steps_left(self, sid: int) -> int:
+        """Remaining forwards for the in-flight chunk (incl. clean pass)."""
+        f = self.inflight[sid]
+        return f.fidelity.steps + 1 - f.step
+
+    # ---- the batched step --------------------------------------------------
+    def _boundary(self, sids: Sequence[int], slots: Sequence[int],
+                  chunk_idx: np.ndarray,
+                  fid: FidelityConfig) -> Dict[str, Any]:
+        """Per-chunk-boundary state of a sub-batch: gathered context
+        (sliced to the group's resident extent, so compute scales with
+        fill like the sequential path), positions, and the denoise/clean
+        visibility masks.  Constant across the chunk's steps."""
+        key = (tuple(sids), tuple(chunk_idx.tolist()), fid.key)
+        bnd = self._boundary_cache.get(key)
+        if bnd is not None:
+            return bnd
+        tc = A.chunk_tokens(self.cfg)
+        w_max = self.cfg.ardit_window_chunks
+        extent = A.COND_TOKENS + int(min(chunk_idx.max(initial=0),
+                                         w_max)) * tc
+        idx = np.asarray(slots)
+        # sparsity applies to denoise steps only; the clean-context pass
+        # sees the full fidelity window.  All-true masks (homogeneous
+        # fill, no sparsity, full window) are dropped so the jitted step
+        # skips per-score masking, like the sequential path's slices.
+        dn = A.batched_context_mask(self.cfg, chunk_idx, fid.window,
+                                    fid.sparsity)[:, :extent]
+        cl = A.batched_context_mask(self.cfg, chunk_idx,
+                                    fid.window)[:, :extent]
+        rows = jnp.asarray(idx, jnp.int32)
+        bnd = {
+            "ctx_k": kvcache.gather_rows(self.pool.k, rows, extent),
+            "ctx_v": kvcache.gather_rows(self.pool.v, rows, extent),
+            "q_offset": jnp.asarray(A.COND_TOKENS + chunk_idx * tc,
+                                    jnp.int32),
+            "dn": None if dn.all() else jnp.asarray(dn),
+            "cl": None if cl.all() else jnp.asarray(cl),
+        }
+        if len(self._boundary_cache) >= 8:
+            self._boundary_cache.pop(next(iter(self._boundary_cache)))
+        self._boundary_cache[key] = bnd
+        return bnd
+
+    def _staging(self, fid: FidelityConfig, steps: Tuple[int, ...],
+                 denoising: Tuple[bool, ...]):
+        """Cached per-step staging arrays (t, dt, is_denoise): these
+        repeat identically for every chunk of a given fidelity, so the
+        tiny host->device uploads happen once, not every step."""
+        key = (fid.key, steps, denoising)
+        st = self._staging_cache.get(key)
+        if st is None:
+            grid = A.sigma_schedule(fid.steps)
+            t = jnp.asarray([float(grid[s]) if d else 0.0
+                             for s, d in zip(steps, denoising)],
+                            jnp.float32)
+            dt = jnp.asarray([float(grid[s] - grid[s + 1]) if d else 0.0
+                              for s, d in zip(steps, denoising)],
+                             jnp.float32)
+            st = (t, dt, jnp.asarray(denoising))
+            if len(self._staging_cache) >= 64:
+                self._staging_cache.pop(next(iter(self._staging_cache)))
+            self._staging_cache[key] = st
+        return st
+
+    def run_step(self, sids: Sequence[int]) -> Tuple[List[int], float]:
+        """Advance a same-fidelity sub-batch by one step.
+
+        Streams in their denoise phase take an Euler step; streams in
+        their clean phase produce context KV, append it to the pool, and
+        complete their chunk.  Both phases share ONE jitted batched
+        call (``ardit.denoise_step``; phase differences are data).
+
+        The host does NOT sync on intermediate steps — dispatch is
+        asynchronous, so staging pipelines with compute; the executor
+        syncs once per completed chunk, which also yields the measured
+        whole-chunk wall latency fed into ``latency_ema``/``step_ema``
+        (online re-profiling).  Returns (completed sids, wall seconds
+        of this call).
+        """
+        flights = [self.inflight[sid] for sid in sids]
+        fid = flights[0].fidelity
+        assert all(f.fidelity.key == fid.key for f in flights), \
+            "sub-batch must share one fidelity configuration"
+        slots = [self.slot[sid] for sid in sids]
+        chunk_idx = self.pool.chunks[np.asarray(slots)]
+
+        t0 = time.perf_counter()
+        bnd = self._boundary(sids, slots, chunk_idx, fid)
+        x = (flights[0].x if len(flights) == 1
+             else jnp.concatenate([f.x for f in flights], axis=0))
+        denoising = tuple(f.phase == "denoise" for f in flights)
+        t, dt_sig, is_dn = self._staging(
+            fid, tuple(f.step for f in flights), denoising)
+        x_new, new_kv = A.denoise_step(
+            self.cfg, self.params, x, t, dt_sig, bnd["ctx_k"],
+            bnd["ctx_v"], bnd["q_offset"], bnd["dn"], bnd["cl"], is_dn)
+
+        completed: List[int] = []
+        clean_rows: List[int] = []
+        for i, (sid, f) in enumerate(zip(sids, flights)):
+            if denoising[i]:
+                f.x = x_new[i:i + 1]
+                f.step += 1
+            else:
+                clean_rows.append(i)
+                completed.append(sid)
+        if clean_rows:
+            rows = np.asarray(clean_rows)
+            self.pool.append([slots[i] for i in clean_rows],
+                             {"k": new_kv["k"][:, rows],
+                              "v": new_kv["v"][:, rows]}, fid.quant)
+            now_wall = None
+            for i in clean_rows:
+                sid = sids[i]
+                f = self.inflight.pop(sid)
+                self.chunks[sid].append(f.x)
+                self.fidelity_log[sid].append(fid.key)
+                if now_wall is None:        # one sync per completion step
+                    f.x.block_until_ready()
+                    now_wall = time.perf_counter()
+                # measured chunk wall -> timing priors; only time spent
+                # IN the batch counts (a stream held out of the batch
+                # mid-chunk accrues no active time, so preemption does
+                # not inflate the per-fidelity EMAs)
+                lat = f.active_s + (now_wall - t0)
+                self.latency_ema[fid.key] = (
+                    EMA_DECAY * self.latency_ema.get(fid.key, lat)
+                    + (1.0 - EMA_DECAY) * lat)
+                step = lat / (fid.steps + 1)
+                self.step_ema[fid.key] = (
+                    EMA_DECAY * self.step_ema.get(fid.key, step)
+                    + (1.0 - EMA_DECAY) * step)
+        dt = time.perf_counter() - t0
+        for sid in sids:
+            f = self.inflight.get(sid)
+            if f is not None:               # still mid-chunk
+                f.active_s += dt
+        return completed, dt
+
+    def remaining_estimate(self, sid: int) -> float:
+        """R_u from the measured step EMA (not the offline profile)."""
+        f = self.inflight.get(sid)
+        if f is None:
+            return 0.0
+        per_step = self.step_ema.get(
+            f.fidelity.key,
+            self.latency_ema.get(f.fidelity.key, 0.0)
+            / (f.fidelity.steps + 1))
+        return self.steps_left(sid) * per_step
+
+
+def serve_session_batched(n_streams: int = 4, chunks_per_stream: int = 4,
+                          max_batch: int = 4,
+                          realtime_budget: Optional[float] = None,
+                          fidelity_policy=None,
+                          verbose: bool = True) -> List[ServedStream]:
+    """End-to-end batched session: the SAME control-plane code paths as
+    the simulator (service credit, credit-sorted queue, dispatch-set)
+    drive real batched chunk generation.
+
+    Per iteration: update credits -> order queue -> take the runnable
+    set (``queues.next_dispatch_set``) -> compose same-fidelity
+    sub-batches -> one jitted step each.  Measured wall time feeds
+    ``t_next``/``remaining`` so credits track this host, not the
+    H100-calibrated offline profile.
+    """
+    ex = BatchedChunkExecutor(max_streams=n_streams + 1)
+    policy = fidelity_policy or BMPR(get_profile())
+
+    # calibrate the wall-clock playout rate to this host (and warm the
+    # jit cache for batch-size-1 shapes)
+    ex.admit(-1, seed=999)
+    ex.begin_chunk(-1, HIGHEST_QUALITY, 0.0)
+    while -1 in ex.inflight:
+        _, _ = ex.run_step([-1])
+    top_lat = (HIGHEST_QUALITY.steps + 1) * ex.step_ema[HIGHEST_QUALITY.key]
+    ex.retire(-1)
+    chunk_seconds = realtime_budget or (4.0 * top_lat)
+
+    worker = Worker(0, node=0)
+    streams: Dict[int, Stream] = {}
+    for i in range(n_streams):
+        ex.admit(i, seed=i)
+        s = Stream(sid=i, arrival=0.0, target_chunks=chunks_per_stream,
+                   chunk_seconds=chunk_seconds, home=0,
+                   ttfc_slack=2.0 * chunk_seconds,
+                   next_deadline=2.0 * chunk_seconds)
+        s.t_next = top_lat
+        streams[i] = s
+        worker.queue.append(i)
+
+    t_start = time.perf_counter()
+    clock = lambda: time.perf_counter() - t_start     # noqa: E731
+    while any(not s.finished for s in streams.values()):
+        now = clock()
+        for s in streams.values():
+            if not s.finished:
+                s.remaining = ex.remaining_estimate(s.sid)
+                s.running_on = (0,) if s.sid in ex.inflight else None
+                slack.update_stream_credit(s, now)
+        queues.order_queue(worker, streams)
+        sids = queues.next_dispatch_set(worker, streams, now,
+                                        max_batch=max_batch)
+        if not sids:
+            break
+        for sid in sids:
+            if sid not in ex.inflight:
+                s = streams[sid]
+                budget = max(s.playout_slack(now), 0.0)
+                dec = policy.select(
+                    budget / max(chunk_seconds, 1e-9) * 0.72)
+                ex.begin_chunk(sid, dec.fidelity, now)
+                s.t_next = ex.latency_ema.get(dec.fidelity.key,
+                                              dec.latency)
+        groups = compose_batch(
+            sids, lambda sid: ex.inflight[sid].fidelity, max_batch)
+        for grp in groups:
+            flight_started = {sid: ex.inflight[sid].started for sid in grp}
+            fid_key = ex.inflight[grp[0]].fidelity.key
+            completed, _ = ex.run_step(grp)     # updates the latency EMAs
+            now = clock()
+            for sid in completed:
+                s = streams[sid]
+                lat = now - flight_started[sid]
+                ddl = s.next_deadline
+                s.ready_times.append(now)
+                s.deadlines.append(ddl)
+                if s.first_chunk_time is None:
+                    s.first_chunk_time = now
+                if now > ddl:
+                    s.stall_time += now - ddl
+                s.next_deadline = max(ddl, now) + s.chunk_seconds
+                s.chunks_done += 1
+                s.fidelity_log.append(fid_key)
+                if verbose:
+                    print(f"t={now:6.2f}s stream {sid} chunk "
+                          f"{s.chunks_done}/{s.target_chunks} "
+                          f"fid={fid_key:22s} lat={lat:.2f}s "
+                          f"{'LATE' if now > ddl else 'on-time'}")
+
+    out: List[ServedStream] = []
+    for i in range(n_streams):
+        st = ServedStream(sid=i, cond=None, cache=None,
+                          target_chunks=chunks_per_stream,
+                          chunks=ex.chunks[i],
+                          fidelity_log=ex.fidelity_log[i],
+                          next_deadline=streams[i].next_deadline,
+                          chunk_seconds=chunk_seconds)
+        out.append(st)
+        ex.retire(i)
+    return out

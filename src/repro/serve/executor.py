@@ -25,6 +25,10 @@ from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
 from repro.models import ardit as A
 from repro.profiler.profiles import get_profile
 
+# blend of the prior vs the newest measured latency in the online
+# re-profiling EMAs (shared with the batched executor)
+EMA_DECAY = 0.7
+
 
 @dataclasses.dataclass
 class ServedStream:
@@ -78,19 +82,32 @@ class ChunkExecutor:
         s.chunks.append(chunk)
         s.fidelity_log.append(fidelity.key)
         self.latency_ema[fidelity.key] = (
-            0.7 * self.latency_ema.get(fidelity.key, dt) + 0.3 * dt)
+            EMA_DECAY * self.latency_ema.get(fidelity.key, dt)
+            + (1.0 - EMA_DECAY) * dt)
         return chunk, dt
 
 
 def serve_session(n_streams: int = 2, chunks_per_stream: int = 4,
                   realtime_budget: Optional[float] = None,
-                  verbose: bool = True) -> List[ServedStream]:
+                  verbose: bool = True,
+                  batched: bool = False,
+                  max_batch: int = 4) -> List[ServedStream]:
     """Small end-to-end session: BMPR-driven fidelity on the real model.
 
     ``realtime_budget``: seconds of playout per chunk used for slack
     bookkeeping; defaults to 4x the measured top-fidelity latency so the
     session exercises both BMPR modes on any host speed.
+
+    ``batched=True`` routes to the credit-ordered micro-batch executor
+    (``repro.serve.batcher``): same control mechanisms, but up to
+    ``max_batch`` streams advance together per denoise step.
     """
+    if batched:
+        from repro.serve.batcher import serve_session_batched
+        return serve_session_batched(
+            n_streams=n_streams, chunks_per_stream=chunks_per_stream,
+            max_batch=max_batch, realtime_budget=realtime_budget,
+            verbose=verbose)
     ex = ChunkExecutor()
     bmpr = BMPR(get_profile())
     # calibrate the wall-clock playout rate to this host

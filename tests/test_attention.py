@@ -7,6 +7,8 @@ import pytest
 from repro.models.attention import (decode_attention, mha,
                                     sparse_keep_list)
 
+pytestmark = pytest.mark.slow     # JAX-compiling attention sweeps: slow tier
+
 KEY = jax.random.PRNGKey(1)
 
 

@@ -1,0 +1,301 @@
+"""Batched multi-stream executor: micro-batch composition, ring-cache
+mask mapping, join/leave at step boundaries, and batched-vs-sequential
+numerical parity.
+
+Pure-logic tests run in the fast tier; the parity test drives the eager
+sequential path (slow tier)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.fidelity import FidelityConfig
+from repro.models import ardit as A
+from repro.models import kvcache
+from repro.serve.batcher import BatchedChunkExecutor, compose_batch
+
+KEY = jax.random.PRNGKey(0)
+
+FID_HI = FidelityConfig(2, 0.0, 2, "bf16")
+FID_LO = FidelityConfig(2, 0.9, 1, "fp8")
+
+
+def tiny_cfg(window_chunks=2):
+    """Two layers + short window: small compiles, fast wrap-around."""
+    return dataclasses.replace(
+        get_config("ardit-self-forcing").reduced(),
+        n_layers=2, ardit_window_chunks=window_chunks)
+
+
+def nondegenerate_params(cfg, key):
+    """Fresh params have adaLN-ZERO gates: every residual branch is
+    multiplied by 0, so outputs ignore the KV context entirely and any
+    parity test would pass vacuously.  Open the gates with small random
+    modulation weights so attention over the cache actually matters."""
+    p = A.init_params(cfg, key)
+    ks = jax.random.split(jax.random.PRNGKey(1234), 3)
+    p["layers"]["mod"] = 0.2 * jax.random.normal(
+        ks[0], p["layers"]["mod"].shape, p["layers"]["mod"].dtype)
+    p["layers"]["mod_b"] = 0.5 + 0.2 * jax.random.normal(
+        ks[1], p["layers"]["mod_b"].shape, p["layers"]["mod_b"].dtype)
+    p["final_mod"] = 0.2 * jax.random.normal(
+        ks[2], p["final_mod"].shape, p["final_mod"].dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# micro-batch composition
+# ---------------------------------------------------------------------------
+
+def test_compose_batch_credit_order_and_grouping():
+    fid_of = {0: FID_HI, 1: FID_LO, 2: FID_HI, 3: FID_LO, 4: FID_HI}.get
+    # runnable set arrives credit-ordered; cap at 4 drops sid 4
+    groups = compose_batch([1, 0, 3, 2, 4], fid_of, max_batch=4)
+    assert groups == [[1, 3], [0, 2]]
+    # first group contains the most urgent (lowest-credit) stream
+    assert groups[0][0] == 1
+    # same fidelity -> one group, order preserved
+    assert compose_batch([2, 0, 4], fid_of, max_batch=8) == [[2, 0, 4]]
+    assert compose_batch([], fid_of, max_batch=4) == []
+
+
+# ---------------------------------------------------------------------------
+# chunk-granular ring helpers
+# ---------------------------------------------------------------------------
+
+def test_chunk_slot_ring_layout():
+    # window of 3 chunks of 5 tokens behind a 7-token sink
+    slots = [int(kvcache.chunk_slot(jnp.asarray(c), 3, 7, 5))
+             for c in range(7)]
+    assert slots == [7, 12, 17, 7, 12, 17, 7]     # wraps every 3 chunks
+
+
+def test_write_block_per_row_dest():
+    cache = jnp.zeros((2, 6, 1, 1))
+    new = jnp.arange(4, dtype=jnp.float32).reshape(2, 2, 1, 1) + 1.0
+    out = kvcache.write_block(cache, new, jnp.asarray([0, 3]))
+    got = np.asarray(out)[:, :, 0, 0]
+    np.testing.assert_array_equal(got[0], [1, 2, 0, 0, 0, 0])
+    np.testing.assert_array_equal(got[1], [0, 0, 0, 3, 4, 0])
+
+
+def test_batched_context_mask_visibility():
+    cfg = tiny_cfg(window_chunks=3)
+    tc = A.chunk_tokens(cfg)
+    sink = A.COND_TOKENS
+    # streams at fills 0, 2, and 5 (wrapped) under window W=2
+    mask = A.batched_context_mask(cfg, np.array([0, 2, 5]), window=2)
+    # fill 0: sink only
+    assert mask[0, :sink].all() and not mask[0, sink:].any()
+    # fill 2: chunks 0,1 in slots 0,1 -> contiguous extent
+    assert mask[1, :sink + 2 * tc].all() and not mask[1, sink + 2 * tc:].any()
+    # fill 5, window 2: visible chunks 3,4 -> ring slots 3%3=0 and 4%3=1
+    assert mask[2, :sink + 2 * tc].all() and not mask[2, sink + 2 * tc:].any()
+    # fill 4, window 2: chunks 2,3 -> slots 2 and 0 (slot 1 hidden)
+    m = A.batched_context_mask(cfg, np.array([4]), window=2)[0]
+    assert m[:sink].all()
+    assert m[sink:sink + tc].all()                      # slot 0 (chunk 3)
+    assert not m[sink + tc:sink + 2 * tc].any()         # slot 1 (stale)
+    assert m[sink + 2 * tc:sink + 3 * tc].all()         # slot 2 (chunk 2)
+
+
+def test_batched_context_mask_sparsity_matches_sequential_keep():
+    """The sparsity drop in the batched mask keeps exactly the token set
+    ``cache_sparse_index`` gives the sequential path, mapped through the
+    ring permutation."""
+    # larger frame_tokens so the 128-aligned block drop actually fires
+    # (at the reduced tc=48 every window fits in <=2 blocks, which the
+    # sink/diagonal forcing always keeps); W=7 -> no wrap at n=4
+    cfg = dataclasses.replace(get_config("ardit-self-forcing").reduced(),
+                              ardit_frame_tokens=128)
+    tc = A.chunk_tokens(cfg)
+    n, window, rho = 4, 3, 0.8
+    ctx_len = A.COND_TOKENS + window * tc
+    keep = A.cache_sparse_index(cfg, ctx_len, rho)
+    assert keep is not None and len(keep) < ctx_len
+    mask = A.batched_context_mask(cfg, np.array([n]), window, rho)[0]
+    # visible chunks are 1..3 in ring slots 1..3 (no wrap): sliced-ctx
+    # token i >= sink maps to slot i + (n - window)*tc
+    expect = np.zeros_like(mask)
+    for i in keep:
+        expect[i if i < A.COND_TOKENS else i + (n - window) * tc] = True
+    np.testing.assert_array_equal(mask, expect)
+
+
+# ---------------------------------------------------------------------------
+# per-stream KV masking in attention (the mha extension batching rides on)
+# ---------------------------------------------------------------------------
+
+def test_mha_kv_mask_equals_slicing():
+    from repro.models.attention import mha
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 4, 2, 8))
+    k = jax.random.normal(ks[1], (2, 10, 2, 8))
+    v = jax.random.normal(ks[2], (2, 10, 2, 8))
+    # row 0 sees the first 6 kv tokens, row 1 sees all 10
+    kv_mask = jnp.asarray(np.array(
+        [[True] * 6 + [False] * 4, [True] * 10]))
+    out = mha(q, k, v, n_kv_heads=2, causal=False, kv_mask=kv_mask)
+    ref0 = mha(q[:1], k[:1, :6], v[:1, :6], n_kv_heads=2, causal=False)
+    ref1 = mha(q[1:], k[1:], v[1:], n_kv_heads=2, causal=False)
+    np.testing.assert_allclose(out[0], ref0[0], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out[1], ref1[0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# join/leave at step boundaries
+# ---------------------------------------------------------------------------
+
+def test_join_leave_at_step_boundaries():
+    """Batch membership changes between denoise steps: a stream can be
+    held out (preempted) mid-chunk and resume later; a new stream can
+    join mid-flight of others.  Chunks complete correctly either way."""
+    cfg = tiny_cfg()
+    ex = BatchedChunkExecutor(cfg=cfg, max_streams=3)
+    for sid in (0, 1, 2):
+        ex.admit(sid, seed=sid)
+    ex.begin_chunk(0, FID_HI, 0.0)
+    ex.begin_chunk(1, FID_HI, 0.0)
+    done, _ = ex.run_step([0, 1])              # both advance one step
+    assert done == [] and ex.inflight[0].step == ex.inflight[1].step == 1
+    # stream 1 preempted at the step boundary; 2 joins with a fresh chunk
+    ex.begin_chunk(2, FID_HI, 0.0)
+    done, _ = ex.run_step([0, 2])
+    assert ex.inflight[0].step == 2 and ex.inflight[2].step == 1
+    assert ex.inflight[1].step == 1            # untouched while held out
+    # drive stream 0 to completion (steps=2 -> one clean pass remains)
+    done, _ = ex.run_step([0])
+    assert done == [0] and 0 not in ex.inflight
+    assert len(ex.chunks[0]) == 1 and ex.pool.chunks[ex.slot[0]] == 1
+    # stream 1 resumes and finishes alongside 2 (both at step 1:
+    # one denoise step + the clean pass remain)
+    finished = []
+    for _ in range(2):
+        done, _ = ex.run_step([1, 2])
+        finished += done
+    assert sorted(finished) == [1, 2]
+    assert len(ex.chunks[1]) == len(ex.chunks[2]) == 1
+    # sub-batches must share one fidelity configuration
+    ex.begin_chunk(0, FID_HI, 0.0)
+    ex.begin_chunk(1, FID_LO, 0.0)
+    with pytest.raises(AssertionError):
+        ex.run_step([0, 1])
+
+
+def test_pool_alloc_release_reuse():
+    cfg = tiny_cfg()
+    ex = BatchedChunkExecutor(cfg=cfg, max_streams=2)
+    ex.admit(0, seed=0)
+    ex.admit(1, seed=1)
+    assert ex.pool.free_slots == 0
+    with pytest.raises(RuntimeError):
+        ex.admit(2, seed=2)
+    ex.retire(0)
+    ex.admit(2, seed=2)                        # slot reused
+    assert ex.pool.chunks[ex.slot[2]] == 0
+
+
+def test_readmitted_sid_uses_fresh_cond():
+    """Regression: retiring a stream and re-admitting the same sid must
+    serve the NEW conditioning, not a stale cached context (the
+    boundary cache is keyed by (sids, fills, fidelity), which collides
+    across admissions)."""
+    cfg = tiny_cfg()
+    p = nondegenerate_params(cfg, KEY)
+    ex = BatchedChunkExecutor(cfg=cfg, params=p, max_streams=1)
+
+    def one_chunk():
+        ex.begin_chunk(0, FID_HI, 0.0)
+        while 0 in ex.inflight:
+            ex.run_step([0])
+        return np.asarray(ex.chunks[0][-1])
+
+    ex.admit(0, seed=0)
+    first = one_chunk()
+    ex.retire(0)
+    ex.admit(0, seed=42)                       # same sid, new cond
+    second = one_chunk()
+    assert not np.allclose(first, second), \
+        "re-admitted stream served a stale cached context"
+
+
+# ---------------------------------------------------------------------------
+# numerical parity: batched == sequential per stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_batched_matches_sequential_per_stream():
+    """Same params/cond/noise: ``serve_chunk_batched`` must reproduce
+    the sequential ``serve_chunk`` per stream across fidelity switches,
+    fp8 KV, sparsity, and ring wrap-around."""
+    cfg = tiny_cfg(window_chunks=2)
+    p = nondegenerate_params(cfg, KEY)
+    B = 2
+    cond = 0.02 * jax.random.normal(jax.random.PRNGKey(1),
+                                    (B, A.COND_TOKENS, cfg.d_model))
+    tc = A.chunk_tokens(cfg)
+    fids = [FID_HI, FID_LO, FidelityConfig(3, 0.6, 2, "bf16"), FID_HI]
+
+    seq_caches = [A.init_cache(cfg, p, cond[i:i + 1]) for i in range(B)]
+    bc = A.init_batched_cache(cfg, p, cond)
+    for c, fid in enumerate(fids):             # wraps the 2-chunk ring
+        # SAME noise for every stream: any cross-stream output
+        # difference can only come from the per-stream conds/caches,
+        # guarding against a degenerate model that ignores context
+        noise = jax.random.normal(jax.random.PRNGKey(c * 100),
+                                  (1, tc, A.LATENT_CH))
+        noises = [noise for _ in range(B)]
+        xb, bc = A.serve_chunk_batched(cfg, p, bc,
+                                       jnp.concatenate(noises, 0), fid)
+        assert not np.allclose(np.asarray(xb[0]), np.asarray(xb[1])), \
+            "outputs ignore the KV context (degenerate adaLN gates?)"
+        for i in range(B):
+            xs, seq_caches[i] = A.serve_chunk(cfg, p, seq_caches[i],
+                                              noises[i], fid)
+            np.testing.assert_allclose(np.asarray(xb[i]),
+                                       np.asarray(xs[0]),
+                                       rtol=1e-4, atol=2e-4)
+    assert list(bc["chunks"]) == [len(fids)] * B
+
+
+@pytest.mark.slow
+def test_staggered_join_matches_sequential():
+    """A stream joining at a chunk boundary (heterogeneous fills in one
+    sub-batch) stays numerically on the sequential trajectory."""
+    cfg = tiny_cfg(window_chunks=3)
+    p = nondegenerate_params(cfg, KEY)
+    cond = 0.02 * jax.random.normal(jax.random.PRNGKey(7),
+                                    (2, A.COND_TOKENS, cfg.d_model))
+    tc = A.chunk_tokens(cfg)
+    fid = FID_HI
+
+    def noise(seed):
+        return jax.random.normal(jax.random.PRNGKey(seed),
+                                 (1, tc, A.LATENT_CH))
+
+    s0 = A.init_cache(cfg, p, cond[0:1])
+    s1 = A.init_cache(cfg, p, cond[1:2])
+    bc = A.init_batched_cache(cfg, p, cond)
+    # stream 0 runs two chunks alone (single-row sub-batch view)
+    for c in range(2):
+        xs, s0 = A.serve_chunk(cfg, p, s0, noise(c), fid)
+        sub = {"k": bc["k"][:, :1], "v": bc["v"][:, :1],
+               "chunks": bc["chunks"][:1]}
+        xb, sub = A.serve_chunk_batched(cfg, p, sub, noise(c), fid)
+        bc["k"] = bc["k"].at[:, :1].set(sub["k"])
+        bc["v"] = bc["v"].at[:, :1].set(sub["v"])
+        bc["chunks"][:1] = sub["chunks"]
+        np.testing.assert_allclose(np.asarray(xb[0]), np.asarray(xs[0]),
+                                   rtol=1e-4, atol=2e-4)
+    # stream 1 joins: fills (2, 0) in ONE batch
+    x0, s0 = A.serve_chunk(cfg, p, s0, noise(10), fid)
+    x1, s1 = A.serve_chunk(cfg, p, s1, noise(11), fid)
+    xb, bc = A.serve_chunk_batched(
+        cfg, p, bc, jnp.concatenate([noise(10), noise(11)], 0), fid)
+    np.testing.assert_allclose(np.asarray(xb[0]), np.asarray(x0[0]),
+                               rtol=1e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(xb[1]), np.asarray(x1[0]),
+                               rtol=1e-4, atol=2e-4)

@@ -49,6 +49,43 @@ def test_tier_thresholds_alpha():
     assert slack.classify(6.5, t, alpha=3.0) is Tier.RELAXED
 
 
+def test_paused_stream_not_dispatched_until_pause_end():
+    """Regression: a prompt-switch-paused stream must be skipped while
+    ``paused_until > now`` even though it still has chunks to generate
+    (the old condition AND-ed the pause with being finished, which
+    dispatched paused streams)."""
+    view = mk_view()
+    s = mk_stream(0, deadline=5.0)
+    s.paused_until = 10.0                       # mid-pause, NOT finished
+    assert s.chunks_done < s.target_chunks
+    view.streams[0] = s
+    view.workers[0].queue.append(0)
+    assert queues.next_dispatch(view.workers[0], view.streams, now=3.0) \
+        is None
+    # pause elapsed: dispatchable again
+    assert queues.next_dispatch(view.workers[0], view.streams,
+                                now=10.0) == 0
+
+
+def test_next_dispatch_set_credit_order_and_cap():
+    """The batched executor's runnable set: credit order preserved,
+    paused/finished skipped, max_batch respected."""
+    view = mk_view()
+    for i, ddl in enumerate([5.0, 2.0, 9.0, 7.0]):
+        s = mk_stream(i, deadline=ddl)
+        slack.update_stream_credit(s, now=0.0)
+        view.streams[i] = s
+        view.workers[0].queue.append(i)
+    view.streams[3].paused_until = 100.0
+    view.streams[2].chunks_done = view.streams[2].target_chunks  # finished
+    queues.order_all(view)
+    w = view.workers[0]
+    assert queues.next_dispatch_set(w, view.streams, now=0.0) == [1, 0]
+    assert queues.next_dispatch_set(w, view.streams, now=0.0,
+                                    max_batch=1) == [1]
+    assert queues.next_dispatch(w, view.streams, now=0.0) == 1
+
+
 def test_queue_order_and_eviction():
     view = mk_view()
     for i, ddl in enumerate([5.0, 2.0, 9.0]):

@@ -13,6 +13,8 @@ from repro.kernels.fp8_matmul.ref import fp8_matmul_ref, quantize_fp8_ref
 from repro.kernels.ssd_scan.kernel import ssd_pallas
 from repro.kernels.ssd_scan.ref import ssd_ref, ssd_decode_ref
 
+pytestmark = pytest.mark.slow     # Pallas/JAX-compiling kernel sweeps: slow tier
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -13,6 +13,8 @@ import pytest
 from repro.configs.base import get_config, list_archs
 from repro.models import registry
 
+pytestmark = pytest.mark.slow     # JAX-compiling per-arch model tests: slow tier
+
 KEY = jax.random.PRNGKey(0)
 ASSIGNED = [a for a in list_archs() if not a.startswith("ardit")]
 

@@ -10,6 +10,8 @@ from repro.distributed import sharding as shd
 from repro.distributed.logical import resolve_spec
 from repro.launch.hlo_cost import analyze_text
 
+pytestmark = pytest.mark.slow     # JAX-lowering/compiling sharding tests: slow tier
+
 
 class TestParamRules:
     def test_rank_padding_for_stacked_layers(self):

@@ -16,6 +16,8 @@ from repro.train import compression as comp
 from repro.train import loop as train_loop
 from repro.train import optimizer as opt
 
+pytestmark = pytest.mark.slow     # JAX-compiling train-step tests: slow tier
+
 KEY = jax.random.PRNGKey(0)
 
 

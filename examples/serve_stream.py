@@ -4,10 +4,13 @@ live model instead of the simulator).
 
     PYTHONPATH=src python examples/serve_stream.py [n_streams] [chunks]
     PYTHONPATH=src python examples/serve_stream.py --batched [n] [chunks]
+    PYTHONPATH=src python examples/serve_stream.py --batched --pool=P ...
 
 ``--batched`` serves all streams through the credit-ordered micro-batch
 executor (one jitted denoise step per sub-batch) instead of one stream
-at a time.
+at a time.  ``--pool=P`` caps the page pool at P co-resident streams —
+with P < n_streams the session oversubscribes: overflow streams spill
+to host and rotate back in via credit-aware eviction.
 """
 import os
 import sys
@@ -18,13 +21,34 @@ from repro.serve.executor import serve_session
 
 
 def main():
-    args = [a for a in sys.argv[1:] if a != "--batched"]
-    batched = "--batched" in sys.argv[1:]
+    pool = None
+    args = []
+    argv = sys.argv[1:]
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--batched":
+            pass
+        elif a.startswith("--pool="):
+            pool = int(a.split("=", 1)[1])
+        elif a == "--pool":
+            i += 1
+            if i >= len(argv):
+                sys.exit("--pool requires a value (e.g. --pool 2)")
+            pool = int(argv[i])
+        else:
+            args.append(a)
+        i += 1
+    batched = "--batched" in argv
+    if pool is not None and not batched:
+        sys.exit("--pool only applies to the batched executor; "
+                 "add --batched")
     n_streams = int(args[0]) if args else 2
     chunks = int(args[1]) if len(args) > 1 else 4
     streams = serve_session(n_streams=n_streams,
                             chunks_per_stream=chunks,
-                            batched=batched)
+                            batched=batched,
+                            pool_streams=pool)
     print("\nper-stream fidelity decisions:")
     for s in streams:
         print(f"  stream {s.sid}: {s.fidelity_log}")

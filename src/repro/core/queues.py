@@ -8,7 +8,7 @@ least likely to stall (Fig. 8).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Union
 
 from repro.core.types import ClusterView, Stream, Tier, Worker
 
@@ -52,12 +52,26 @@ def next_dispatch(worker: Worker, streams: Dict[int, Stream],
 
 
 def pick_eviction(resident_sids: List[int], streams: Dict[int, Stream],
-                  protect: Optional[int] = None) -> Optional[int]:
-    """Credit-aware eviction: evict the highest-credit resident stream."""
-    candidates = [sid for sid in resident_sids if sid != protect]
+                  protect: Union[int, Iterable[int], None] = None,
+                  ) -> Optional[int]:
+    """Credit-aware eviction: evict the highest-credit resident stream
+    (the one least likely to stall, Fig. 8).
+
+    ``protect`` is a sid — or an iterable of sids — that must not be
+    chosen: the stream being admitted plus any in-flight streams whose
+    gathered context still references pool pages.  Credit ties break
+    deterministically toward the LOWEST sid, so a replayed schedule
+    evicts identically."""
+    if protect is None:
+        shield = frozenset()
+    elif isinstance(protect, Iterable):
+        shield = frozenset(protect)
+    else:
+        shield = frozenset((protect,))
+    candidates = [sid for sid in resident_sids if sid not in shield]
     if not candidates:
         return None
-    return max(candidates, key=lambda sid: streams[sid].credit)
+    return max(candidates, key=lambda sid: (streams[sid].credit, -sid))
 
 
 def tier_counts(view: ClusterView) -> Dict[int, Dict[Tier, int]]:

@@ -67,6 +67,19 @@ class PagedKVPool:
     def used(self) -> int:
         return self.n_pages - self.free
 
+    def check(self) -> None:
+        """Page-conservation invariant: every page is either free or in
+        exactly one table.  Raises AssertionError on accounting drift
+        (the device-side pool mirrors into this class, so the property
+        suite leans on it).  Zero-page tables are legal: the simulator
+        admits a restored stream with ``alloc(sid, min(want, free))``,
+        which is 0 under full pressure."""
+        assert self.free >= 0, "negative free-page count"
+        assert all(n >= 0 for n in self.tables.values()), \
+            "resident stream holding negative pages"
+        assert self.free + sum(self.tables.values()) == self.n_pages, \
+            "page leak: used + free != n_pages"
+
 
 # ---------------------------------------------------------------------------
 # transfer engine

@@ -13,6 +13,8 @@ Two modes:
     PYTHONPATH=src python -m repro.launch.serve --real --streams 2
     PYTHONPATH=src python -m repro.launch.serve --real --batched \
         --streams 4 --max-batch 4
+    PYTHONPATH=src python -m repro.launch.serve --real --batched \
+        --streams 4 --pool-streams 2        # oversubscribed page pool
 """
 from __future__ import annotations
 
@@ -34,14 +36,21 @@ def main() -> None:
     ap.add_argument("--batched", action="store_true",
                     help="credit-ordered micro-batch executor (--real)")
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--pool-streams", type=int, default=0,
+                    help="co-resident stream cap of the paged KV pool "
+                         "(< --streams oversubscribes; 0 -> all fit)")
     args = ap.parse_args()
+
+    if args.pool_streams and not (args.real and args.batched):
+        ap.error("--pool-streams only applies to --real --batched")
 
     if args.real:
         from repro.serve.executor import serve_session
         streams = serve_session(n_streams=args.streams,
                                 chunks_per_stream=args.chunks,
                                 batched=args.batched,
-                                max_batch=args.max_batch)
+                                max_batch=args.max_batch,
+                                pool_streams=args.pool_streams or None)
         mode = "batched" if args.batched else "sequential"
         print(f"served {len(streams)} streams x "
               f"{args.chunks} chunks (real model, {mode})")

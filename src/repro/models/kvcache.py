@@ -73,28 +73,62 @@ def write_block_layers(cache: jax.Array, new: jax.Array,
     return jax.vmap(write_block, in_axes=(0, 0, None))(cache, new, dest)
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def pool_write_chunk(pool: jax.Array, new: jax.Array, rows: jax.Array,
-                     dest: jax.Array) -> jax.Array:
-    """Scatter one chunk of KV per stream straight into a stacked pool.
+# ---------------------------------------------------------------------------
+# page-granular pool (serve/batcher.py KVPool): KV lives as
+# [L, n_pages, page_tokens, ...] and each stream owns a page *table*
+# (entry 0 = cond sink page, entry 1+r = ring slot r, chunk c in entry
+# 1 + c % window_chunks).  The helpers below are pure permutations of
+# pool rows, so a page-table cache is bitwise-identical to the stacked
+# per-stream chunk-ring layout it replaces.
+# ---------------------------------------------------------------------------
 
-    pool [L,Bmax,cap,...]; new [L,b,T,...]; rows [b] pool rows; dest [b]
-    first-token slots.  The pool buffer is donated so the update can be
-    performed in place where the backend supports it (avoids the
-    gather-modify-scatter round trip of updating via a sub-batch view).
-    """
+
+def pages_per_stream(window_chunks: int) -> int:
+    """Pages a resident stream owns: one cond sink page + the ring."""
+    return 1 + window_chunks
+
+
+def page_of_chunk(chunk_idx: int, window_chunks: int) -> int:
+    """Page-table entry holding absolute chunk ``chunk_idx`` (the ring
+    slot of ``chunk_slot`` shifted past the sink entry)."""
+    return 1 + chunk_idx % window_chunks
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def gather_pages(pool: jax.Array, tables: jax.Array, sink: int,
+                 chunk_tokens: int, n_ring: int) -> jax.Array:
+    """pool [L,n_pages,P,...]; tables [b, 1+W] page ids ->
+    [L, b, sink + n_ring*chunk_tokens, ...].
+
+    Reassembles, per stream, the contiguous sink+ring context the
+    stacked chunk-ring layout kept per row: tokens [0, sink) from the
+    sink page (table entry 0), ring slot r at
+    [sink + r*chunk_tokens, sink + (r+1)*chunk_tokens) from table entry
+    1+r, sliced to the first ``n_ring`` ring slots (the sub-batch's
+    resident extent).  A pure gather: bitwise-exact."""
+    sink_part = pool[:, tables[:, 0], :sink]
+    if n_ring == 0:
+        return sink_part
+    ring = pool[:, tables[:, 1:1 + n_ring], :chunk_tokens]
+    l, b = ring.shape[:2]
+    ring = ring.reshape((l, b, n_ring * chunk_tokens) + ring.shape[4:])
+    return jnp.concatenate([sink_part, ring], axis=2)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def pool_write_pages(pool: jax.Array, new: jax.Array,
+                     pages: jax.Array) -> jax.Array:
+    """pool [L,n_pages,P,...]; new [L,b,T,...] (T <= P); pages [b].
+
+    Writes one T-token block per stream at token 0 of its destination
+    page — the page-granular sibling of ``write_block``.  The pool
+    buffer is donated so the update happens in place where the backend
+    supports it."""
     for i in range(new.shape[1]):
         pool = jax.lax.dynamic_update_slice(
             pool, new[:, i:i + 1].astype(pool.dtype),
-            (0, rows[i], dest[i]) + (0,) * (pool.ndim - 3))
+            (0, pages[i], 0) + (0,) * (pool.ndim - 3))
     return pool
-
-
-@functools.partial(jax.jit, static_argnums=(2,))
-def gather_rows(pool: jax.Array, rows: jax.Array, extent: int) -> jax.Array:
-    """pool [L,Bmax,cap,...] -> [L,b,extent,...] for the given rows
-    (jitted: one fused gather instead of eager fancy-indexing)."""
-    return pool[:, rows, :extent]
 
 
 def place_prefill(k: jax.Array, cap: int, sink: int,

@@ -8,10 +8,16 @@ paper's step-boundary preemption (SS3.1): every scheduler iteration
 composes a *micro-batch* from the credit-ordered runnable set (lowest
 credit first, up to ``max_batch``), splits it into same-fidelity
 sub-batches, and advances each sub-batch by ONE denoise step with a
-single jitted batched ``ardit.denoise_step`` call over the stacked
-per-stream ring KV caches.  Streams join and leave the batch at step
-boundaries; measured whole-chunk wall time feeds the latency EMAs so
-BMPR budgets and service-credit estimates stay honest (re-profiling).
+single jitted batched ``ardit.denoise_step`` call over a PAGE-GRANULAR
+device KV pool (SS4.1's state plane): each stream owns a cond sink page
+plus a ring of chunk pages through a per-stream page table, and
+sub-batches gather their contiguous context through the tables.
+Streams join and leave the batch at step boundaries; on admission
+pressure the executor evicts the highest-credit resident (host spill,
+bit-exact restore) instead of failing, so more streams than the pool
+holds can be served (oversubscription).  Measured whole-chunk wall time
+feeds the latency EMAs so BMPR budgets and service-credit estimates
+stay honest (re-profiling).
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ from repro.configs.base import ModelConfig
 from repro.core import queues, slack
 from repro.core.bmpr import BMPR
 from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
+from repro.core.state_plane import PagedKVPool
 from repro.core.types import Stream, Worker
 from repro.models import ardit as A
 from repro.models import kvcache
@@ -51,64 +58,240 @@ def compose_batch(sids: Sequence[int],
     return list(groups.values())
 
 
+class PageLedger:
+    """Host-side page bookkeeping of the device pool (no KV values).
+
+    LIFO free list (O(1) pop/push), per-stream page tables (entry 0 =
+    cond sink page, entry 1+r = ring slot r), per-stream chunk counts,
+    and the set of spilled streams.  Residency is mirrored into a
+    ``core.state_plane.PagedKVPool`` so the real executor and the
+    simulator share one accounting model (and one invariant checker).
+    """
+
+    def __init__(self, n_pages: int, pages_per_stream: int):
+        self.n_pages = n_pages
+        self.pages_per_stream = pages_per_stream
+        self._free: List[int] = list(range(n_pages))
+        self.tables: Dict[int, np.ndarray] = {}
+        self.chunks: Dict[int, int] = {}
+        self.spilled: set = set()
+        self.accounting = PagedKVPool(n_pages)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_admit(self) -> bool:
+        return len(self._free) >= self.pages_per_stream
+
+    def resident(self, sid: int) -> bool:
+        return sid in self.tables
+
+    def resident_sids(self) -> List[int]:
+        return list(self.tables)
+
+    def take(self, sid: int, chunks: int = 0) -> np.ndarray:
+        """Allocate a page table for ``sid`` (admission or restore)."""
+        assert sid not in self.tables, f"stream {sid} already resident"
+        assert self.can_admit(), "ledger full: caller must evict first"
+        table = np.asarray([self._free.pop()
+                            for _ in range(self.pages_per_stream)])
+        self.tables[sid] = table
+        self.chunks[sid] = chunks
+        self.spilled.discard(sid)
+        self.accounting.alloc(sid, self.pages_per_stream)
+        return table
+
+    def drop(self, sid: int, spill: bool) -> Optional[np.ndarray]:
+        """Free ``sid``'s pages; ``spill=True`` keeps it re-admittable.
+        Idempotent: dropping a non-resident stream is a no-op (returns
+        None) — no double-free."""
+        table = self.tables.pop(sid, None)
+        if table is None:
+            if not spill:
+                self.spilled.discard(sid)
+                self.chunks.pop(sid, None)
+            return None
+        self._free.extend(int(p) for p in table)
+        self.accounting.release(sid)
+        if spill:
+            self.spilled.add(sid)
+        else:
+            self.chunks.pop(sid, None)
+        return table
+
+    def append_page(self, sid: int) -> int:
+        """Destination page of ``sid``'s next chunk (ring entry)."""
+        return int(self.tables[sid][kvcache.page_of_chunk(
+            self.chunks[sid], self.pages_per_stream - 1)])
+
+    def check(self) -> None:
+        """Pool invariants: page conservation, unique ownership, and
+        agreement with the mirrored state-plane accounting."""
+        allocated = [int(p) for t in self.tables.values() for p in t]
+        assert len(set(allocated)) == len(allocated), \
+            "page owned by two streams"
+        assert len(set(self._free)) == len(self._free), \
+            "duplicate page in free list (double-free)"
+        assert not set(allocated) & set(self._free), \
+            "page both free and allocated"
+        assert len(allocated) + len(self._free) == self.n_pages, \
+            "page leak: used + free != n_pages"
+        assert not self.spilled & set(self.tables), \
+            "stream both spilled and resident"
+        assert self.accounting.used == len(allocated)
+        self.accounting.check()
+
+
 class KVPool:
-    """Stacked per-stream ring KV caches: one [L, Bmax, cap, Hkv, Dh]
-    pair with a free-slot list.  Sub-batches gather their rows, run, and
-    scatter back — the device-side analogue of the simulator's paged
-    pools (residency is whole-stream here; paged defrag is an open
-    ROADMAP item)."""
+    """Page-granular device KV pool (the ROADMAP "paged-KV
+    defragmentation" item).
+
+    KV lives as one [L, n_pages, page_tokens, Hkv, Dh] pair; a resident
+    stream owns ``1 + window_chunks`` pages recorded in its page table
+    (cond sink page + ring of chunk pages; chunk c lands in table entry
+    ``1 + c % window_chunks``).  Sub-batches assemble their contiguous
+    sink+ring context by gathering pages through the tables
+    (``kvcache.gather_pages``), bitwise-identical to the stacked
+    whole-stream rings this replaces.  On admission pressure ``admit``
+    does NOT raise: the stream is parked host-side (evict-or-defer
+    signal) and the executor decides — evict a victim via
+    ``queues.pick_eviction`` and ``restore``, or defer.  Evicted
+    streams spill their pages to host memory and are restored
+    bit-exactly on re-admission, so oversubscription (more streams than
+    the pool holds) never loses context.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Any, max_streams: int):
         self.cfg, self.params = cfg, params
-        cap = A.cache_capacity(cfg)
-        shape = (cfg.n_layers, max_streams, cap, cfg.n_kv_heads,
-                 cfg.head_dim)
+        self._tc = A.chunk_tokens(cfg)
+        self._w = cfg.ardit_window_chunks
+        self.page_tokens = max(A.COND_TOKENS, self._tc)
+        pps = kvcache.pages_per_stream(self._w)
+        self.ledger = PageLedger(max_streams * pps, pps)
+        shape = (cfg.n_layers, self.ledger.n_pages, self.page_tokens,
+                 cfg.n_kv_heads, cfg.head_dim)
         dt = jnp.dtype(cfg.kv_dtype)
         self.k = jnp.zeros(shape, dt)
         self.v = jnp.zeros(shape, dt)
-        self.chunks = np.zeros(max_streams, np.int64)
-        self._free = list(range(max_streams))
-        self._tc = A.chunk_tokens(cfg)
+        self._spill: Dict[int, Dict[str, Any]] = {}   # sid -> host pages
+
+    # ---- ledger views ------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return self.ledger.n_pages
 
     @property
-    def free_slots(self) -> int:
-        return len(self._free)
+    def pages_per_stream(self) -> int:
+        return self.ledger.pages_per_stream
 
-    def alloc(self, cond: jax.Array) -> int:
-        """Admit one stream: write its cond (sink) KV into a free slot."""
-        if not self._free:
-            raise RuntimeError("KVPool exhausted: no free stream slots")
-        slot = self._free.pop(0)
+    @property
+    def free_pages(self) -> int:
+        return self.ledger.free_pages
+
+    @property
+    def chunks(self) -> Dict[int, int]:
+        """Per-stream chunk counts (resident and spilled streams)."""
+        return self.ledger.chunks
+
+    def can_admit(self) -> bool:
+        return self.ledger.can_admit()
+
+    def resident(self, sid: int) -> bool:
+        return self.ledger.resident(sid)
+
+    def resident_sids(self) -> List[int]:
+        return self.ledger.resident_sids()
+
+    def spilled(self, sid: int) -> bool:
+        return sid in self._spill
+
+    # ---- device writes / gathers -------------------------------------------
+    def _write(self, pages: np.ndarray, nk: jax.Array,
+               nv: jax.Array) -> None:
+        pg = jnp.asarray(np.asarray(pages), jnp.int32)
+        self.k = kvcache.pool_write_pages(self.k, nk, pg)
+        self.v = kvcache.pool_write_pages(self.v, nv, pg)
+
+    def _sink_kv(self, cond: jax.Array) -> Tuple[jax.Array, jax.Array]:
         sub = A.init_batched_cache(self.cfg, self.params, cond)
-        self.k = self.k.at[:, slot:slot + 1].set(
-            sub["k"].astype(self.k.dtype))
-        self.v = self.v.at[:, slot:slot + 1].set(
-            sub["v"].astype(self.v.dtype))
-        self.chunks[slot] = 0
-        return slot
+        return (sub["k"][:, :, :A.COND_TOKENS],
+                sub["v"][:, :, :A.COND_TOKENS])
 
-    def release(self, slot: int) -> None:
-        # stale ring contents are invisible (masks derive from chunks=0)
-        self.chunks[slot] = 0
-        self._free.append(slot)
+    def gather(self, sids: Sequence[int],
+               n_ring: int) -> Tuple[jax.Array, jax.Array]:
+        """Contiguous [L, b, COND + n_ring*tc, Hkv, Dh] context for a
+        sub-batch, assembled through the page tables."""
+        tables = jnp.asarray(
+            np.stack([self.ledger.tables[sid] for sid in sids]),
+            jnp.int32)
+        k = kvcache.gather_pages(self.k, tables, A.COND_TOKENS,
+                                 self._tc, n_ring)
+        v = kvcache.gather_pages(self.v, tables, A.COND_TOKENS,
+                                 self._tc, n_ring)
+        return k, v
 
-    def append(self, slots: Sequence[int], new_kv: Dict[str, jax.Array],
+    # ---- residency lifecycle -----------------------------------------------
+    def admit(self, sid: int, cond: jax.Array) -> bool:
+        """Admit one stream: write its cond (sink) KV into a fresh page
+        set.  Returns False when the pool is full — the stream is parked
+        host-side and the caller must evict-and-``restore`` or defer
+        (no exception)."""
+        sk, sv = self._sink_kv(cond)
+        if self.can_admit():
+            table = self.ledger.take(sid)
+            self._write(table[:1], sk, sv)
+            return True
+        dt = self.k.dtype
+        pages = np.zeros((self.cfg.n_layers, self.pages_per_stream,
+                          self.page_tokens) + self.k.shape[3:], dt)
+        pages_v = np.zeros_like(pages)
+        pages[:, 0, :A.COND_TOKENS] = np.asarray(sk[:, 0].astype(dt))
+        pages_v[:, 0, :A.COND_TOKENS] = np.asarray(sv[:, 0].astype(dt))
+        self._spill[sid] = {"k": pages, "v": pages_v}
+        self.ledger.spilled.add(sid)
+        self.ledger.chunks[sid] = 0
+        return False
+
+    def evict(self, sid: int) -> int:
+        """Spill a resident stream's pages to host memory and free them.
+        Returns the number of pages released (credit-aware victim
+        selection is the caller's job — ``queues.pick_eviction``)."""
+        table = self.ledger.tables[sid]
+        rows = jnp.asarray(table, jnp.int32)
+        # materialize on host BEFORE the pages are reused
+        self._spill[sid] = {"k": np.asarray(self.k[:, rows]),
+                            "v": np.asarray(self.v[:, rows])}
+        self.ledger.drop(sid, spill=True)
+        return self.pages_per_stream
+
+    def restore(self, sid: int) -> bool:
+        """Bring a spilled stream back resident (bit-exact: its pages
+        are written back verbatim).  False when the pool is full."""
+        if not self.can_admit():
+            return False
+        sp = self._spill.pop(sid)
+        table = self.ledger.take(sid, chunks=self.ledger.chunks[sid])
+        self._write(table, jnp.asarray(sp["k"]), jnp.asarray(sp["v"]))
+        return True
+
+    def release(self, sid: int) -> None:
+        """Retire a stream entirely (resident or spilled).  Idempotent."""
+        self.ledger.drop(sid, spill=False)
+        self._spill.pop(sid, None)
+
+    def append(self, sids: Sequence[int], new_kv: Dict[str, jax.Array],
                quant: str) -> None:
-        """Ring-write one finished chunk of KV per stream straight into
-        the pool and advance its chunk count (``new_kv`` rows align
-        with ``slots``)."""
+        """Ring-write one finished chunk of KV per stream into its page
+        and advance its chunk count (``new_kv`` rows align with
+        ``sids``)."""
         if quant == "fp8":
             new_kv = {k: v.astype(jnp.float8_e4m3fn)
                       for k, v in new_kv.items()}
-        idx = np.asarray(slots)
-        dest = np.asarray(kvcache.chunk_slot(
-            self.chunks[idx], self.cfg.ardit_window_chunks,
-            A.COND_TOKENS, self._tc))
-        rows = jnp.asarray(idx, jnp.int32)
-        dest = jnp.asarray(dest, jnp.int32)
-        self.k = kvcache.pool_write_chunk(self.k, new_kv["k"], rows, dest)
-        self.v = kvcache.pool_write_chunk(self.v, new_kv["v"], rows, dest)
-        self.chunks[idx] += 1
+        pages = np.asarray([self.ledger.append_page(sid) for sid in sids])
+        self._write(pages, new_kv["k"], new_kv["v"])
+        for sid in sids:
+            self.ledger.chunks[sid] += 1
 
 
 @dataclasses.dataclass
@@ -139,11 +322,13 @@ class BatchedChunkExecutor(ChunkExecutor):
                  max_streams: int = 16):
         super().__init__(cfg=cfg, params=params, seed=seed)
         self.pool = KVPool(self.cfg, self.params, max_streams)
-        self.slot: Dict[int, int] = {}
         self.inflight: Dict[int, InflightChunk] = {}
         self.chunks: Dict[int, List[jax.Array]] = {}
         self.fidelity_log: Dict[int, List[str]] = {}
         self.step_ema: Dict[str, float] = {}      # per-step wall seconds
+        self.evictions = 0
+        self.restores = 0
+        self.deferrals = 0      # residency requests that had to wait
         # gathered context + masks are constant across the steps of a
         # chunk (they change only when a stream's chunk count does), so
         # they are cached per (group, fill, fidelity) chunk boundary
@@ -151,19 +336,67 @@ class BatchedChunkExecutor(ChunkExecutor):
         self._staging_cache: Dict[tuple, tuple] = {}
 
     # ---- stream lifecycle --------------------------------------------------
-    def admit(self, sid: int, seed: int = 0) -> None:
+    def admit(self, sid: int, seed: int = 0,
+              streams: Optional[Dict[int, Stream]] = None,
+              protect: Sequence[int] = ()) -> bool:
+        """Admit a stream.  On a full pool, evict the highest-credit
+        evictable resident first (``streams`` supplies the credit view);
+        without a credit view or an evictable victim the stream is
+        parked host-side (defer) and False is returned — it joins later
+        via ``ensure_resident``.  Never raises on exhaustion."""
         key = jax.random.PRNGKey(1000 + seed)
         cond = jax.random.normal(
             key, (1, A.COND_TOKENS, self.cfg.d_model)) * 0.02
-        self.slot[sid] = self.pool.alloc(cond)
         self.chunks[sid] = []
         self.fidelity_log[sid] = []
         # boundary keys are (sids, fills, fid) and would collide with a
         # previous stream of the same id at the same fill — drop them
         self._boundary_cache.clear()
+        while not self.pool.can_admit():
+            if not self._evict_one(streams, protect=set(protect) | {sid}):
+                break
+        ok = self.pool.admit(sid, cond)      # parks host-side when full
+        if not ok:
+            self.deferrals += 1
+        return ok
+
+    def _evict_one(self, streams: Optional[Dict[int, Stream]],
+                   protect: set) -> bool:
+        """Free one stream's pages: credit-aware victim selection over
+        the evictable residents (in-flight streams are protected — their
+        chunk is mid-denoise and rejoins the batch at the next step)."""
+        if streams is None:
+            return False
+        victims = [s for s in self.pool.resident_sids()
+                   if s not in self.inflight]
+        victim = queues.pick_eviction(victims, streams, protect=protect)
+        if victim is None:
+            return False
+        self.pool.evict(victim)
+        self.evictions += 1
+        self._boundary_cache.clear()
+        return True
+
+    def ensure_resident(self, sid: int,
+                        streams: Optional[Dict[int, Stream]] = None,
+                        protect: Sequence[int] = ()) -> bool:
+        """Re-admit a spilled stream through the join/leave machinery
+        (spilled streams rejoin at chunk boundaries, bit-exactly).
+        False means the stream must wait this tick (defer)."""
+        if self.pool.resident(sid):
+            return True
+        assert self.pool.spilled(sid), f"stream {sid} was never admitted"
+        while not self.pool.can_admit():
+            if not self._evict_one(streams, protect=set(protect) | {sid}):
+                self.deferrals += 1
+                return False
+        ok = self.pool.restore(sid)
+        assert ok
+        self.restores += 1
+        return True
 
     def retire(self, sid: int) -> None:
-        self.pool.release(self.slot.pop(sid))
+        self.pool.release(sid)
         self.inflight.pop(sid, None)
         self._boundary_cache.clear()
 
@@ -183,22 +416,21 @@ class BatchedChunkExecutor(ChunkExecutor):
         return f.fidelity.steps + 1 - f.step
 
     # ---- the batched step --------------------------------------------------
-    def _boundary(self, sids: Sequence[int], slots: Sequence[int],
-                  chunk_idx: np.ndarray,
+    def _boundary(self, sids: Sequence[int], chunk_idx: np.ndarray,
                   fid: FidelityConfig) -> Dict[str, Any]:
-        """Per-chunk-boundary state of a sub-batch: gathered context
-        (sliced to the group's resident extent, so compute scales with
-        fill like the sequential path), positions, and the denoise/clean
-        visibility masks.  Constant across the chunk's steps."""
+        """Per-chunk-boundary state of a sub-batch: page-table-gathered
+        context (sliced to the group's resident extent, so compute
+        scales with fill like the sequential path), positions, and the
+        denoise/clean visibility masks.  Constant across the chunk's
+        steps."""
         key = (tuple(sids), tuple(chunk_idx.tolist()), fid.key)
         bnd = self._boundary_cache.get(key)
         if bnd is not None:
             return bnd
         tc = A.chunk_tokens(self.cfg)
         w_max = self.cfg.ardit_window_chunks
-        extent = A.COND_TOKENS + int(min(chunk_idx.max(initial=0),
-                                         w_max)) * tc
-        idx = np.asarray(slots)
+        n_ring = int(min(chunk_idx.max(initial=0), w_max))
+        extent = A.COND_TOKENS + n_ring * tc
         # sparsity applies to denoise steps only; the clean-context pass
         # sees the full fidelity window.  All-true masks (homogeneous
         # fill, no sparsity, full window) are dropped so the jitted step
@@ -207,10 +439,10 @@ class BatchedChunkExecutor(ChunkExecutor):
                                     fid.sparsity)[:, :extent]
         cl = A.batched_context_mask(self.cfg, chunk_idx,
                                     fid.window)[:, :extent]
-        rows = jnp.asarray(idx, jnp.int32)
+        ctx_k, ctx_v = self.pool.gather(sids, n_ring)
         bnd = {
-            "ctx_k": kvcache.gather_rows(self.pool.k, rows, extent),
-            "ctx_v": kvcache.gather_rows(self.pool.v, rows, extent),
+            "ctx_k": ctx_k,
+            "ctx_v": ctx_v,
             "q_offset": jnp.asarray(A.COND_TOKENS + chunk_idx * tc,
                                     jnp.int32),
             "dn": None if dn.all() else jnp.asarray(dn),
@@ -261,11 +493,13 @@ class BatchedChunkExecutor(ChunkExecutor):
         fid = flights[0].fidelity
         assert all(f.fidelity.key == fid.key for f in flights), \
             "sub-batch must share one fidelity configuration"
-        slots = [self.slot[sid] for sid in sids]
-        chunk_idx = self.pool.chunks[np.asarray(slots)]
+        assert all(self.pool.resident(sid) for sid in sids), \
+            "sub-batch contains a non-resident (spilled) stream"
+        chunk_idx = np.asarray([self.pool.chunks[sid] for sid in sids],
+                               np.int64)
 
         t0 = time.perf_counter()
-        bnd = self._boundary(sids, slots, chunk_idx, fid)
+        bnd = self._boundary(sids, chunk_idx, fid)
         x = (flights[0].x if len(flights) == 1
              else jnp.concatenate([f.x for f in flights], axis=0))
         denoising = tuple(f.phase == "denoise" for f in flights)
@@ -286,7 +520,7 @@ class BatchedChunkExecutor(ChunkExecutor):
                 completed.append(sid)
         if clean_rows:
             rows = np.asarray(clean_rows)
-            self.pool.append([slots[i] for i in clean_rows],
+            self.pool.append([sids[i] for i in clean_rows],
                              {"k": new_kv["k"][:, rows],
                               "v": new_kv["v"][:, rows]}, fid.quant)
             now_wall = None
@@ -333,18 +567,25 @@ def serve_session_batched(n_streams: int = 4, chunks_per_stream: int = 4,
                           max_batch: int = 4,
                           realtime_budget: Optional[float] = None,
                           fidelity_policy=None,
+                          pool_streams: Optional[int] = None,
                           verbose: bool = True) -> List[ServedStream]:
     """End-to-end batched session: the SAME control-plane code paths as
     the simulator (service credit, credit-sorted queue, dispatch-set)
     drive real batched chunk generation.
 
     Per iteration: update credits -> order queue -> take the runnable
-    set (``queues.next_dispatch_set``) -> compose same-fidelity
-    sub-batches -> one jitted step each.  Measured wall time feeds
-    ``t_next``/``remaining`` so credits track this host, not the
-    H100-calibrated offline profile.
+    set (``queues.next_dispatch_set``) -> bring dispatched streams
+    page-resident (credit-aware eviction on pressure) -> compose
+    same-fidelity sub-batches -> one jitted step each.  Measured wall
+    time feeds ``t_next``/``remaining`` so credits track this host, not
+    the H100-calibrated offline profile.
+
+    ``pool_streams`` caps co-resident streams (oversubscription when
+    < n_streams: extra streams spill to host and rejoin at chunk
+    boundaries); defaults to n_streams + 1, i.e. everyone resident.
     """
-    ex = BatchedChunkExecutor(max_streams=n_streams + 1)
+    ex = BatchedChunkExecutor(
+        max_streams=pool_streams or (n_streams + 1))
     policy = fidelity_policy or BMPR(get_profile())
 
     # calibrate the wall-clock playout rate to this host (and warm the
@@ -379,10 +620,26 @@ def serve_session_batched(n_streams: int = 4, chunks_per_stream: int = 4,
                 s.running_on = (0,) if s.sid in ex.inflight else None
                 slack.update_stream_credit(s, now)
         queues.order_queue(worker, streams)
-        sids = queues.next_dispatch_set(worker, streams, now,
-                                        max_batch=max_batch)
-        if not sids:
+        runnable = queues.next_dispatch_set(worker, streams, now)
+        if not runnable:
             break
+        # page-granular admission control: fill the micro-batch from the
+        # FULL credit-ordered runnable set with streams that are — or
+        # can be made — page-resident.  A spilled stream may displace a
+        # higher-credit resident (batch members and the admittee are
+        # protected, in-flight chunks always are), but one that cannot
+        # displace anyone is skipped rather than allowed to starve the
+        # batch; it retries next tick.
+        sids = []
+        for sid in runnable:
+            if len(sids) >= max_batch:
+                break
+            if ex.ensure_resident(sid, streams, protect=sids + [sid]):
+                sids.append(sid)
+        if not sids:
+            if not ex.inflight:
+                break                   # no residency, no work: give up
+            continue
         for sid in sids:
             if sid not in ex.inflight:
                 s = streams[sid]
@@ -412,6 +669,12 @@ def serve_session_batched(n_streams: int = 4, chunks_per_stream: int = 4,
                 s.next_deadline = max(ddl, now) + s.chunk_seconds
                 s.chunks_done += 1
                 s.fidelity_log.append(fid_key)
+                if s.finished:
+                    # free the pages NOW: a finished stream's KV would
+                    # otherwise pin residency and be pointlessly spilled
+                    # to host on the next eviction (retire is idempotent
+                    # with the cleanup below; generated chunks survive)
+                    ex.retire(sid)
                 if verbose:
                     print(f"t={now:6.2f}s stream {sid} chunk "
                           f"{s.chunks_done}/{s.target_chunks} "

@@ -91,7 +91,8 @@ def serve_session(n_streams: int = 2, chunks_per_stream: int = 4,
                   realtime_budget: Optional[float] = None,
                   verbose: bool = True,
                   batched: bool = False,
-                  max_batch: int = 4) -> List[ServedStream]:
+                  max_batch: int = 4,
+                  pool_streams: Optional[int] = None) -> List[ServedStream]:
     """Small end-to-end session: BMPR-driven fidelity on the real model.
 
     ``realtime_budget``: seconds of playout per chunk used for slack
@@ -101,13 +102,16 @@ def serve_session(n_streams: int = 2, chunks_per_stream: int = 4,
     ``batched=True`` routes to the credit-ordered micro-batch executor
     (``repro.serve.batcher``): same control mechanisms, but up to
     ``max_batch`` streams advance together per denoise step.
+    ``pool_streams`` (batched only) caps co-resident streams in the page
+    pool — fewer than ``n_streams`` oversubscribes: overflow spills to
+    host and rotates back in via credit-aware eviction.
     """
     if batched:
         from repro.serve.batcher import serve_session_batched
         return serve_session_batched(
             n_streams=n_streams, chunks_per_stream=chunks_per_stream,
             max_batch=max_batch, realtime_budget=realtime_budget,
-            verbose=verbose)
+            pool_streams=pool_streams, verbose=verbose)
     ex = ChunkExecutor()
     bmpr = BMPR(get_profile())
     # calibrate the wall-clock playout rate to this host

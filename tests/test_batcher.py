@@ -169,7 +169,7 @@ def test_join_leave_at_step_boundaries():
     # drive stream 0 to completion (steps=2 -> one clean pass remains)
     done, _ = ex.run_step([0])
     assert done == [0] and 0 not in ex.inflight
-    assert len(ex.chunks[0]) == 1 and ex.pool.chunks[ex.slot[0]] == 1
+    assert len(ex.chunks[0]) == 1 and ex.pool.chunks[0] == 1
     # stream 1 resumes and finishes alongside 2 (both at step 1:
     # one denoise step + the clean pass remain)
     finished = []
@@ -185,17 +185,19 @@ def test_join_leave_at_step_boundaries():
         ex.run_step([0, 1])
 
 
-def test_pool_alloc_release_reuse():
+def test_pool_admit_defer_and_reuse():
+    """A full pool no longer raises: the stream is parked host-side
+    (evict-or-defer signal) and joins once pages free up."""
     cfg = tiny_cfg()
     ex = BatchedChunkExecutor(cfg=cfg, max_streams=2)
-    ex.admit(0, seed=0)
-    ex.admit(1, seed=1)
-    assert ex.pool.free_slots == 0
-    with pytest.raises(RuntimeError):
-        ex.admit(2, seed=2)
+    assert ex.admit(0, seed=0) and ex.admit(1, seed=1)
+    assert ex.pool.free_pages == 0 and not ex.pool.can_admit()
+    assert not ex.admit(2, seed=2)             # deferred, NOT an error
+    assert ex.pool.spilled(2) and not ex.pool.resident(2)
     ex.retire(0)
-    ex.admit(2, seed=2)                        # slot reused
-    assert ex.pool.chunks[ex.slot[2]] == 0
+    assert ex.ensure_resident(2)               # pages reused
+    assert ex.pool.chunks[2] == 0
+    ex.pool.ledger.check()
 
 
 def test_readmitted_sid_uses_fresh_cond():

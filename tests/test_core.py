@@ -101,6 +101,58 @@ def test_queue_order_and_eviction():
     assert queues.pick_eviction([0, 1, 2], view.streams, protect=2) == 0
 
 
+def test_next_dispatch_set_empty_and_all_paused():
+    """Edge cases of the runnable set: an empty queue and a queue of
+    only-paused streams both yield an empty dispatch set (the batched
+    executor must idle, not crash)."""
+    view = mk_view()
+    w = view.workers[0]
+    assert queues.next_dispatch_set(w, view.streams, now=0.0) == []
+    assert queues.next_dispatch(w, view.streams, now=0.0) is None
+    for i in range(3):
+        s = mk_stream(i)
+        s.paused_until = 99.0
+        view.streams[i] = s
+        w.queue.append(i)
+    assert queues.next_dispatch_set(w, view.streams, now=0.0) == []
+    assert queues.next_dispatch(w, view.streams, now=0.0) is None
+    # pause elapsed: all runnable again
+    assert len(queues.next_dispatch_set(w, view.streams, now=100.0)) == 3
+
+
+def test_pick_eviction_protect_and_empty():
+    """``protect`` being the only resident -> no victim; empty resident
+    set -> no victim; protect accepts an iterable (the batched
+    executor shields the whole in-flight set)."""
+    view = mk_view()
+    for i, ddl in enumerate([5.0, 2.0, 9.0]):
+        s = mk_stream(i, deadline=ddl)
+        slack.update_stream_credit(s, now=0.0)
+        view.streams[i] = s
+    assert queues.pick_eviction([], view.streams) is None
+    assert queues.pick_eviction([2], view.streams, protect=2) is None
+    assert queues.pick_eviction([0, 1, 2], view.streams,
+                                protect={2, 0}) == 1
+    assert queues.pick_eviction([0, 1, 2], view.streams,
+                                protect=[0, 1, 2]) is None
+
+
+def test_pick_eviction_credit_tie_break_is_deterministic():
+    """Equal credits: the LOWEST sid is evicted — pinned so replayed
+    schedules evict identically."""
+    view = mk_view()
+    for i in range(4):
+        s = mk_stream(i, deadline=7.0)         # identical credit inputs
+        slack.update_stream_credit(s, now=0.0)
+        view.streams[i] = s
+    credits = {view.streams[i].credit for i in range(4)}
+    assert len(credits) == 1                   # genuine tie
+    assert queues.pick_eviction([0, 1, 2, 3], view.streams) == 0
+    assert queues.pick_eviction([3, 1, 2], view.streams) == 1
+    assert queues.pick_eviction([0, 1, 2, 3], view.streams,
+                                protect=0) == 1
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 1: re-homing
 # ---------------------------------------------------------------------------

@@ -1,0 +1,398 @@
+"""Page-granular KV pool conformance suite.
+
+Four angles on the paged executor (serve/batcher.py KVPool):
+  * layout parity — gather-by-page-table reassembles EXACTLY (bitwise)
+    the stacked chunk-ring context the whole-slot pool kept per stream;
+  * model parity — ``serve_chunk_batched`` from a page-table-assembled
+    cache is bitwise-identical to the stacked-ring layout across window
+    sizes, fp8/bf16 KV, and join/leave sequences;
+  * oversubscription conformance — an executor whose pool holds half
+    the streams completes all of them with bit-identical chunks to the
+    fully-resident run (spill/restore loses nothing);
+  * pool invariants — hypothesis-driven admit/evict/restore/append/
+    release sequences preserve page conservation, unique ownership,
+    release idempotence, and page-table/mask consistency.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.fidelity import FidelityConfig
+from repro.models import ardit as A
+from repro.models import kvcache
+from repro.serve.batcher import BatchedChunkExecutor, KVPool, PageLedger
+
+from test_batcher import nondegenerate_params, tiny_cfg
+
+KEY = jax.random.PRNGKey(0)
+
+
+def mk_pool(cfg, params, max_streams, conds):
+    pool = KVPool(cfg, params, max_streams)
+    for i in range(conds.shape[0]):
+        assert pool.admit(i, conds[i:i + 1])
+    return pool
+
+
+def full_view(pool, sids):
+    """Full-capacity stacked-layout view assembled through page tables."""
+    k, v = pool.gather(sids, n_ring=pool.cfg.ardit_window_chunks)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# layout parity: gather/write through page tables == stacked chunk ring
+# ---------------------------------------------------------------------------
+
+def test_gather_pages_matches_manual_assembly():
+    """Pure-layout check: gather_pages is the exact sink+ring
+    permutation, independent of the model."""
+    L, n_pages, P, H, D = 2, 8, 7, 1, 3
+    sink, tc = 5, 7
+    pool = jnp.asarray(
+        np.random.default_rng(0).normal(size=(L, n_pages, P, H, D)),
+        jnp.float32)
+    tables = np.array([[0, 3, 5], [2, 6, 1]])
+    for n_ring in range(3):
+        got = np.asarray(kvcache.gather_pages(
+            pool, jnp.asarray(tables, jnp.int32), sink, tc, n_ring))
+        pn = np.asarray(pool)
+        for b, tab in enumerate(tables):
+            parts = [pn[:, tab[0], :sink]]
+            parts += [pn[:, tab[1 + r], :tc] for r in range(n_ring)]
+            np.testing.assert_array_equal(
+                got[:, b], np.concatenate(parts, axis=1))
+
+
+@pytest.mark.parametrize("quant", ["bf16", "fp8"])
+def test_paged_pool_tracks_stacked_ring_bitwise(quant):
+    """Appending chunks through the page pool reproduces the stacked
+    ring cache (init_batched_cache + append_chunk_kv_batched) bit for
+    bit, through ring wrap-around, for both KV dtypes."""
+    cfg = tiny_cfg(window_chunks=2)
+    p = nondegenerate_params(cfg, KEY)
+    B, w = 2, cfg.ardit_window_chunks
+    cond = 0.02 * jax.random.normal(jax.random.PRNGKey(3),
+                                    (B, A.COND_TOKENS, cfg.d_model))
+    tc = A.chunk_tokens(cfg)
+    ring = A.init_batched_cache(cfg, p, cond)
+    pool = mk_pool(cfg, p, B, cond)
+    cap = A.cache_capacity(cfg)
+    for c in range(w + 2):                     # wraps the ring twice
+        kv = {n: jax.random.normal(
+                  jax.random.PRNGKey(10 * c + i),
+                  (cfg.n_layers, B, tc, cfg.n_kv_heads, cfg.head_dim))
+              for i, n in enumerate(("k", "v"))}
+        if quant == "fp8":
+            kv = {n: a.astype(jnp.float8_e4m3fn) for n, a in kv.items()}
+        ring = A.append_chunk_kv_batched(cfg, ring, kv)
+        pool.append([0, 1], kv, quant="bf16")  # kv already cast above
+        kf, vf = full_view(pool, [0, 1])
+        assert kf.shape == (cfg.n_layers, B, cap, cfg.n_kv_heads,
+                            cfg.head_dim)
+        np.testing.assert_array_equal(np.asarray(kf),
+                                      np.asarray(ring["k"]))
+        np.testing.assert_array_equal(np.asarray(vf),
+                                      np.asarray(ring["v"]))
+        assert [pool.chunks[i] for i in range(B)] \
+            == list(np.asarray(ring["chunks"]))
+    pool.ledger.check()
+
+
+def test_spill_restore_is_bitexact():
+    """Evict -> (pages get dirtied by another stream) -> restore must
+    reproduce the stream's context bit for bit."""
+    cfg = tiny_cfg(window_chunks=2)
+    p = nondegenerate_params(cfg, KEY)
+    cond = 0.02 * jax.random.normal(jax.random.PRNGKey(5),
+                                    (2, A.COND_TOKENS, cfg.d_model))
+    tc = A.chunk_tokens(cfg)
+    pool = KVPool(cfg, p, max_streams=1)       # room for ONE stream
+    assert pool.admit(0, cond[0:1])
+    kv = {n: jax.random.normal(jax.random.PRNGKey(i),
+                               (cfg.n_layers, 1, tc, cfg.n_kv_heads,
+                                cfg.head_dim))
+          for i, n in enumerate(("k", "v"))}
+    pool.append([0], kv, quant="bf16")
+    k_before, v_before = full_view(pool, [0])
+    k_before, v_before = np.asarray(k_before), np.asarray(v_before)
+
+    pool.evict(0)
+    assert pool.spilled(0) and not pool.resident(0)
+    # dirty the recycled pages with a different stream's KV
+    assert pool.admit(1, cond[1:2])
+    dirty = {n: 7.0 + a for n, a in kv.items()}
+    pool.append([1], dirty, quant="bf16")
+    pool.release(1)
+
+    assert pool.restore(0)
+    assert pool.chunks[0] == 1
+    k_after, v_after = full_view(pool, [0])
+    np.testing.assert_array_equal(np.asarray(k_after), k_before)
+    np.testing.assert_array_equal(np.asarray(v_after), v_before)
+    pool.ledger.check()
+
+
+# ---------------------------------------------------------------------------
+# model parity: serve_chunk_batched from a paged view == stacked ring
+# ---------------------------------------------------------------------------
+
+def _paged_serve_chunk(cfg, p, pool, sids, noise, fid):
+    """Run ``serve_chunk_batched`` from a page-table-assembled cache and
+    ring-write the produced chunk KV back into the pool (the paged
+    executor's data path, expressed through the reference entry point)."""
+    w = cfg.ardit_window_chunks
+    tc = A.chunk_tokens(cfg)
+    chunks = np.asarray([pool.chunks[s] for s in sids], np.int64)
+    kf, vf = pool.gather(sids, n_ring=w)
+    cache = {"k": kf, "v": vf, "chunks": chunks}
+    x, cache2 = A.serve_chunk_batched(cfg, p, cache, noise, fid)
+    # extract the appended chunk (already in pool dtype) and page it in
+    slots = np.asarray(kvcache.chunk_slot(chunks, w, A.COND_TOKENS, tc))
+    nk = jnp.stack([cache2["k"][:, i, s:s + tc]
+                    for i, s in enumerate(slots)], axis=1)
+    nv = jnp.stack([cache2["v"][:, i, s:s + tc]
+                    for i, s in enumerate(slots)], axis=1)
+    pool.append(sids, {"k": nk, "v": nv}, quant="bf16")
+    return x
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("window_chunks", [2, 3])
+def test_serve_chunk_batched_paged_vs_ring_bitwise(window_chunks):
+    """The tentpole parity claim: page-table layout == stacked-ring
+    layout, bitwise, across fidelity windows, fp8/bf16 KV, sparsity,
+    and ring wrap-around."""
+    cfg = tiny_cfg(window_chunks=window_chunks)
+    p = nondegenerate_params(cfg, KEY)
+    B = 2
+    cond = 0.02 * jax.random.normal(jax.random.PRNGKey(1),
+                                    (B, A.COND_TOKENS, cfg.d_model))
+    tc = A.chunk_tokens(cfg)
+    fids = [FidelityConfig(2, 0.0, 2, "bf16"),
+            FidelityConfig(2, 0.9, 1, "fp8"),
+            FidelityConfig(2, 0.6, window_chunks, "bf16"),
+            FidelityConfig(2, 0.0, 2, "bf16")]  # wraps the ring
+
+    ring = A.init_batched_cache(cfg, p, cond)
+    pool = mk_pool(cfg, p, B, cond)
+    for c, fid in enumerate(fids):
+        noise = jnp.concatenate(
+            [jax.random.normal(jax.random.PRNGKey(c * 100),
+                               (1, tc, A.LATENT_CH))] * B, axis=0)
+        x_ring, ring = A.serve_chunk_batched(cfg, p, ring, noise, fid)
+        x_paged = _paged_serve_chunk(cfg, p, pool, [0, 1], noise, fid)
+        # exact match: same executable over bit-identical caches
+        np.testing.assert_array_equal(np.asarray(x_paged),
+                                      np.asarray(x_ring))
+        kf, vf = full_view(pool, [0, 1])
+        np.testing.assert_array_equal(np.asarray(kf),
+                                      np.asarray(ring["k"]))
+        np.testing.assert_array_equal(np.asarray(vf),
+                                      np.asarray(ring["v"]))
+
+
+@pytest.mark.slow
+def test_paged_join_leave_matches_ring_bitwise():
+    """Join/leave sequence: stream 0 runs two chunks alone
+    (heterogeneous fills), then stream 1 joins — the paged path must
+    stay bitwise on the stacked-ring trajectory throughout."""
+    cfg = tiny_cfg(window_chunks=3)
+    p = nondegenerate_params(cfg, KEY)
+    cond = 0.02 * jax.random.normal(jax.random.PRNGKey(7),
+                                    (2, A.COND_TOKENS, cfg.d_model))
+    tc = A.chunk_tokens(cfg)
+    fid = FidelityConfig(2, 0.0, 2, "bf16")
+
+    def noise(seed, b=1):
+        one = jax.random.normal(jax.random.PRNGKey(seed),
+                                (1, tc, A.LATENT_CH))
+        return jnp.concatenate([one] * b, axis=0)
+
+    ring = A.init_batched_cache(cfg, p, cond)
+    pool = mk_pool(cfg, p, 2, cond)
+    for c in range(2):                         # stream 0 alone
+        sub = {"k": ring["k"][:, :1], "v": ring["v"][:, :1],
+               "chunks": ring["chunks"][:1]}
+        x_r, sub = A.serve_chunk_batched(cfg, p, sub, noise(c), fid)
+        ring["k"] = ring["k"].at[:, :1].set(sub["k"])
+        ring["v"] = ring["v"].at[:, :1].set(sub["v"])
+        ring["chunks"][:1] = sub["chunks"]
+        x_p = _paged_serve_chunk(cfg, p, pool, [0], noise(c), fid)
+        np.testing.assert_array_equal(np.asarray(x_p), np.asarray(x_r))
+    # stream 1 joins: fills (2, 0) in ONE sub-batch
+    x_r, ring = A.serve_chunk_batched(cfg, p, ring, noise(10, b=2), fid)
+    x_p = _paged_serve_chunk(cfg, p, pool, [0, 1], noise(10, b=2), fid)
+    np.testing.assert_array_equal(np.asarray(x_p), np.asarray(x_r))
+    kf, vf = full_view(pool, [0, 1])
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(ring["k"]))
+    np.testing.assert_array_equal(np.asarray(vf), np.asarray(ring["v"]))
+
+
+# ---------------------------------------------------------------------------
+# oversubscription conformance: spill/restore loses nothing
+# ---------------------------------------------------------------------------
+
+def _drive_round_robin(ex, sids, n_chunks, fid, streams=None):
+    """One stream at a time (single-row sub-batches keep the jitted
+    shapes identical between runs) with eviction-aware residency."""
+    for _ in range(n_chunks):
+        for sid in sids:
+            if streams is not None:
+                for s in sids:
+                    streams[s].credit = float(len(ex.chunks[s]))
+            assert ex.ensure_resident(sid, streams, protect=[sid])
+            ex.begin_chunk(sid, fid, 0.0)
+            while sid in ex.inflight:
+                ex.run_step([sid])
+    return {sid: [np.asarray(c) for c in ex.chunks[sid]] for sid in sids}
+
+
+@pytest.mark.slow
+def test_oversubscribed_executor_matches_unconstrained():
+    """2x pool capacity streams complete through eviction/restore with
+    chunks bitwise-identical to the everyone-resident run — the
+    acceptance bar for credit-aware oversubscription."""
+    from repro.core.types import Stream
+    cfg = tiny_cfg(window_chunks=2)
+    p = nondegenerate_params(cfg, KEY)
+    fid = FidelityConfig(2, 0.0, 2, "bf16")
+    sids = [0, 1, 2, 3]
+    n_chunks = 2
+
+    full = BatchedChunkExecutor(cfg=cfg, params=p, max_streams=4)
+    for sid in sids:
+        assert full.admit(sid, seed=sid)
+    want = _drive_round_robin(full, sids, n_chunks, fid)
+
+    over = BatchedChunkExecutor(cfg=cfg, params=p, max_streams=2)
+    streams = {sid: Stream(sid=sid, arrival=0.0, target_chunks=n_chunks,
+                           chunk_seconds=1.0, home=0, ttfc_slack=1e9)
+               for sid in sids}
+    admitted = [over.admit(sid, seed=sid) for sid in sids]
+    assert admitted == [True, True, False, False]   # overflow defers
+    got = _drive_round_robin(over, sids, n_chunks, fid, streams=streams)
+
+    assert over.evictions > 0 and over.restores > 0
+    for sid in sids:
+        assert len(got[sid]) == n_chunks
+        for a, b in zip(got[sid], want[sid]):
+            np.testing.assert_array_equal(a, b)
+    over.pool.ledger.check()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: pool invariants under arbitrary op sequences
+# ---------------------------------------------------------------------------
+# Guarded import (as in test_properties.py) — but only these two tests
+# depend on hypothesis, so the parity suite above must still run when
+# it is absent: skip the tests, not the module.
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                            # pragma: no cover
+    given = None
+
+
+def _ledger_invariants(ops, w, cap_streams):
+    """Page conservation (used + free == n_pages, mirrored accounting
+    agrees), unique page ownership, no double-free, release idempotence,
+    and append landing in the table entry ``1 + c % W``."""
+    pps = kvcache.pages_per_stream(w)
+    led = PageLedger(cap_streams * pps, pps)
+    for op, sid in ops:
+        if op == "admit" and not led.resident(sid) \
+                and sid not in led.spilled:
+            if led.can_admit():
+                table = led.take(sid)
+                assert len(table) == pps
+            else:
+                led.spilled.add(sid)           # parked (defer signal)
+                led.chunks[sid] = 0
+        elif op == "evict" and led.resident(sid):
+            freed = led.drop(sid, spill=True)
+            assert freed is not None and len(freed) == pps
+            assert sid in led.spilled
+        elif op == "restore" and sid in led.spilled and led.can_admit():
+            led.take(sid, chunks=led.chunks[sid])
+        elif op == "append" and led.resident(sid):
+            page = led.append_page(sid)
+            assert page == led.tables[sid][1 + led.chunks[sid] % w]
+            led.chunks[sid] += 1
+        elif op == "release":
+            led.drop(sid, spill=False)
+            assert not led.resident(sid) and sid not in led.spilled
+        elif op == "double_release":
+            led.drop(sid, spill=False)
+            assert led.drop(sid, spill=False) is None   # idempotent
+        led.check()                            # invariants after EVERY op
+    # full teardown returns every page
+    for sid in list(led.tables) + list(led.spilled):
+        led.drop(sid, spill=False)
+    led.check()
+    assert led.free_pages == led.n_pages
+
+
+def _mask_within_extent(n, w, window):
+    """Page-table/mask consistency: every token
+    ``batched_context_mask`` marks visible lies inside the extent the
+    executor gathers (sink + min(fill, W) ring slots) — the property
+    that makes extent-sliced page gathering safe."""
+    cfg = dataclasses.replace(
+        get_config("ardit-self-forcing").reduced(),
+        n_layers=2, ardit_window_chunks=w)
+    tc = A.chunk_tokens(cfg)
+    mask = A.batched_context_mask(cfg, np.array([n]), window)[0]
+    extent = A.COND_TOKENS + min(n, w) * tc
+    assert not mask[extent:].any()
+    # the visible ring slots are exactly the pages holding the last
+    # min(window, n, W) chunks
+    visible_chunks = range(max(0, n - min(window, n, w)), n)
+    expect_slots = {c % w for c in visible_chunks}
+    got_slots = {int(i) // tc
+                 for i in np.flatnonzero(mask[A.COND_TOKENS:])}
+    assert got_slots <= expect_slots
+    if min(window, n, w) == min(n, w):         # full-window visibility
+        assert got_slots == expect_slots
+
+
+if given is not None:
+    SETTINGS = dict(max_examples=50, deadline=None)
+    OPS = st.lists(
+        st.tuples(st.sampled_from(["admit", "evict", "restore", "append",
+                                   "release", "double_release"]),
+                  st.integers(0, 5)),
+        max_size=60)
+
+    @settings(**SETTINGS)
+    @given(ops=OPS, w=st.integers(1, 4), cap_streams=st.integers(1, 3))
+    def test_ledger_invariants_under_arbitrary_sequences(ops, w,
+                                                         cap_streams):
+        _ledger_invariants(ops, w, cap_streams)
+
+    @settings(**SETTINGS)
+    @given(n=st.integers(0, 12), w=st.integers(1, 6),
+           window=st.integers(1, 7))
+    def test_mask_stays_within_gathered_extent(n, w, window):
+        _mask_within_extent(n, w, window)
+else:
+    # deterministic fallback so the invariants still get SOME coverage
+    # (and the suite reports the missing dependency) when hypothesis is
+    # not installed
+    @pytest.mark.parametrize("w,cap_streams", [(1, 1), (2, 2), (4, 3)])
+    def test_ledger_invariants_deterministic(w, cap_streams):
+        rng = np.random.default_rng(w * 10 + cap_streams)
+        ops = [(str(rng.choice(["admit", "evict", "restore", "append",
+                                "release", "double_release"])),
+                int(rng.integers(0, 6))) for _ in range(120)]
+        _ledger_invariants(ops, w, cap_streams)
+
+    @pytest.mark.parametrize("n", [0, 1, 3, 5, 12])
+    @pytest.mark.parametrize("w", [1, 2, 3, 6])
+    @pytest.mark.parametrize("window", [1, 2, 7])
+    def test_mask_stays_within_gathered_extent(n, w, window):
+        _mask_within_extent(n, w, window)

@@ -1,28 +1,41 @@
-"""Streams-served-per-second: sequential vs batched chunk executor.
+"""Streams-served-per-second: sequential vs batched chunk executor,
+per context backend.
 
-Both paths run the REAL reduced AR-DiT at a fixed fidelity with
+All paths run the REAL reduced AR-DiT at a fixed fidelity with
 identical seeds.  The sequential path is the repo's pre-existing
 executor (``ChunkExecutor``: one stream at a time, eager op-by-op
-forwards); the batched path is ``BatchedChunkExecutor``: same-fidelity
-micro-batches over stacked ring KV caches, each denoise step ONE jitted
-call.  The speedup therefore combines cross-stream batching with
-whole-step compilation — both are parts of the batched executor design
-(a stacked step cannot be composed without tracing it).  Each path is
-measured twice with fresh streams; the cold pass is reported so compile
-amortization stays visible.
+forwards); the batched paths are ``BatchedChunkExecutor`` with each
+context backend: ``gather`` materializes a contiguous
+[L, b, COND+W*tc, ...] context per chunk boundary, ``paged`` (the
+serving default) consumes (pool, block tables, page masks) directly —
+no context materialization on the hot path.  Each path is measured
+twice with fresh streams; the cold pass is reported so compile
+amortization stays visible.  Per backend the peak bytes of staged
+per-sub-batch context state are reported (the paged backend stages
+only tables + masks).
 
 The oversubscription scenario serves MORE streams than the page pool
 holds (streams = 2 x pool capacity): admission never fails — extra
 streams park host-side and the executor evicts the highest-credit
 resident (credit-aware, bit-exact spill/restore) to rotate everyone
-through.  Reported: streams-served/s plus eviction/restore counts.
+through.  Spill/restore traffic is routed through the state plane's
+``AsyncTransferEngine``, so the report includes modeled transfer time
+(async-stream protocol: total wire time and the dispatcher wait
+actually charged into the latency EMAs) next to eviction/restore
+counts.
+
+Results are also written as machine-readable JSON (``--json PATH``,
+default ``BENCH_batched_executor.json``) so CI can track the perf
+trajectory as an artifact.
 
     PYTHONPATH=src python benchmarks/batched_executor.py \
-        [--streams 4] [--chunks 3] [--max-batch N] [--pool N]
+        [--streams 4] [--chunks 8] [--max-batch N] [--pool N] \
+        [--context-backend gather|paged] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -120,58 +133,119 @@ def run_oversubscribed(ex: BatchedChunkExecutor, n_streams: int,
     return dt
 
 
+def transfer_report(ex: BatchedChunkExecutor) -> dict:
+    log = ex.pool.engine.log
+    return {
+        "count": len(log),
+        "bytes": ex.pool.transfer_bytes,
+        "total_s": round(sum(t.total for t in log), 6),
+        "dispatcher_wait_s": round(ex.transfer_wait_s, 6),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--streams", type=int, default=4)
-    ap.add_argument("--chunks", type=int, default=3)
+    ap.add_argument("--chunks", type=int, default=8,
+                    help="chunks per stream (8 fills and wraps the W=7 "
+                         "ring, the steady streaming regime)")
     ap.add_argument("--max-batch", type=int, default=0,
                     help="0 -> batch all streams")
     ap.add_argument("--pool", type=int, default=0,
                     help="resident-stream capacity of the page pool for "
                          "the oversubscription scenario (0 -> streams/2)")
+    ap.add_argument("--context-backend", choices=("gather", "paged"),
+                    default=None,
+                    help="measure only one backend (default: both)")
+    ap.add_argument("--json", default="BENCH_batched_executor.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args()
     n, chunks = args.streams, args.chunks
     max_batch = args.max_batch or n
+    backends = ([args.context_backend] if args.context_backend
+                else ["gather", "paged"])
 
     seq_ex = ChunkExecutor()
-    bat_ex = BatchedChunkExecutor(cfg=seq_ex.cfg, params=seq_ex.params,
-                                  max_streams=n)
-
     seq_cold = run_sequential(seq_ex, n, chunks, base_sid=0)
     seq_warm = run_sequential(seq_ex, n, chunks, base_sid=100)
-    bat_cold = run_batched(bat_ex, n, chunks, max_batch, base_sid=0)
-    bat_warm = run_batched(bat_ex, n, chunks, max_batch, base_sid=100)
+
+    results = {
+        "config": {"streams": n, "chunks": chunks, "max_batch": max_batch,
+                   "fidelity": FIDELITY.key},
+        "sequential": {"cold_s": round(seq_cold, 4),
+                       "warm_s": round(seq_warm, 4),
+                       "streams_per_s": round(n / seq_warm, 4)},
+        "batched": {},
+        "oversubscribed": {},
+    }
 
     print(f"\n{n} streams x {chunks} chunks, fidelity {FIDELITY.key}, "
           f"max_batch={max_batch}")
-    for name, cold, warm in (("sequential", seq_cold, seq_warm),
-                             ("batched", bat_cold, bat_warm)):
-        print(f"  {name:10s} cold={cold:6.2f}s warm={warm:6.2f}s "
+    print(f"  {'sequential':16s} cold={seq_cold:6.2f}s "
+          f"warm={seq_warm:6.2f}s -> {n / seq_warm:5.2f} streams/s "
+          f"({n * chunks / seq_warm:5.1f} chunks/s)")
+    for backend in backends:
+        ex = BatchedChunkExecutor(cfg=seq_ex.cfg, params=seq_ex.params,
+                                  max_streams=n, context_backend=backend)
+        cold = run_batched(ex, n, chunks, max_batch, base_sid=0)
+        warm = run_batched(ex, n, chunks, max_batch, base_sid=100)
+        results["batched"][backend] = {
+            "cold_s": round(cold, 4), "warm_s": round(warm, 4),
+            "streams_per_s": round(n / warm, 4),
+            "peak_ctx_bytes": ex.peak_ctx_bytes,
+        }
+        name = f"batched/{backend}"
+        print(f"  {name:16s} cold={cold:6.2f}s warm={warm:6.2f}s "
               f"-> {n / warm:5.2f} streams/s "
-              f"({n * chunks / warm:5.1f} chunks/s)")
-    speedup = seq_warm / bat_warm
-    print(f"  speedup (warm, streams-served-per-second): {speedup:.2f}x")
+              f"({n * chunks / warm:5.1f} chunks/s) "
+              f"peak_ctx={ex.peak_ctx_bytes}B")
+        print(f"  {'':16s} speedup vs sequential (warm): "
+              f"{seq_warm / warm:.2f}x")
 
     # oversubscription: 2x the pool's resident capacity, zero admission
     # failures (overflow spills to host and rotates back in)
     pool = args.pool or max(1, n // 2)
-    over_ex = BatchedChunkExecutor(cfg=seq_ex.cfg, params=seq_ex.params,
-                                   max_streams=pool)
-    over = run_oversubscribed(over_ex, 2 * pool, chunks,
-                              min(max_batch, pool), base_sid=200)
-    # measured, not asserted: a stream that never got (back) in would
-    # still hold an incomplete chunk list here
-    failures = sum(len(over_ex.chunks[200 + i]) < chunks
-                   for i in range(2 * pool))
-    print(f"\noversubscribed: {2 * pool} streams through a "
-          f"{pool}-stream page pool "
-          f"({over_ex.pool.n_pages} pages x {over_ex.pool.page_tokens} "
-          f"tokens)")
-    print(f"  completed in {over:6.2f}s -> {2 * pool / over:5.2f} "
-          f"streams/s ({2 * pool * chunks / over:5.1f} chunks/s)")
-    print(f"  evictions={over_ex.evictions} restores={over_ex.restores} "
-          f"deferred_ticks={over_ex.deferrals} "
-          f"admission_failures={failures}")
+    for backend in backends:
+        over_ex = BatchedChunkExecutor(cfg=seq_ex.cfg,
+                                       params=seq_ex.params,
+                                       max_streams=pool,
+                                       context_backend=backend)
+        over = run_oversubscribed(over_ex, 2 * pool, chunks,
+                                  min(max_batch, pool), base_sid=200)
+        # measured, not asserted: a stream that never got (back) in would
+        # still hold an incomplete chunk list here
+        failures = sum(len(over_ex.chunks[200 + i]) < chunks
+                       for i in range(2 * pool))
+        tr = transfer_report(over_ex)
+        results["oversubscribed"][backend] = {
+            "streams": 2 * pool, "pool_streams": pool,
+            "elapsed_s": round(over, 4),
+            "streams_per_s": round(2 * pool / over, 4),
+            "evictions": over_ex.evictions,
+            "restores": over_ex.restores,
+            "deferred_ticks": over_ex.deferrals,
+            "admission_failures": failures,
+            "transfers": tr,
+        }
+        print(f"\noversubscribed/{backend}: {2 * pool} streams through "
+              f"a {pool}-stream page pool "
+              f"({over_ex.pool.n_pages} pages x "
+              f"{over_ex.pool.page_tokens} tokens)")
+        print(f"  completed in {over:6.2f}s -> {2 * pool / over:5.2f} "
+              f"streams/s ({2 * pool * chunks / over:5.1f} chunks/s)")
+        print(f"  evictions={over_ex.evictions} "
+              f"restores={over_ex.restores} "
+              f"deferred_ticks={over_ex.deferrals} "
+              f"admission_failures={failures}")
+        print(f"  transfers={tr['count']} ({tr['bytes']} B) "
+              f"total={tr['total_s']:.4f}s "
+              f"dispatcher_wait={tr['dispatcher_wait_s']:.4f}s "
+              f"(async-stream)")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"\nwrote {args.json}")
 
 
 if __name__ == "__main__":

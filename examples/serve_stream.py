@@ -5,12 +5,18 @@ live model instead of the simulator).
     PYTHONPATH=src python examples/serve_stream.py [n_streams] [chunks]
     PYTHONPATH=src python examples/serve_stream.py --batched [n] [chunks]
     PYTHONPATH=src python examples/serve_stream.py --batched --pool=P ...
+    PYTHONPATH=src python examples/serve_stream.py --batched \
+        --context-backend=gather ...
 
 ``--batched`` serves all streams through the credit-ordered micro-batch
 executor (one jitted denoise step per sub-batch) instead of one stream
 at a time.  ``--pool=P`` caps the page pool at P co-resident streams —
 with P < n_streams the session oversubscribes: overflow streams spill
 to host and rotate back in via credit-aware eviction.
+``--context-backend`` picks how sub-batches see cached KV: ``paged``
+(default) serves attention straight from the page pool through block
+tables; ``gather`` materializes the contiguous context per chunk
+boundary (the executable reference path).
 """
 import os
 import sys
@@ -22,6 +28,7 @@ from repro.serve.executor import serve_session
 
 def main():
     pool = None
+    backend = "paged"
     args = []
     argv = sys.argv[1:]
     i = 0
@@ -36,6 +43,14 @@ def main():
             if i >= len(argv):
                 sys.exit("--pool requires a value (e.g. --pool 2)")
             pool = int(argv[i])
+        elif a.startswith("--context-backend="):
+            backend = a.split("=", 1)[1]
+        elif a == "--context-backend":
+            i += 1
+            if i >= len(argv):
+                sys.exit("--context-backend requires a value "
+                         "(gather|paged)")
+            backend = argv[i]
         else:
             args.append(a)
         i += 1
@@ -43,12 +58,19 @@ def main():
     if pool is not None and not batched:
         sys.exit("--pool only applies to the batched executor; "
                  "add --batched")
+    if backend not in ("gather", "paged"):
+        sys.exit(f"unknown context backend {backend!r} (gather|paged)")
+    if any(a.startswith("--context-backend") for a in argv) \
+            and not batched:
+        sys.exit("--context-backend only applies to the batched "
+                 "executor; add --batched")
     n_streams = int(args[0]) if args else 2
     chunks = int(args[1]) if len(args) > 1 else 4
     streams = serve_session(n_streams=n_streams,
                             chunks_per_stream=chunks,
                             batched=batched,
-                            pool_streams=pool)
+                            pool_streams=pool,
+                            context_backend=backend)
     print("\nper-stream fidelity decisions:")
     for s in streams:
         print(f"  stream {s.sid}: {s.fidelity_log}")

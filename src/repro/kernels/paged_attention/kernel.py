@@ -1,11 +1,23 @@
-"""Pallas TPU paged decode attention (State-Plane paged KV, SS4.4).
+"""Pallas TPU paged attention (State-Plane paged KV, SS4.4).
 
 The State Plane stores KV at latent-frame granularity in a physical page
-pool; decode must attend over a logically-contiguous sequence scattered
+pool; attention must cover a logically-contiguous sequence scattered
 across pages.  The block table is scalar-prefetched so the page index_map
 performs the indirection *before* the DMA — the TPU analogue of gather-
 from-page-table on GPU.  Grid: (batch, kv_head, page); online-softmax
-state for the head group rides in VMEM scratch across the page dimension.
+state rides in VMEM scratch across the page dimension.
+
+Two entry points:
+
+* ``paged_decode_attention_pallas`` — single-token decode
+  (q [B,Hq,D], per-stream valid ``lengths``), finalized output.
+* ``paged_chunk_attention_pallas`` — chunk-query generalization for the
+  batched serving executor's ``paged`` context backend
+  (q [B,Sq,Hq,D], per-stream token-granular visibility ``page_mask``).
+  Returns ONLINE-SOFTMAX PARTIALS (m, l, unnormalized acc) so the
+  caller can merge the paged-context segment with the chunk's own
+  fresh KV (``models.attention.paged_mha``) — the pool is never
+  gathered into a contiguous context.
 """
 from __future__ import annotations
 
@@ -114,3 +126,149 @@ def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
         interpret=interpret,
     )(block_table, lengths, qg, k_pages, v_pages)
     return out.reshape(b, hq, d)
+
+
+def _chunk_kernel(bt_ref, pa_ref,             # scalar prefetch
+                  q_ref, k_ref, v_ref, mask_ref,   # VMEM
+                  m_out, l_out, acc_out,
+                  m_scr, l_scr, acc_scr,
+                  *, scale: float, sink: int, chunk_tokens: int):
+    """``mask_ref`` is None in the all-visible fast path: visibility is
+    then just each page's static valid prefix (``sink`` tokens on table
+    entry 0, ``chunk_tokens`` on ring entries)."""
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    page = k_ref.shape[1]
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # pages with no visible token are skipped entirely (a skipped page
+    # contributes m=NEG_INF, l+=0, acc+=0 — identical to computing it)
+    @pl.when(pa_ref[b, i] > 0)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # [R, D], R = Sq*G
+        k = k_ref[0, :, 0].astype(jnp.float32)     # [page, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if mask_ref is not None:
+            vis = mask_ref[0, 0] > 0               # [page]
+        else:
+            limit = jax.lax.select(i == 0, sink, chunk_tokens)
+            vis = jax.lax.broadcasted_iota(
+                jnp.int32, (1, page), 1)[0] < limit
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(vis[None, :], s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # exp(NEG_INF - NEG_INF) == 1 on an all-masked row: zero those
+        # probabilities explicitly so l is not polluted
+        p = jnp.where(vis[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _finalize():
+        # partials, NOT a finalized output: the caller still merges the
+        # in-chunk KV segment before the softmax divide
+        m_out[0, 0] = m_scr[...]
+        l_out[0, 0] = l_scr[...]
+        acc_out[0, 0] = acc_scr[...]
+
+
+def _chunk_kernel_nomask(bt_ref, pa_ref, q_ref, k_ref, v_ref,
+                         m_out, l_out, acc_out, m_scr, l_scr, acc_scr,
+                         *, scale: float, sink: int, chunk_tokens: int):
+    _chunk_kernel(bt_ref, pa_ref, q_ref, k_ref, v_ref, None,
+                  m_out, l_out, acc_out, m_scr, l_scr, acc_scr,
+                  scale=scale, sink=sink, chunk_tokens=chunk_tokens)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "sink", "chunk_tokens"))
+def paged_chunk_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                                 v_pages: jax.Array,
+                                 block_table: jax.Array,
+                                 page_mask, *,
+                                 sink: int = 0, chunk_tokens: int = 0,
+                                 interpret: bool = False):
+    """q [B,Sq,Hq,D]; pages [P_total, page, Hkv, D]; block_table [B, n];
+    page_mask [B, n*page] bool (visible tokens in table order), or None
+    for the all-visible fast path (``sink``/``chunk_tokens`` then give
+    each page's static valid prefix).
+
+    Returns fp32 online-softmax partials in the ``attention._merge``
+    layout: m, l [B, Hkv, G, Sq]; acc [B, Hkv, G, Sq, D] unnormalized.
+    """
+    b, sq, hq, d = q.shape
+    _, page, hkv, _ = k_pages.shape
+    n = block_table.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    r = sq * group                      # query rows per (batch, kv head)
+    scale = 1.0 / math.sqrt(d)
+    qr = q.reshape(b, sq, hkv, group, d).transpose(0, 2, 1, 3, 4) \
+          .reshape(b, hkv, r, d)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, r, d),
+                     lambda b_, h, i, bt, pa: (b_, h, 0, 0)),
+        pl.BlockSpec((1, page, 1, d),
+                     lambda b_, h, i, bt, pa: (bt[b_, i], 0, h, 0)),
+        pl.BlockSpec((1, page, 1, d),
+                     lambda b_, h, i, bt, pa: (bt[b_, i], 0, h, 0)),
+    ]
+    if page_mask is None:
+        assert sink and chunk_tokens, \
+            "page_mask=None needs the sink/chunk_tokens layout hint"
+        kernel = functools.partial(_chunk_kernel_nomask, scale=scale,
+                                   sink=sink, chunk_tokens=chunk_tokens)
+        page_any = jnp.ones((b, n), jnp.int32)
+        inputs = (block_table, page_any, qr, k_pages, v_pages)
+    else:
+        kernel = functools.partial(_chunk_kernel, scale=scale,
+                                   sink=sink, chunk_tokens=chunk_tokens)
+        mask_i = page_mask.reshape(b, n, page).astype(jnp.int32)
+        page_any = (jnp.sum(mask_i, axis=-1) > 0).astype(jnp.int32)
+        in_specs.append(pl.BlockSpec(
+            (1, 1, page), lambda b_, h, i, bt, pa: (b_, i, 0)))
+        inputs = (block_table, page_any, qr, k_pages, v_pages, mask_i)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, r), lambda b_, h, i, bt, pa: (b_, h, 0)),
+            pl.BlockSpec((1, 1, r), lambda b_, h, i, bt, pa: (b_, h, 0)),
+            pl.BlockSpec((1, 1, r, d),
+                         lambda b_, h, i, bt, pa: (b_, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((r,), jnp.float32),
+            pltpu.VMEM((r,), jnp.float32),
+            pltpu.VMEM((r, d), jnp.float32),
+        ],
+    )
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, hkv, r), jnp.float32),
+                   jax.ShapeDtypeStruct((b, hkv, r), jnp.float32),
+                   jax.ShapeDtypeStruct((b, hkv, r, d), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*inputs)
+    m = m.reshape(b, hkv, sq, group).transpose(0, 1, 3, 2)
+    l = l.reshape(b, hkv, sq, group).transpose(0, 1, 3, 2)
+    acc = acc.reshape(b, hkv, sq, group, d).transpose(0, 1, 3, 2, 4)
+    return m, l, acc

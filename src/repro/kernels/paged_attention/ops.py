@@ -25,3 +25,28 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lengths):
     return _k.paged_decode_attention_pallas(
         q, k_pages, v_pages, block_table, lengths,
         interpret=(mode == "interpret"))
+
+
+def paged_chunk_attention(q, k_pages, v_pages, block_table, page_mask,
+                          *, sink: int = 0, chunk_tokens: int = 0):
+    """Chunk-query paged attention partials (the serving executor's
+    ``paged`` context backend).  q [B,Sq,Hq,D]; pages
+    [P_total,page,Hkv,D]; block_table [B,n]; page_mask [B,n*page] bool.
+    ``sink``/``chunk_tokens`` optionally declare the valid prefix of the
+    sink page / ring pages so the jnp oracle can skip always-masked page
+    tails (the Pallas kernel stays page-aligned — pages are its DMA
+    granule); ``page_mask=None`` (hint required) is the all-visible fast
+    path that skips per-score masking.  Returns fp32 online-softmax
+    partials (m, l [B,Hkv,G,Sq]; acc [B,Hkv,G,Sq,D] unnormalized) for
+    ``attention.paged_mha`` to merge with the chunk's own fresh KV
+    segment."""
+    mode = _mode()
+    if mode == "ref":
+        return _ref.paged_chunk_attention_ref(
+            q, k_pages, v_pages, block_table, page_mask,
+            sink=sink, chunk_tokens=chunk_tokens)
+    from repro.kernels.paged_attention import kernel as _k
+    return _k.paged_chunk_attention_pallas(
+        q, k_pages, v_pages, block_table, page_mask,
+        sink=sink, chunk_tokens=chunk_tokens,
+        interpret=(mode == "interpret"))

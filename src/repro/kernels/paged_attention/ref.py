@@ -1,14 +1,23 @@
-"""Pure-jnp oracle for paged decode attention.
+"""Pure-jnp oracles for paged attention.
 
-Gathers the logical KV sequence out of the physical page pool through the
-block table, then runs the dense decode-attention reference.
+``paged_decode_attention_ref`` (single-token decode) gathers the logical
+KV sequence out of the physical page pool through the block table, then
+runs the dense decode-attention reference.  ``paged_chunk_attention_ref``
+is the chunk-query generalization used by the batched serving executor's
+``paged`` context backend: it returns ONLINE-SOFTMAX PARTIALS over the
+visible page set so the caller can merge them with the chunk's own fresh
+KV segment (``models.attention.paged_mha``).
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.attention import decode_attention
+
+NEG_INF = -1e30
 
 
 def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
@@ -30,3 +39,74 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     out = decode_attention(q[:, None], k, v, n_kv_heads=hkv,
                            cache_len=lengths)
     return out[:, 0]
+
+
+def paged_chunk_attention_ref(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, block_table: jax.Array,
+                              page_mask: jax.Array, *,
+                              sink: int = 0, chunk_tokens: int = 0):
+    """Chunk-query paged attention partials over the visible page set.
+
+    q [B,Sq,Hq,D]; pages [P_total, page, Hkv, D]; block_table [B, n];
+    page_mask [B, n*page] bool — visible context tokens in TABLE order
+    (entry 0's tokens first, then entry 1's, ...), with page tails past
+    each page's valid extent already masked off by the caller.
+    ``page_mask=None`` (layout hint required) means "every valid token
+    visible" — the homogeneous-fill, full-window, unsparsified common
+    case — and skips per-score masking entirely.
+
+    ``sink``/``chunk_tokens`` are an optional layout hint: when given,
+    table entry 0 is known to hold at most ``sink`` valid tokens and
+    every later entry at most ``chunk_tokens``, so the oracle skips the
+    always-masked page tails entirely (the TPU kernel keeps page-aligned
+    compute — pages are its DMA granule — but the CPU serving path
+    should not pay FLOPs for provably-dead padding).  The partials are
+    identical either way: masked tokens contribute m=NEG_INF, p=0.
+
+    Returns unfinalized fp32 partials in the ``attention._merge`` layout:
+    m, l [B, Hkv, G, Sq] and acc [B, Hkv, G, Sq, D] (acc unnormalized),
+    with m == NEG_INF where a query row saw no visible token.
+    """
+    b, sq, hq, d = q.shape
+    page = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    n = block_table.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    s0, tc = min(sink, page), min(chunk_tokens, page)
+    if page_mask is None:
+        assert sink and chunk_tokens, \
+            "page_mask=None needs the sink/chunk_tokens layout hint"
+    if sink and chunk_tokens and (s0 < page or (n > 1 and tc < page)):
+        # compact layout: valid prefixes only
+        ks = k_pages[block_table[:, 0], :s0]        # [B, s0, Hkv, D]
+        vs = v_pages[block_table[:, 0], :s0]
+        k, v = ks, vs
+        if n > 1:
+            kr = k_pages[block_table[:, 1:].reshape(-1), :tc].reshape(
+                b, (n - 1) * tc, hkv, d)
+            vr = v_pages[block_table[:, 1:].reshape(-1), :tc].reshape(
+                b, (n - 1) * tc, hkv, d)
+            k = jnp.concatenate([ks, kr], axis=1)
+            v = jnp.concatenate([vs, vr], axis=1)
+        if page_mask is not None:
+            cols = [jnp.arange(s0)] + [(1 + r) * page + jnp.arange(tc)
+                                       for r in range(n - 1)]
+            page_mask = page_mask[:, jnp.concatenate(cols)]
+    else:
+        k = gather_pages(k_pages, block_table)      # [B, n*page, Hkv, D]
+        v = gather_pages(v_pages, block_table)
+    qg = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if page_mask is None:       # every compact token visible: no select
+        m = jnp.max(s, axis=-1)                     # [B,Hkv,G,Sq]
+        p = jnp.exp(s - m[..., None])
+    else:
+        vis = page_mask[:, None, None, None, :]
+        s = jnp.where(vis, s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        p = jnp.where(vis, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return m, l, acc

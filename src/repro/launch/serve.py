@@ -19,6 +19,7 @@ Two modes:
 from __future__ import annotations
 
 import argparse
+import sys
 
 
 def main() -> None:
@@ -39,10 +40,19 @@ def main() -> None:
     ap.add_argument("--pool-streams", type=int, default=0,
                     help="co-resident stream cap of the paged KV pool "
                          "(< --streams oversubscribes; 0 -> all fit)")
+    ap.add_argument("--context-backend", choices=("gather", "paged"),
+                    default="paged",
+                    help="how sub-batches see cached KV: 'paged' serves "
+                         "attention straight from the page pool through "
+                         "block tables; 'gather' materializes the "
+                         "contiguous context (reference path)")
     args = ap.parse_args()
 
     if args.pool_streams and not (args.real and args.batched):
         ap.error("--pool-streams only applies to --real --batched")
+    if any(a.startswith("--context-backend") for a in sys.argv[1:]) \
+            and not (args.real and args.batched):
+        ap.error("--context-backend only applies to --real --batched")
 
     if args.real:
         from repro.serve.executor import serve_session
@@ -50,7 +60,8 @@ def main() -> None:
                                 chunks_per_stream=args.chunks,
                                 batched=args.batched,
                                 max_batch=args.max_batch,
-                                pool_streams=args.pool_streams or None)
+                                pool_streams=args.pool_streams or None,
+                                context_backend=args.context_backend)
         mode = "batched" if args.batched else "sequential"
         print(f"served {len(streams)} streams x "
               f"{args.chunks} chunks (real model, {mode})")

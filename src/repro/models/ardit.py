@@ -31,7 +31,7 @@ from repro.configs.base import ModelConfig
 from repro.distributed.logical import shard
 from repro.models import kvcache
 from repro.models import layers as L
-from repro.models.attention import mha, sparse_keep_list
+from repro.models.attention import mha, paged_mha, sparse_keep_list
 
 Params = Dict[str, Any]
 
@@ -314,6 +314,89 @@ def denoise_step(cfg: ModelConfig, p: Params, x: jax.Array, t: jax.Array,
                          ones if cl_mask is None else cl_mask)
     v_pred, new_kv = chunk_forward(cfg, p, x, t, ctx_k, ctx_v,
                                    q_offset=q_offset, ctx_mask=mask)
+    x_new = x - dt[:, None, None] * v_pred.astype(x.dtype)
+    return x_new, new_kv
+
+
+def chunk_forward_paged(cfg: ModelConfig, p: Params, x_chunk: jax.Array,
+                        t: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_table: jax.Array,
+                        page_mask: Optional[jax.Array], *, q_offset,
+                        ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """``chunk_forward`` with the cached context consumed IN PLACE from
+    the paged KV pool instead of a gathered [L, B, ctx_len, ...] copy.
+
+    k_pages/v_pages [L, n_pages, page, Hkv, Dh] — the whole device
+    pool; block_table [B, n] per-stream page tables (entry 0 = sink
+    page, entry 1+r = ring slot r); page_mask [B, n*page] visible
+    context tokens in table order, or None when every valid token is
+    visible (homogeneous fill, full window, no sparsity — per-score
+    masking is skipped entirely, like the gathered path's dropped
+    masks).  Attention is
+    ``attention.paged_mha``: paged-context online-softmax partials
+    merged with the chunk's own fresh KV, so the only per-step KV
+    traffic is the pages the tables actually reference.  Returns the
+    same (prediction, {"k","v"}) as ``chunk_forward``; numerics agree
+    with the gathered path up to fp32 online-softmax merge order.
+    """
+    b, tc, _ = x_chunk.shape
+    d = cfg.d_model
+    h = shard(x_chunk.astype(p["in_proj"].dtype) @ p["in_proj"],
+              "batch", None, "embed")
+    temb = _time_embed(p, t, d)                                   # [B,D]
+    q_off = jnp.asarray(q_offset)
+    if q_off.ndim:                                  # per-stream offsets
+        positions = q_off[:, None] + jnp.arange(tc)[None, :]      # [B,Tc]
+    else:
+        positions = q_off + jnp.arange(tc)                        # [Tc]
+    ones = jnp.ones((d,), h.dtype)
+
+    def body(hh, xs):
+        lp = xs["layer"]
+        mod = jax.nn.silu(temb) @ lp["mod"] + lp["mod_b"]         # [B,6D]
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        a_in = _modulate(L.rmsnorm(hh, ones, cfg.norm_eps), sh1, sc1)
+        q, k, v = L.attn_qkv(cfg, lp["attn"], a_in, positions)
+        o = paged_mha(q, xs["kp"], xs["vp"], block_table, page_mask,
+                      k, v, n_kv_heads=cfg.n_kv_heads,
+                      sink=COND_TOKENS, chunk_tokens=tc)
+        o = o.reshape(b, tc, cfg.n_heads * cfg.head_dim)
+        hh = hh + g1[:, None, :] * shard(o @ lp["attn"]["wo"],
+                                         "batch", None, "embed")
+        f_in = _modulate(L.rmsnorm(hh, ones, cfg.norm_eps), sh2, sc2)
+        hh = hh + g2[:, None, :] * L.mlp_block(cfg, lp["mlp"], f_in)
+        return hh, {"k": k, "v": v}
+
+    h, new_kv = jax.lax.scan(
+        body, h, {"layer": p["layers"], "kp": k_pages, "vp": v_pages})
+
+    mod = jax.nn.silu(temb) @ p["final_mod"]
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    h = _modulate(L.rmsnorm(h, p["final_norm"], cfg.norm_eps), sh, sc)
+    return h @ p["out_proj"], new_kv
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def denoise_step_paged(cfg: ModelConfig, p: Params, x: jax.Array,
+                       t: jax.Array, dt: jax.Array, k_pages: jax.Array,
+                       v_pages: jax.Array, block_table: jax.Array,
+                       dn_mask: Optional[jax.Array],
+                       cl_mask: Optional[jax.Array],
+                       q_offset: jax.Array, is_denoise: jax.Array):
+    """Page-table-native sibling of ``denoise_step``: the sub-batch's
+    context stays IN the pool and per-stream visibility rides in the
+    page-coordinate masks.  ``dn_mask=None`` is the all-visible fast
+    path (homogeneous fill, full window, no sparsity: each page's
+    static valid prefix is visible, no per-score select — the paged
+    analogue of the gathered path's dropped masks; note dn all-visible
+    implies cl all-visible, since the clean window is a superset);
+    ``cl_mask=None`` marks the common case where the clean pass sees
+    exactly the denoise mask, skipping the per-row select."""
+    mask = dn_mask if cl_mask is None else \
+        jnp.where(is_denoise[:, None], dn_mask, cl_mask)
+    v_pred, new_kv = chunk_forward_paged(cfg, p, x, t, k_pages, v_pages,
+                                         block_table, mask,
+                                         q_offset=q_offset)
     x_new = x - dt[:, None, None] * v_pred.astype(x.dtype)
     return x_new, new_kv
 

@@ -215,6 +215,42 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out
 
 
+def paged_mha(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+              block_table: jax.Array, page_mask: jax.Array,
+              chunk_k: jax.Array, chunk_v: jax.Array, *,
+              n_kv_heads: int, sink: int = 0,
+              chunk_tokens: int = 0) -> jax.Array:
+    """Page-table-native attention for chunk-wise generation.
+
+    q [B,Sq,Hq,D] attends to (a) the visible cached context, read IN
+    PLACE from the physical page pool ``k_pages``/``v_pages``
+    [n_pages, page, Hkv, D] through per-stream ``block_table`` [B, n]
+    with ``page_mask`` [B, n*page] marking the visible context tokens in
+    table order (ring residency + fidelity window + sparsity + page-tail
+    validity baked in by the caller), and (b) the chunk's own fresh KV
+    ``chunk_k``/``chunk_v`` [B,Sq,Hkv,D] (bidirectional, fully visible).
+
+    The paged segment contributes online-softmax partials — the
+    ``kernels/paged_attention`` chunk-query kernel on TPU, its pure-jnp
+    oracle elsewhere — which are merged with a dense in-chunk segment
+    before the softmax divide.  No contiguous [B, ctx_len, ...] context
+    is ever materialized.  ``sink``/``chunk_tokens`` (optional) declare
+    the valid prefixes of the sink/ring pages so the oracle can skip
+    always-masked page tails.
+    """
+    # late import: the kernel package's ref oracle imports this module
+    from repro.kernels.paged_attention.ops import paged_chunk_attention
+    b, sq, hq, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    ctx = paged_chunk_attention(q, k_pages, v_pages, block_table,
+                                page_mask, sink=sink,
+                                chunk_tokens=chunk_tokens)
+    own = _segment_attn(_group(q, n_kv_heads), chunk_k, chunk_v, None,
+                        scale)
+    out = _finalize(_merge(ctx, own), q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
                      n_kv_heads: int, cache_len: jax.Array,
                      window: int = 0, sink: int = 0) -> jax.Array:

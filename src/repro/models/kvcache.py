@@ -12,6 +12,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def capacity(seq_len: int, window: int, sink: int) -> int:
@@ -113,6 +114,25 @@ def gather_pages(pool: jax.Array, tables: jax.Array, sink: int,
     l, b = ring.shape[:2]
     ring = ring.reshape((l, b, n_ring * chunk_tokens) + ring.shape[4:])
     return jnp.concatenate([sink_part, ring], axis=2)
+
+
+def mask_to_pages(mask: np.ndarray, n_ring: int, sink: int,
+                  chunk_tokens: int, page_tokens: int) -> np.ndarray:
+    """Contiguous sink+ring visibility mask [B, >= sink + n_ring*tc] ->
+    page-coordinate mask [B, (1+n_ring)*page_tokens] in TABLE order
+    (entry 0 = sink page, entry 1+r = ring slot r) for the paged
+    attention path.  Pages are ``page_tokens`` wide but only partially
+    valid — ``sink`` tokens on the sink page, ``chunk_tokens`` on ring
+    pages — so page tails come out False regardless of the input mask.
+    """
+    b = mask.shape[0]
+    out = np.zeros((b, (1 + n_ring) * page_tokens), bool)
+    out[:, :sink] = mask[:, :sink]
+    for r in range(n_ring):
+        lo = (1 + r) * page_tokens
+        out[:, lo:lo + chunk_tokens] = \
+            mask[:, sink + r * chunk_tokens:sink + (r + 1) * chunk_tokens]
+    return out
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

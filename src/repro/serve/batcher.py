@@ -8,10 +8,15 @@ paper's step-boundary preemption (SS3.1): every scheduler iteration
 composes a *micro-batch* from the credit-ordered runnable set (lowest
 credit first, up to ``max_batch``), splits it into same-fidelity
 sub-batches, and advances each sub-batch by ONE denoise step with a
-single jitted batched ``ardit.denoise_step`` call over a PAGE-GRANULAR
-device KV pool (SS4.1's state plane): each stream owns a cond sink page
-plus a ring of chunk pages through a per-stream page table, and
-sub-batches gather their contiguous context through the tables.
+single jitted batched denoise-step call over a PAGE-GRANULAR device KV
+pool (SS4.1's state plane): each stream owns a cond sink page plus a
+ring of chunk pages through a per-stream page table.  By default the
+step is PAGE-TABLE-NATIVE (``context_backend="paged"``): attention
+consumes (pool, block tables, page-coordinate masks) directly via
+``ardit.denoise_step_paged`` -> ``attention.paged_mha`` ->
+``kernels/paged_attention``, never materializing a contiguous context;
+``context_backend="gather"`` keeps the gather-per-boundary path as the
+executable reference.
 Streams join and leave the batch at step boundaries; on admission
 pressure the executor evicts the highest-credit resident (host spill,
 bit-exact restore) instead of failing, so more streams than the pool
@@ -33,7 +38,7 @@ from repro.configs.base import ModelConfig
 from repro.core import queues, slack
 from repro.core.bmpr import BMPR
 from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
-from repro.core.state_plane import PagedKVPool
+from repro.core.state_plane import AsyncTransferEngine, PagedKVPool
 from repro.core.types import Stream, Worker
 from repro.models import ardit as A
 from repro.models import kvcache
@@ -175,6 +180,16 @@ class KVPool:
         self.k = jnp.zeros(shape, dt)
         self.v = jnp.zeros(shape, dt)
         self._spill: Dict[int, Dict[str, Any]] = {}   # sid -> host pages
+        # device-side per-stream page tables, built once per residency
+        # epoch (invalidated on admit/evict/restore/retire) instead of
+        # np.stack + host->device upload on every boundary
+        self._dev_tables: Dict[int, jax.Array] = {}
+        # spill/restore traffic goes through the state plane's async
+        # transfer engine so residency churn is charged the paper's
+        # async-stream protocol latency (ROADMAP "transfer-engine
+        # timing"); the log doubles as the benchmark's transfer report
+        self.engine = AsyncTransferEngine(n_layers=cfg.n_layers)
+        self.transfer_bytes = 0
 
     # ---- ledger views ------------------------------------------------------
     @property
@@ -218,13 +233,27 @@ class KVPool:
         return (sub["k"][:, :, :A.COND_TOKENS],
                 sub["v"][:, :, :A.COND_TOKENS])
 
+    def device_table(self, sid: int) -> jax.Array:
+        """This stream's page table as a device int32 [1 + W] array,
+        cached for the residency epoch (the table only changes on
+        admit/evict/restore/retire, so re-uploading it per boundary —
+        let alone per step — is pure waste)."""
+        t = self._dev_tables.get(sid)
+        if t is None:
+            t = jnp.asarray(self.ledger.tables[sid], jnp.int32)
+            self._dev_tables[sid] = t
+        return t
+
+    def tables_for(self, sids: Sequence[int]) -> jax.Array:
+        """Stacked [b, 1 + W] block table of a sub-batch (device)."""
+        return jnp.stack([self.device_table(sid) for sid in sids])
+
     def gather(self, sids: Sequence[int],
                n_ring: int) -> Tuple[jax.Array, jax.Array]:
         """Contiguous [L, b, COND + n_ring*tc, Hkv, Dh] context for a
-        sub-batch, assembled through the page tables."""
-        tables = jnp.asarray(
-            np.stack([self.ledger.tables[sid] for sid in sids]),
-            jnp.int32)
+        sub-batch, assembled through the page tables (the ``gather``
+        context backend — the paged backend never materializes this)."""
+        tables = self.tables_for(sids)
         k = kvcache.gather_pages(self.k, tables, A.COND_TOKENS,
                                  self._tc, n_ring)
         v = kvcache.gather_pages(self.v, tables, A.COND_TOKENS,
@@ -240,6 +269,7 @@ class KVPool:
         sk, sv = self._sink_kv(cond)
         if self.can_admit():
             table = self.ledger.take(sid)
+            self._dev_tables.pop(sid, None)
             self._write(table[:1], sk, sv)
             return True
         dt = self.k.dtype
@@ -253,6 +283,14 @@ class KVPool:
         self.ledger.chunks[sid] = 0
         return False
 
+    def _charge_transfer(self, n_bytes: int) -> None:
+        """Record one spill/restore on the async transfer engine (the
+        paper's async-stream protocol: the dispatcher only waits for the
+        first layer; later layers overlap with compute)."""
+        self.transfer_bytes += n_bytes
+        self.engine.transfer(time.perf_counter(), n_bytes,
+                             cross_node=False)
+
     def evict(self, sid: int) -> int:
         """Spill a resident stream's pages to host memory and free them.
         Returns the number of pages released (credit-aware victim
@@ -263,6 +301,9 @@ class KVPool:
         self._spill[sid] = {"k": np.asarray(self.k[:, rows]),
                             "v": np.asarray(self.v[:, rows])}
         self.ledger.drop(sid, spill=True)
+        self._dev_tables.pop(sid, None)
+        self._charge_transfer(self._spill[sid]["k"].nbytes
+                              + self._spill[sid]["v"].nbytes)
         return self.pages_per_stream
 
     def restore(self, sid: int) -> bool:
@@ -272,13 +313,16 @@ class KVPool:
             return False
         sp = self._spill.pop(sid)
         table = self.ledger.take(sid, chunks=self.ledger.chunks[sid])
+        self._dev_tables.pop(sid, None)
         self._write(table, jnp.asarray(sp["k"]), jnp.asarray(sp["v"]))
+        self._charge_transfer(sp["k"].nbytes + sp["v"].nbytes)
         return True
 
     def release(self, sid: int) -> None:
         """Retire a stream entirely (resident or spilled).  Idempotent."""
         self.ledger.drop(sid, spill=False)
         self._spill.pop(sid, None)
+        self._dev_tables.pop(sid, None)
 
     def append(self, sids: Sequence[int], new_kv: Dict[str, jax.Array],
                quant: str) -> None:
@@ -315,12 +359,27 @@ class BatchedChunkExecutor(ChunkExecutor):
     ``run_step`` advances one same-fidelity sub-batch by a single
     denoise step (or the clean-context pass that finishes a chunk), so
     the scheduler can recompose the batch between any two steps.
+
+    ``context_backend`` selects how a sub-batch sees its cached KV:
+
+    * ``"paged"`` (default) — page-table-native: the jitted step
+      receives the pool itself plus per-stream block tables and
+      page-coordinate visibility masks (``ardit.denoise_step_paged`` ->
+      ``attention.paged_mha`` -> ``kernels/paged_attention``).  No
+      [L, b, COND + W*tc, ...] context is ever materialized.
+    * ``"gather"`` — the executable reference: contiguous context
+      gathered through the tables once per chunk boundary, exactly the
+      PR 2 data path.  The two backends agree numerically on every
+      parity scenario (``tests/test_paged_backend.py``).
     """
 
     def __init__(self, cfg: Optional[ModelConfig] = None,
                  params: Optional[Any] = None, seed: int = 0,
-                 max_streams: int = 16):
+                 max_streams: int = 16,
+                 context_backend: str = "paged"):
         super().__init__(cfg=cfg, params=params, seed=seed)
+        assert context_backend in ("gather", "paged"), context_backend
+        self.context_backend = context_backend
         self.pool = KVPool(self.cfg, self.params, max_streams)
         self.inflight: Dict[int, InflightChunk] = {}
         self.chunks: Dict[int, List[jax.Array]] = {}
@@ -329,9 +388,18 @@ class BatchedChunkExecutor(ChunkExecutor):
         self.evictions = 0
         self.restores = 0
         self.deferrals = 0      # residency requests that had to wait
-        # gathered context + masks are constant across the steps of a
-        # chunk (they change only when a stream's chunk count does), so
-        # they are cached per (group, fill, fidelity) chunk boundary
+        # peak bytes of per-sub-batch context state staged for the
+        # jitted step: gathered [L,b,ctx,...] copies for "gather",
+        # tables + masks for "paged" (the acceptance metric)
+        self.peak_ctx_bytes = 0
+        # modeled async-stream transfer wait not yet charged to a
+        # stream's measured chunk latency (spill/restore protocol cost)
+        self._pending_wait: Dict[int, float] = {}
+        self.transfer_wait_s = 0.0
+        # per-sub-batch context + masks are constant across the steps of
+        # a chunk (they change only when a stream's chunk count or page
+        # table does), so they are cached per (group, fill, fidelity)
+        # chunk boundary
         self._boundary_cache: Dict[tuple, Dict[str, Any]] = {}
         self._staging_cache: Dict[tuple, tuple] = {}
 
@@ -352,13 +420,27 @@ class BatchedChunkExecutor(ChunkExecutor):
         # boundary keys are (sids, fills, fid) and would collide with a
         # previous stream of the same id at the same fill — drop them
         self._boundary_cache.clear()
+        mark = len(self.pool.engine.log)
         while not self.pool.can_admit():
             if not self._evict_one(streams, protect=set(protect) | {sid}):
                 break
         ok = self.pool.admit(sid, cond)      # parks host-side when full
         if not ok:
             self.deferrals += 1
+        self._charge_transfer_wait(sid, mark)
         return ok
+
+    def _charge_transfer_wait(self, sid: int, log_mark: int) -> None:
+        """Charge the dispatcher wait of any spill/restore transfers
+        issued since ``log_mark`` to ``sid``'s next completed chunk, so
+        residency churn shows up in the measured latency EMAs (the
+        async-stream protocol only blocks until the first layer is
+        resident; the rest overlaps with compute)."""
+        new = self.pool.engine.log[log_mark:]
+        if new:
+            w = sum(t.residual_wait for t in new)
+            self._pending_wait[sid] = self._pending_wait.get(sid, 0.0) + w
+            self.transfer_wait_s += w
 
     def _evict_one(self, streams: Optional[Dict[int, Stream]],
                    protect: set) -> bool:
@@ -386,6 +468,7 @@ class BatchedChunkExecutor(ChunkExecutor):
         if self.pool.resident(sid):
             return True
         assert self.pool.spilled(sid), f"stream {sid} was never admitted"
+        mark = len(self.pool.engine.log)
         while not self.pool.can_admit():
             if not self._evict_one(streams, protect=set(protect) | {sid}):
                 self.deferrals += 1
@@ -393,11 +476,18 @@ class BatchedChunkExecutor(ChunkExecutor):
         ok = self.pool.restore(sid)
         assert ok
         self.restores += 1
+        self._charge_transfer_wait(sid, mark)
+        # the restored stream owns DIFFERENT physical pages now: any
+        # cached boundary still naming its old block table is stale
+        # (the gathered backend tolerated this — restored data is
+        # bit-identical — but the paged backend reads through tables)
+        self._boundary_cache.clear()
         return True
 
     def retire(self, sid: int) -> None:
         self.pool.release(sid)
         self.inflight.pop(sid, None)
+        self._pending_wait.pop(sid, None)
         self._boundary_cache.clear()
 
     def begin_chunk(self, sid: int, fidelity: FidelityConfig,
@@ -418,11 +508,12 @@ class BatchedChunkExecutor(ChunkExecutor):
     # ---- the batched step --------------------------------------------------
     def _boundary(self, sids: Sequence[int], chunk_idx: np.ndarray,
                   fid: FidelityConfig) -> Dict[str, Any]:
-        """Per-chunk-boundary state of a sub-batch: page-table-gathered
-        context (sliced to the group's resident extent, so compute
-        scales with fill like the sequential path), positions, and the
-        denoise/clean visibility masks.  Constant across the chunk's
-        steps."""
+        """Per-chunk-boundary state of a sub-batch (constant across the
+        chunk's steps): positions, denoise/clean visibility, and the
+        backend's context handle — a gathered [L, b, extent, ...] copy
+        for ``gather``, or the block tables + page-coordinate masks the
+        paged step reads the pool through (both sliced to the group's
+        resident extent, so compute scales with fill either way)."""
         key = (tuple(sids), tuple(chunk_idx.tolist()), fid.key)
         bnd = self._boundary_cache.get(key)
         if bnd is not None:
@@ -432,22 +523,51 @@ class BatchedChunkExecutor(ChunkExecutor):
         n_ring = int(min(chunk_idx.max(initial=0), w_max))
         extent = A.COND_TOKENS + n_ring * tc
         # sparsity applies to denoise steps only; the clean-context pass
-        # sees the full fidelity window.  All-true masks (homogeneous
-        # fill, no sparsity, full window) are dropped so the jitted step
-        # skips per-score masking, like the sequential path's slices.
+        # sees the full fidelity window.
         dn = A.batched_context_mask(self.cfg, chunk_idx, fid.window,
                                     fid.sparsity)[:, :extent]
         cl = A.batched_context_mask(self.cfg, chunk_idx,
                                     fid.window)[:, :extent]
-        ctx_k, ctx_v = self.pool.gather(sids, n_ring)
         bnd = {
-            "ctx_k": ctx_k,
-            "ctx_v": ctx_v,
             "q_offset": jnp.asarray(A.COND_TOKENS + chunk_idx * tc,
                                     jnp.int32),
-            "dn": None if dn.all() else jnp.asarray(dn),
-            "cl": None if cl.all() else jnp.asarray(cl),
         }
+        if self.context_backend == "paged":
+            # no gather: hand the step the tables and the masks mapped
+            # into page coordinates.  dn all-true (homogeneous fill,
+            # full window, no sparsity) drops BOTH masks — each page's
+            # static valid prefix is visible and the step skips
+            # per-score masking, like the gathered path's slices (cl is
+            # a superset of dn, so dn all-true implies cl all-true);
+            # an unsparsified fidelity's clean mask IS the denoise mask
+            # — cl=None then means "reuse dn"
+            tables = self.pool.tables_for(sids)[:, :1 + n_ring]
+            bnd["tables"] = tables
+            if dn.all():
+                bnd["dn"] = None
+                bnd["cl"] = None
+            else:
+                bnd["dn"] = jnp.asarray(kvcache.mask_to_pages(
+                    dn, n_ring, A.COND_TOKENS, tc,
+                    self.pool.page_tokens))
+                bnd["cl"] = None if np.array_equal(dn, cl) else \
+                    jnp.asarray(kvcache.mask_to_pages(
+                        cl, n_ring, A.COND_TOKENS, tc,
+                        self.pool.page_tokens))
+            staged = (tables.nbytes
+                      + (0 if bnd["dn"] is None else bnd["dn"].nbytes)
+                      + (0 if bnd["cl"] is None else bnd["cl"].nbytes))
+        else:
+            # all-true masks (homogeneous fill, no sparsity, full
+            # window) are dropped so the jitted step skips per-score
+            # masking, like the sequential path's slices
+            ctx_k, ctx_v = self.pool.gather(sids, n_ring)
+            bnd["ctx_k"] = ctx_k
+            bnd["ctx_v"] = ctx_v
+            bnd["dn"] = None if dn.all() else jnp.asarray(dn)
+            bnd["cl"] = None if cl.all() else jnp.asarray(cl)
+            staged = ctx_k.nbytes + ctx_v.nbytes
+        self.peak_ctx_bytes = max(self.peak_ctx_bytes, staged)
         if len(self._boundary_cache) >= 8:
             self._boundary_cache.pop(next(iter(self._boundary_cache)))
         self._boundary_cache[key] = bnd
@@ -505,9 +625,20 @@ class BatchedChunkExecutor(ChunkExecutor):
         denoising = tuple(f.phase == "denoise" for f in flights)
         t, dt_sig, is_dn = self._staging(
             fid, tuple(f.step for f in flights), denoising)
-        x_new, new_kv = A.denoise_step(
-            self.cfg, self.params, x, t, dt_sig, bnd["ctx_k"],
-            bnd["ctx_v"], bnd["q_offset"], bnd["dn"], bnd["cl"], is_dn)
+        if self.context_backend == "paged":
+            # context stays IN the pool: the step reads the current
+            # device buffers through the cached block tables (appends
+            # only ever touch pages outside every in-flight window, so
+            # the live read equals the boundary snapshot)
+            x_new, new_kv = A.denoise_step_paged(
+                self.cfg, self.params, x, t, dt_sig, self.pool.k,
+                self.pool.v, bnd["tables"], bnd["dn"], bnd["cl"],
+                bnd["q_offset"], is_dn)
+        else:
+            x_new, new_kv = A.denoise_step(
+                self.cfg, self.params, x, t, dt_sig, bnd["ctx_k"],
+                bnd["ctx_v"], bnd["q_offset"], bnd["dn"], bnd["cl"],
+                is_dn)
 
         completed: List[int] = []
         clean_rows: List[int] = []
@@ -535,8 +666,11 @@ class BatchedChunkExecutor(ChunkExecutor):
                 # measured chunk wall -> timing priors; only time spent
                 # IN the batch counts (a stream held out of the batch
                 # mid-chunk accrues no active time, so preemption does
-                # not inflate the per-fidelity EMAs)
-                lat = f.active_s + (now_wall - t0)
+                # not inflate the per-fidelity EMAs).  Spill/restore
+                # dispatcher waits charged by the transfer engine ride
+                # on the chunk they delayed.
+                lat = (f.active_s + (now_wall - t0)
+                       + self._pending_wait.pop(sid, 0.0))
                 self.latency_ema[fid.key] = (
                     EMA_DECAY * self.latency_ema.get(fid.key, lat)
                     + (1.0 - EMA_DECAY) * lat)
@@ -568,6 +702,7 @@ def serve_session_batched(n_streams: int = 4, chunks_per_stream: int = 4,
                           realtime_budget: Optional[float] = None,
                           fidelity_policy=None,
                           pool_streams: Optional[int] = None,
+                          context_backend: str = "paged",
                           verbose: bool = True) -> List[ServedStream]:
     """End-to-end batched session: the SAME control-plane code paths as
     the simulator (service credit, credit-sorted queue, dispatch-set)
@@ -583,9 +718,13 @@ def serve_session_batched(n_streams: int = 4, chunks_per_stream: int = 4,
     ``pool_streams`` caps co-resident streams (oversubscription when
     < n_streams: extra streams spill to host and rejoin at chunk
     boundaries); defaults to n_streams + 1, i.e. everyone resident.
+    ``context_backend``: ``"paged"`` (default) serves attention straight
+    from the page pool through block tables; ``"gather"`` materializes
+    the contiguous context per boundary (executable reference).
     """
     ex = BatchedChunkExecutor(
-        max_streams=pool_streams or (n_streams + 1))
+        max_streams=pool_streams or (n_streams + 1),
+        context_backend=context_backend)
     policy = fidelity_policy or BMPR(get_profile())
 
     # calibrate the wall-clock playout rate to this host (and warm the

@@ -92,7 +92,8 @@ def serve_session(n_streams: int = 2, chunks_per_stream: int = 4,
                   verbose: bool = True,
                   batched: bool = False,
                   max_batch: int = 4,
-                  pool_streams: Optional[int] = None) -> List[ServedStream]:
+                  pool_streams: Optional[int] = None,
+                  context_backend: str = "paged") -> List[ServedStream]:
     """Small end-to-end session: BMPR-driven fidelity on the real model.
 
     ``realtime_budget``: seconds of playout per chunk used for slack
@@ -105,13 +106,17 @@ def serve_session(n_streams: int = 2, chunks_per_stream: int = 4,
     ``pool_streams`` (batched only) caps co-resident streams in the page
     pool — fewer than ``n_streams`` oversubscribes: overflow spills to
     host and rotates back in via credit-aware eviction.
+    ``context_backend`` (batched only): ``"paged"`` (default) serves
+    attention straight from the page pool through block tables;
+    ``"gather"`` materializes the contiguous context per boundary.
     """
     if batched:
         from repro.serve.batcher import serve_session_batched
         return serve_session_batched(
             n_streams=n_streams, chunks_per_stream=chunks_per_stream,
             max_batch=max_batch, realtime_budget=realtime_budget,
-            pool_streams=pool_streams, verbose=verbose)
+            pool_streams=pool_streams, context_backend=context_backend,
+            verbose=verbose)
     ex = ChunkExecutor()
     bmpr = BMPR(get_profile())
     # calibrate the wall-clock playout rate to this host

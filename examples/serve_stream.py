@@ -1,12 +1,15 @@
 """End-to-end REAL serving: BMPR-driven fidelity on actual AR-DiT chunk
 generation with playout-slack bookkeeping (the paper's mechanism on a
-live model instead of the simulator).
+live model instead of the simulator), driven by the unified
+``repro.serve.session.StreamingSession`` control loop.
 
     PYTHONPATH=src python examples/serve_stream.py [n_streams] [chunks]
     PYTHONPATH=src python examples/serve_stream.py --batched [n] [chunks]
     PYTHONPATH=src python examples/serve_stream.py --batched --pool=P ...
     PYTHONPATH=src python examples/serve_stream.py --batched \
         --context-backend=gather ...
+    PYTHONPATH=src python examples/serve_stream.py --batched \
+        --workload=burst --arrival-scale=0.25 4 2
 
 ``--batched`` serves all streams through the credit-ordered micro-batch
 executor (one jitted denoise step per sub-batch) instead of one stream
@@ -17,18 +20,30 @@ to host and rotate back in via credit-aware eviction.
 (default) serves attention straight from the page pool through block
 tables; ``gather`` materializes the contiguous context per chunk
 boundary (the executable reference path).
+``--workload=steady|burst|trace`` replaces the default
+everyone-at-t=0 arrivals with ONLINE arrivals from the named
+``sched_sim.workloads`` generator (the same StreamSpec objects the
+cluster simulator consumes); ``--arrival-scale`` compresses the
+generator's event times so demos don't wait out real Poisson gaps.
+The run ends with the same CPR/TTFC ``Summary`` line the simulator
+prints — one metrics surface for sim and real.
 """
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.serve.executor import serve_session
+from repro.sched_sim.metrics import summarize
+from repro.sched_sim.workloads import WORKLOADS
+from repro.serve.session import (SessionConfig, StreamingSession,
+                                 cap_specs, uniform_specs)
 
 
 def main():
     pool = None
     backend = "paged"
+    workload = None
+    arrival_scale = 1.0
     args = []
     argv = sys.argv[1:]
     i = 0
@@ -51,6 +66,16 @@ def main():
                 sys.exit("--context-backend requires a value "
                          "(gather|paged)")
             backend = argv[i]
+        elif a.startswith("--workload="):
+            workload = a.split("=", 1)[1]
+        elif a == "--workload":
+            i += 1
+            if i >= len(argv):
+                sys.exit("--workload requires a value "
+                         "(steady|burst|trace)")
+            workload = argv[i]
+        elif a.startswith("--arrival-scale="):
+            arrival_scale = float(a.split("=", 1)[1])
         else:
             args.append(a)
         i += 1
@@ -64,16 +89,30 @@ def main():
             and not batched:
         sys.exit("--context-backend only applies to the batched "
                  "executor; add --batched")
+    if workload is not None and workload not in WORKLOADS:
+        sys.exit(f"unknown workload {workload!r} "
+                 f"({'|'.join(WORKLOADS)})")
     n_streams = int(args[0]) if args else 2
     chunks = int(args[1]) if len(args) > 1 else 4
-    streams = serve_session(n_streams=n_streams,
-                            chunks_per_stream=chunks,
-                            batched=batched,
-                            pool_streams=pool,
-                            context_backend=backend)
+
+    if workload is None:
+        specs = uniform_specs(n_streams, chunks)      # legacy: all at t=0
+    else:
+        specs = cap_specs(WORKLOADS[workload](n=n_streams, seed=0),
+                          chunks)
+    session = StreamingSession(SessionConfig(
+        executor="batched" if batched else "sequential",
+        pool_streams=pool or (n_streams + 1),
+        context_backend=backend, arrival_scale=arrival_scale))
+    handles = [session.submit(spec) for spec in specs]
+    res = session.run()
+
     print("\nper-stream fidelity decisions:")
-    for s in streams:
-        print(f"  stream {s.sid}: {s.fidelity_log}")
+    for h in handles:
+        print(f"  stream {h.sid}: {h.fidelity_log}")
+    wl = workload or "all-at-t0"
+    print(f"{'batched' if batched else 'sequential'} on {wl}: "
+          f"{summarize(res).row()}")
 
 
 if __name__ == "__main__":

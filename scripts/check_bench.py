@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Guard the serving-throughput trajectory: compare a freshly measured
+``BENCH_batched_executor.json`` against the previous nightly artifact
+and fail on a >15% streams/s regression in any tracked scenario.
+
+    python scripts/check_bench.py NEW.json PREV.json [--threshold 0.15]
+
+Tracked scenarios: ``sequential``, ``batched/<backend>`` and
+``oversubscribed/<backend>`` ``streams_per_s`` entries.  Scenarios
+missing from the previous artifact (first run, new backend) are
+reported and skipped — the check only compares like with like, so the
+nightly job can bootstrap from an empty history.  Exit code 0 = no
+regression (or nothing to compare), 1 = regression beyond threshold.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _rates(bench: dict) -> dict:
+    """Flatten a benchmark JSON into {scenario: streams_per_s}."""
+    out = {}
+    seq = bench.get("sequential", {})
+    if "streams_per_s" in seq:
+        out["sequential"] = seq["streams_per_s"]
+    for section in ("batched", "oversubscribed"):
+        for backend, row in bench.get(section, {}).items():
+            if "streams_per_s" in row:
+                out[f"{section}/{backend}"] = row["streams_per_s"]
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="freshly measured benchmark JSON")
+    ap.add_argument("prev", help="previous nightly artifact (may be "
+                                 "missing on the first run)")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated fractional streams/s drop")
+    args = ap.parse_args()
+
+    with open(args.new) as f:
+        new = _rates(json.load(f))
+    if not os.path.exists(args.prev):
+        print(f"no previous artifact at {args.prev}: nothing to compare "
+              f"(bootstrapping the bench trajectory)")
+        return 0
+    with open(args.prev) as f:
+        prev = _rates(json.load(f))
+
+    failed = False
+    for scenario in sorted(set(new) | set(prev)):
+        if scenario not in prev:
+            print(f"  {scenario:28s} new scenario "
+                  f"({new[scenario]:.3f} streams/s), skipped")
+            continue
+        if scenario not in new:
+            print(f"  {scenario:28s} dropped from benchmark output, "
+                  f"skipped")
+            continue
+        old_r, new_r = prev[scenario], new[scenario]
+        if old_r <= 0:
+            continue
+        delta = (new_r - old_r) / old_r
+        flag = "REGRESSION" if delta < -args.threshold else "ok"
+        print(f"  {scenario:28s} {old_r:8.3f} -> {new_r:8.3f} streams/s "
+              f"({delta:+.1%}) {flag}")
+        if delta < -args.threshold:
+            failed = True
+    if failed:
+        print(f"FAIL: streams/s regressed more than "
+              f"{args.threshold:.0%} vs the previous nightly run")
+        return 1
+    print("bench trajectory ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

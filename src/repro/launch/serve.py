@@ -1,18 +1,23 @@
 """Serving launcher.
 
-Two modes:
+Two modes, ONE workload spec and ONE metrics surface:
 
     --sim      cluster-scale discrete-event evaluation (the paper's SS7
                experiments): real control plane, modeled 16-worker
                cluster, any workload/policy.
-    --real     real JAX AR-DiT execution on this host: BMPR-selected
-               fidelity drives actual chunk generation (tiny model).
+    --real     real JAX AR-DiT execution on this host through the
+               unified ``serve.session.StreamingSession``: the SAME
+               ``ControlPlane.tick()`` decisions as --sim drive actual
+               chunk generation (tiny model), over the same
+               --workload/--rate/--seed StreamSpec generators, and the
+               run prints the same one-line ``Summary.row()`` — so a
+               workload can be compared sim-vs-real apples-to-apples.
 
     PYTHONPATH=src python -m repro.launch.serve --sim \
         --workload steady --policy slackserve --streams 300
     PYTHONPATH=src python -m repro.launch.serve --real --streams 2
     PYTHONPATH=src python -m repro.launch.serve --real --batched \
-        --streams 4 --max-batch 4
+        --workload burst --streams 6 --seed 0
     PYTHONPATH=src python -m repro.launch.serve --real --batched \
         --streams 4 --pool-streams 2        # oversubscribed page pool
 """
@@ -32,11 +37,16 @@ def main() -> None:
     ap.add_argument("--streams", type=int, default=300)
     ap.add_argument("--rate", type=float, default=1.0)
     ap.add_argument("--model", default="causal-forcing")
-    ap.add_argument("--chunks", type=int, default=4)
+    ap.add_argument("--chunks", type=int, default=4,
+                    help="per-stream chunk cap for --real (the tiny "
+                         "model; --sim uses the spec lengths as-is)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--batched", action="store_true",
                     help="credit-ordered micro-batch executor (--real)")
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--arrival-scale", type=float, default=1.0,
+                    help="multiply workload event times for --real "
+                         "(< 1 compresses Poisson gaps / trace idles)")
     ap.add_argument("--pool-streams", type=int, default=0,
                     help="co-resident stream cap of the paged KV pool "
                          "(< --streams oversubscribes; 0 -> all fit)")
@@ -54,23 +64,36 @@ def main() -> None:
             and not (args.real and args.batched):
         ap.error("--context-backend only applies to --real --batched")
 
+    from repro.sched_sim.metrics import summarize, transfer_stats
+    from repro.sched_sim.workloads import WORKLOADS
+
     if args.real:
-        from repro.serve.executor import serve_session
-        streams = serve_session(n_streams=args.streams,
-                                chunks_per_stream=args.chunks,
-                                batched=args.batched,
-                                max_batch=args.max_batch,
-                                pool_streams=args.pool_streams or None,
-                                context_backend=args.context_backend)
-        mode = "batched" if args.batched else "sequential"
-        print(f"served {len(streams)} streams x "
-              f"{args.chunks} chunks (real model, {mode})")
+        from repro.serve.session import (SessionConfig, StreamingSession,
+                                         cap_specs)
+
+        specs = cap_specs(
+            WORKLOADS[args.workload](n=args.streams, rate=args.rate,
+                                     seed=args.seed), args.chunks)
+        session = StreamingSession(SessionConfig(
+            executor="batched" if args.batched else "sequential",
+            max_batch=args.max_batch,
+            # 0 -> everyone fits, like the legacy wrapper default
+            pool_streams=args.pool_streams or args.streams + 1,
+            context_backend=args.context_backend,
+            arrival_scale=args.arrival_scale,
+            verbose=True))   # --seed varies the workload, not the model
+        for spec in specs:
+            session.submit(spec)
+        res = session.run()
+        s = summarize(res)
+        label = "real-batched" if args.batched else "real-sequential"
+        print(f"{label} on {args.workload}: {s.row()}")
+        print(f"  rehomings={s.n_rehomings} elastic_sp={s.n_sp_events} "
+              f"transfers={transfer_stats(res)}")
         return
 
-    from repro.sched_sim.metrics import summarize, transfer_stats
     from repro.sched_sim.policies import SDV2Policy, make_policy
     from repro.sched_sim.simulator import SimConfig, Simulator
-    from repro.sched_sim.workloads import WORKLOADS
 
     specs = WORKLOADS[args.workload](n=args.streams, rate=args.rate,
                                      seed=args.seed)

@@ -1,18 +1,25 @@
-"""Evaluation metrics (paper SS7.1).
+"""Evaluation metrics (paper SS7.1) — ONE metrics surface for simulated
+and real runs.
 
     QoE = CPR = mean over streams of (fraction of chunks ready by their
           playout deadlines)
     TTFC = mean time from arrival to first playable chunk
     quality = mean profiled VBench over all delivered chunks
     stalls = per-stream count + duration distribution (Fig. 14)
+
+Every function here is duck-typed over a *result-like* object — the
+discrete-event simulator's ``SimResult`` or the real executor's
+``serve.session.SessionResult``.  Both expose ``streams`` (sid ->
+``core.types.Stream`` record), an ``engine`` transfer log, and the
+rehoming / elastic-SP counters, so the same ``StreamSpec`` workload run
+through either driver yields ``Summary`` objects with identically
+defined fields (apples-to-apples sim-vs-real comparison).
 """
 from __future__ import annotations
 
 import dataclasses
 import statistics
-from typing import Dict, List
-
-from repro.sched_sim.simulator import SimResult
+from typing import Any, Dict, List
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,7 +41,9 @@ class Summary:
                 f"avg_stall={self.avg_stall_ms:.0f}ms")
 
 
-def summarize(res: SimResult) -> Summary:
+def summarize(res: Any) -> Summary:
+    """CPR / TTFC / quality / stall summary of a result-like object
+    (``SimResult`` or ``SessionResult`` — see module docstring)."""
     cprs: List[float] = []
     ttfcs: List[float] = []
     quals: List[float] = []
@@ -61,10 +70,11 @@ def summarize(res: SimResult) -> Summary:
         avg_stall_ms=1000.0 * statistics.mean(stall_durs) if stall_durs
         else 0.0,
         n_streams=len(cprs), n_chunks=n_chunks,
-        n_rehomings=res.n_rehomings, n_sp_events=res.n_sp_events)
+        n_rehomings=getattr(res, "n_rehomings", 0),
+        n_sp_events=getattr(res, "n_sp_events", 0))
 
 
-def stall_histogram(res: SimResult,
+def stall_histogram(res: Any,
                     edges=(0.1, 0.25, 0.5, 1.0, 2.0, 5.0)) -> Dict[str, int]:
     durs = [d for s in res.streams.values() for d in s.stall_events]
     hist: Dict[str, int] = {}
@@ -76,7 +86,7 @@ def stall_histogram(res: SimResult,
     return hist
 
 
-def transfer_stats(res: SimResult) -> Dict[str, float]:
+def transfer_stats(res: Any) -> Dict[str, float]:
     log = res.engine.log
     if not log:
         return {"n": 0, "avg_ms": 0.0, "p95_ms": 0.0,

@@ -35,14 +35,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import queues, slack
-from repro.core.bmpr import BMPR
-from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
+from repro.core import queues
+from repro.core.fidelity import FidelityConfig
 from repro.core.state_plane import AsyncTransferEngine, PagedKVPool
-from repro.core.types import Stream, Worker
+from repro.core.types import Stream
 from repro.models import ardit as A
 from repro.models import kvcache
-from repro.profiler.profiles import get_profile
 from repro.serve.executor import EMA_DECAY, ChunkExecutor, ServedStream
 
 
@@ -484,6 +482,14 @@ class BatchedChunkExecutor(ChunkExecutor):
         self._boundary_cache.clear()
         return True
 
+    def abort_chunk(self, sid: int) -> None:
+        """Drop an in-flight chunk at a step boundary (prompt switch):
+        the partial denoise work is discarded.  Pool state needs no
+        rollback — KV is only appended at the clean pass — and any
+        pending transfer wait stays charged to the stream's next
+        completed chunk (the restore really happened)."""
+        self.inflight.pop(sid, None)
+
     def retire(self, sid: int) -> None:
         self.pool.release(sid)
         self.inflight.pop(sid, None)
@@ -704,16 +710,18 @@ def serve_session_batched(n_streams: int = 4, chunks_per_stream: int = 4,
                           pool_streams: Optional[int] = None,
                           context_backend: str = "paged",
                           verbose: bool = True) -> List[ServedStream]:
-    """End-to-end batched session: the SAME control-plane code paths as
-    the simulator (service credit, credit-sorted queue, dispatch-set)
-    drive real batched chunk generation.
+    """Legacy batched entry point — now a thin wrapper over the unified
+    ``repro.serve.session.StreamingSession`` (all streams arrive at
+    t=0, exact per-stream chunk counts).
 
-    Per iteration: update credits -> order queue -> take the runnable
-    set (``queues.next_dispatch_set``) -> bring dispatched streams
-    page-resident (credit-aware eviction on pressure) -> compose
-    same-fidelity sub-batches -> one jitted step each.  Measured wall
-    time feeds ``t_next``/``remaining`` so credits track this host, not
-    the H100-calibrated offline profile.
+    The session is driven by ``core.control_plane.ControlPlane.tick()``
+    — the SAME Algorithm 2 decision code the discrete-event simulator
+    runs — with this module's ``BatchedChunkExecutor`` as the apply
+    layer; playout/stall state lives in ONE per-stream record
+    (``core.types.Stream``) and the returned ``ServedStream``s are
+    views over it.  Fidelity budgets follow Eq. 1
+    (``B = max(P_u - R_u, 0)``) through the session's host-calibrated
+    unit conversion — the old hand-tuned magic budget scale is gone.
 
     ``pool_streams`` caps co-resident streams (oversubscription when
     < n_streams: extra streams spill to host and rejoin at chunk
@@ -722,112 +730,15 @@ def serve_session_batched(n_streams: int = 4, chunks_per_stream: int = 4,
     from the page pool through block tables; ``"gather"`` materializes
     the contiguous context per boundary (executable reference).
     """
-    ex = BatchedChunkExecutor(
-        max_streams=pool_streams or (n_streams + 1),
-        context_backend=context_backend)
-    policy = fidelity_policy or BMPR(get_profile())
-
-    # calibrate the wall-clock playout rate to this host (and warm the
-    # jit cache for batch-size-1 shapes)
-    ex.admit(-1, seed=999)
-    ex.begin_chunk(-1, HIGHEST_QUALITY, 0.0)
-    while -1 in ex.inflight:
-        _, _ = ex.run_step([-1])
-    top_lat = (HIGHEST_QUALITY.steps + 1) * ex.step_ema[HIGHEST_QUALITY.key]
-    ex.retire(-1)
-    chunk_seconds = realtime_budget or (4.0 * top_lat)
-
-    worker = Worker(0, node=0)
-    streams: Dict[int, Stream] = {}
-    for i in range(n_streams):
-        ex.admit(i, seed=i)
-        s = Stream(sid=i, arrival=0.0, target_chunks=chunks_per_stream,
-                   chunk_seconds=chunk_seconds, home=0,
-                   ttfc_slack=2.0 * chunk_seconds,
-                   next_deadline=2.0 * chunk_seconds)
-        s.t_next = top_lat
-        streams[i] = s
-        worker.queue.append(i)
-
-    t_start = time.perf_counter()
-    clock = lambda: time.perf_counter() - t_start     # noqa: E731
-    while any(not s.finished for s in streams.values()):
-        now = clock()
-        for s in streams.values():
-            if not s.finished:
-                s.remaining = ex.remaining_estimate(s.sid)
-                s.running_on = (0,) if s.sid in ex.inflight else None
-                slack.update_stream_credit(s, now)
-        queues.order_queue(worker, streams)
-        runnable = queues.next_dispatch_set(worker, streams, now)
-        if not runnable:
-            break
-        # page-granular admission control: fill the micro-batch from the
-        # FULL credit-ordered runnable set with streams that are — or
-        # can be made — page-resident.  A spilled stream may displace a
-        # higher-credit resident (batch members and the admittee are
-        # protected, in-flight chunks always are), but one that cannot
-        # displace anyone is skipped rather than allowed to starve the
-        # batch; it retries next tick.
-        sids = []
-        for sid in runnable:
-            if len(sids) >= max_batch:
-                break
-            if ex.ensure_resident(sid, streams, protect=sids + [sid]):
-                sids.append(sid)
-        if not sids:
-            if not ex.inflight:
-                break                   # no residency, no work: give up
-            continue
-        for sid in sids:
-            if sid not in ex.inflight:
-                s = streams[sid]
-                budget = max(s.playout_slack(now), 0.0)
-                dec = policy.select(
-                    budget / max(chunk_seconds, 1e-9) * 0.72)
-                ex.begin_chunk(sid, dec.fidelity, now)
-                s.t_next = ex.latency_ema.get(dec.fidelity.key,
-                                              dec.latency)
-        groups = compose_batch(
-            sids, lambda sid: ex.inflight[sid].fidelity, max_batch)
-        for grp in groups:
-            flight_started = {sid: ex.inflight[sid].started for sid in grp}
-            fid_key = ex.inflight[grp[0]].fidelity.key
-            completed, _ = ex.run_step(grp)     # updates the latency EMAs
-            now = clock()
-            for sid in completed:
-                s = streams[sid]
-                lat = now - flight_started[sid]
-                ddl = s.next_deadline
-                s.ready_times.append(now)
-                s.deadlines.append(ddl)
-                if s.first_chunk_time is None:
-                    s.first_chunk_time = now
-                if now > ddl:
-                    s.stall_time += now - ddl
-                s.next_deadline = max(ddl, now) + s.chunk_seconds
-                s.chunks_done += 1
-                s.fidelity_log.append(fid_key)
-                if s.finished:
-                    # free the pages NOW: a finished stream's KV would
-                    # otherwise pin residency and be pointlessly spilled
-                    # to host on the next eviction (retire is idempotent
-                    # with the cleanup below; generated chunks survive)
-                    ex.retire(sid)
-                if verbose:
-                    print(f"t={now:6.2f}s stream {sid} chunk "
-                          f"{s.chunks_done}/{s.target_chunks} "
-                          f"fid={fid_key:22s} lat={lat:.2f}s "
-                          f"{'LATE' if now > ddl else 'on-time'}")
-
-    out: List[ServedStream] = []
-    for i in range(n_streams):
-        st = ServedStream(sid=i, cond=None, cache=None,
-                          target_chunks=chunks_per_stream,
-                          chunks=ex.chunks[i],
-                          fidelity_log=ex.fidelity_log[i],
-                          next_deadline=streams[i].next_deadline,
-                          chunk_seconds=chunk_seconds)
-        out.append(st)
-        ex.retire(i)
-    return out
+    from repro.serve.session import (SessionConfig, StreamingSession,
+                                     uniform_specs)
+    session = StreamingSession(
+        SessionConfig(executor="batched", max_batch=max_batch,
+                      pool_streams=pool_streams or (n_streams + 1),
+                      context_backend=context_backend,
+                      realtime_budget=realtime_budget, verbose=verbose),
+        fidelity_policy=fidelity_policy)
+    for spec in uniform_specs(n_streams, chunks_per_stream):
+        session.submit(spec)
+    session.run()
+    return session.served_streams()

@@ -12,18 +12,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, get_config
-from repro.core import slack as slack_mod
-from repro.core.bmpr import BMPR
-from repro.core.control_plane import ControlPlane, ControlConfig
-from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
+from repro.core.fidelity import FidelityConfig
+from repro.core.state_plane import AsyncTransferEngine
+from repro.core.types import Stream
 from repro.models import ardit as A
-from repro.profiler.profiles import get_profile
 
 # blend of the prior vs the newest measured latency in the online
 # re-profiling EMAs (shared with the batched executor)
@@ -87,6 +84,76 @@ class ChunkExecutor:
         return chunk, dt
 
 
+@dataclasses.dataclass
+class _Flight:
+    """One stream's pending chunk in the sequential adapter (the whole
+    chunk is one atomic 'step')."""
+    fidelity: FidelityConfig
+    started: float = 0.0
+    step: int = 0
+
+
+class SequentialChunkExecutor(ChunkExecutor):
+    """Whole-chunk-atomic adapter: exposes the batched executor's step
+    interface (``admit`` / ``begin_chunk`` / ``run_step`` / ``retire``)
+    over the eager one-stream-at-a-time path, so
+    ``repro.serve.session.StreamingSession`` drives either executor
+    through ONE control loop.  Batch size is 1 and one ``run_step``
+    call generates one complete chunk."""
+
+    def __init__(self, cfg: Optional[ModelConfig] = None,
+                 params: Optional[Any] = None, seed: int = 0):
+        super().__init__(cfg=cfg, params=params, seed=seed)
+        self.streams: Dict[int, ServedStream] = {}
+        self.inflight: Dict[int, _Flight] = {}
+        self.chunks: Dict[int, List[jax.Array]] = {}
+        self.fidelity_log: Dict[int, List[str]] = {}
+        # no KV pool, so no spill/restore traffic: the engine exists
+        # only to satisfy the shared metrics surface (empty log)
+        self.engine = AsyncTransferEngine(n_layers=self.cfg.n_layers)
+
+    def admit(self, sid: int, seed: int = 0,
+              streams: Optional[Dict[int, Stream]] = None,
+              protect: Sequence[int] = ()) -> bool:
+        st = self.open_stream(sid, target_chunks=1 << 30, now=0.0,
+                              ttfc_slack=0.0, seed=seed)
+        self.streams[sid] = st
+        self.chunks[sid] = st.chunks           # same list object
+        self.fidelity_log[sid] = st.fidelity_log
+        return True
+
+    def ensure_resident(self, sid: int,
+                        streams: Optional[Dict[int, Stream]] = None,
+                        protect: Sequence[int] = ()) -> bool:
+        assert sid in self.streams, f"stream {sid} was never admitted"
+        return True                            # whole cache lives on-device
+
+    def begin_chunk(self, sid: int, fidelity: FidelityConfig,
+                    now: float) -> None:
+        self.inflight[sid] = _Flight(fidelity=fidelity, started=now)
+
+    def run_step(self, sids: Sequence[int]) -> Tuple[List[int], float]:
+        assert len(sids) == 1, \
+            "the sequential executor serves one stream per step"
+        sid = sids[0]
+        f = self.inflight.pop(sid)
+        _, dt = self.generate_chunk(self.streams[sid], f.fidelity)
+        return [sid], dt
+
+    def remaining_estimate(self, sid: int) -> float:
+        f = self.inflight.get(sid)
+        if f is None:
+            return 0.0
+        return self.latency_ema.get(f.fidelity.key, 0.0)
+
+    def abort_chunk(self, sid: int) -> None:
+        """Drop the pending chunk (prompt switch before generation)."""
+        self.inflight.pop(sid, None)
+
+    def retire(self, sid: int) -> None:
+        self.inflight.pop(sid, None)
+
+
 def serve_session(n_streams: int = 2, chunks_per_stream: int = 4,
                   realtime_budget: Optional[float] = None,
                   verbose: bool = True,
@@ -94,7 +161,9 @@ def serve_session(n_streams: int = 2, chunks_per_stream: int = 4,
                   max_batch: int = 4,
                   pool_streams: Optional[int] = None,
                   context_backend: str = "paged") -> List[ServedStream]:
-    """Small end-to-end session: BMPR-driven fidelity on the real model.
+    """Legacy entry point — now a thin wrapper over the unified
+    ``repro.serve.session.StreamingSession`` (all streams arrive at
+    t=0, exact per-stream chunk counts).
 
     ``realtime_budget``: seconds of playout per chunk used for slack
     bookkeeping; defaults to 4x the measured top-fidelity latency so the
@@ -117,37 +186,12 @@ def serve_session(n_streams: int = 2, chunks_per_stream: int = 4,
             max_batch=max_batch, realtime_budget=realtime_budget,
             pool_streams=pool_streams, context_backend=context_backend,
             verbose=verbose)
-    ex = ChunkExecutor()
-    bmpr = BMPR(get_profile())
-    # calibrate the wall-clock playout rate to this host
-    warm = ex.open_stream(-1, 1, now=0.0, ttfc_slack=1e9)
-    _, top_lat = ex.generate_chunk(warm, HIGHEST_QUALITY)
-    chunk_seconds = realtime_budget or (4.0 * top_lat)
-
-    streams = []
-    now = 0.0
-    for i in range(n_streams):
-        st = ex.open_stream(i, chunks_per_stream, now=now,
-                            ttfc_slack=2.0 * chunk_seconds, seed=i)
-        st.chunk_seconds = chunk_seconds
-        streams.append(st)
-
-    t_start = time.perf_counter()
-    while any(not s.done for s in streams):
-        now = time.perf_counter() - t_start
-        # lowest playout slack first (the paper's credit ordering)
-        s = min((x for x in streams if not x.done),
-                key=lambda x: x.next_deadline)
-        budget = max(s.next_deadline - now, 0.0)
-        # budget is wall-seconds; scale into the profile's latency units
-        dec = bmpr.select(budget / max(chunk_seconds, 1e-9) * 0.72)
-        _, dt = ex.generate_chunk(s, dec.fidelity)
-        now = time.perf_counter() - t_start
-        ddl = s.next_deadline
-        s.next_deadline = max(ddl, now) + s.chunk_seconds
-        if verbose:
-            print(f"t={now:6.2f}s stream {s.sid} chunk "
-                  f"{len(s.chunks)}/{s.target_chunks} "
-                  f"fid={dec.fidelity.key:22s} lat={dt:.2f}s "
-                  f"{'LATE' if now > ddl else 'on-time'}")
-    return streams
+    from repro.serve.session import (SessionConfig, StreamingSession,
+                                     uniform_specs)
+    session = StreamingSession(SessionConfig(
+        executor="sequential", max_batch=1,
+        realtime_budget=realtime_budget, verbose=verbose))
+    for spec in uniform_specs(n_streams, chunks_per_stream):
+        session.submit(spec)
+    session.run()
+    return session.served_streams()

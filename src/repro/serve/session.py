@@ -1,0 +1,511 @@
+"""Unified StreamingSession API: ONE control plane, ONE workload spec,
+ONE metrics surface for the simulator and the real JAX executor.
+
+Before this module, the repo had three divergent serving drivers: the
+discrete-event ``sched_sim.Simulator`` (which runs the paper's Algorithm
+2 through ``core.control_plane.ControlPlane``), the sequential
+``serve_session`` loop, and the batched ``serve_session_batched`` loop —
+the latter two re-implementing hand-rolled subsets of the control tick
+(inline slack updates, ad-hoc queue ordering, a magic hand-tuned
+fidelity-budget scale) and emitting no ``sched_sim.metrics.Summary``.
+
+``StreamingSession`` consolidates them:
+
+    * requests are submitted as ``sched_sim.workloads.StreamSpec``s —
+      online arrivals, per-stream chunk counts, pause and prompt-switch
+      events — exactly the objects every workload generator produces;
+    * stream lifecycle is exposed through handles
+      (``submit() -> StreamHandle``, ``.chunks_ready``, ``.done``);
+    * the scheduling loop is driven by ``ControlPlane.tick()`` — the
+      SAME decision code the simulator runs (BMPR fidelity -> Eq. 1
+      service credit -> three-tier queue ordering) — with a real
+      executor (batched page-pool executor or the sequential
+      whole-chunk executor) as the apply layer;
+    * every stream's playout timeline lives in ONE per-stream record
+      (``core.types.Stream``), so ``sched_sim.metrics.summarize()``
+      produces the same CPR / TTFC / stall Summary over a real session
+      that it produces over a simulation.
+
+Budget units (the fix for the old hand-tuned budget fudge): the offline
+profile's latencies are H100-calibrated while the session's clock is
+this host's wall clock, so the session measures one top-fidelity warm-up
+chunk and scales Eq. 1 budgets by
+
+    time_scale = profile.latency(HIGHEST_QUALITY) / measured_top_latency
+
+(``_HostCalibratedPolicy``).  Once a fidelity's measured-latency EMA
+exists it replaces the scaled profile estimate entirely (online
+re-profiling), so T_u in Eq. 1 tracks this host, not the offline model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import queues, slack
+from repro.core.bmpr import BMPR, BMPRDecision
+from repro.core.control_plane import ControlConfig, ControlPlane
+from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
+from repro.core.state_plane import AsyncTransferEngine
+from repro.core.types import ClusterView, Stream, Worker
+from repro.profiler.profiles import get_profile
+from repro.sched_sim import cost_model as cm
+from repro.sched_sim.workloads import StreamSpec
+from repro.serve.executor import ServedStream
+
+
+@dataclasses.dataclass
+class SessionConfig:
+    """Knobs of a real-model serving session.
+
+    ``executor`` picks the apply layer: ``"batched"`` (credit-ordered
+    micro-batches over the paged KV pool) or ``"sequential"``
+    (whole-chunk-atomic, one stream at a time).  ``tick_interval`` is
+    the control-tick cadence in session seconds; 0 runs Algorithm 2 at
+    every scheduler iteration (the natural cadence when chunk latencies
+    are far below the paper's 3 s tick).  ``arrival_scale`` multiplies
+    every StreamSpec time (arrival, switch offsets, pause windows) —
+    < 1 compresses a workload trace so demos and tests don't wait out
+    real Poisson gaps.  ``realtime_budget`` fixes the playout seconds
+    per chunk; None calibrates 4x the measured top-fidelity latency so
+    any host speed exercises both BMPR modes.
+    """
+    executor: str = "batched"
+    max_batch: int = 4
+    pool_streams: Optional[int] = None
+    context_backend: str = "paged"
+    realtime_budget: Optional[float] = None
+    tick_interval: float = 0.0
+    arrival_scale: float = 1.0
+    seed: int = 0
+    verbose: bool = True
+
+
+@dataclasses.dataclass
+class SessionResult:
+    """Same surface as ``sched_sim.simulator.SimResult`` — one metrics
+    language for simulated and real runs (``metrics.summarize`` accepts
+    either)."""
+    streams: Dict[int, Stream]
+    engine: AsyncTransferEngine
+    n_rehomings: int
+    n_sp_events: int
+    worker_tier_samples: List[Tuple[int, int, int]]
+    fidelity_counts: Dict[str, int]
+    control_tick_times: List[float]
+
+
+class StreamHandle:
+    """Client-side view of one submitted stream.
+
+    Valid from ``submit()`` on; the underlying per-stream record
+    (``core.types.Stream``) appears once the stream's arrival time is
+    reached inside ``run()``.
+    """
+
+    def __init__(self, session: "StreamingSession", spec: StreamSpec):
+        self._session = session
+        self.spec = spec
+
+    @property
+    def sid(self) -> int:
+        return self.spec.sid
+
+    @property
+    def record(self) -> Optional[Stream]:
+        """The session's per-stream record (None before arrival)."""
+        return self._session.view.streams.get(self.sid)
+
+    @property
+    def chunks_ready(self) -> int:
+        return len(self._session.executor.chunks.get(self.sid, ()))
+
+    @property
+    def chunks(self) -> List[Any]:
+        """Generated latent chunks, in playout order."""
+        return list(self._session.executor.chunks.get(self.sid, ()))
+
+    @property
+    def done(self) -> bool:
+        r = self.record
+        return r is not None and r.finished
+
+    @property
+    def fidelity_log(self) -> List[str]:
+        r = self.record
+        return list(r.fidelity_log) if r is not None else []
+
+    def served_stream(self) -> ServedStream:
+        """Back-compat ``ServedStream`` view, built from the per-stream
+        record (single source of truth for deadlines/fidelity)."""
+        return self._session._served_stream(self.sid)
+
+
+class _HostCalibratedPolicy:
+    """Budget adapter between wall-second Eq. 1 budgets and a fidelity
+    policy whose frontier is in offline-profile latency units.
+
+    ``select(B)`` hands the wrapped policy ``B * time_scale`` (profile
+    units) and converts the decision's latency estimate back to wall
+    seconds — replaced by the executor's measured EMA for that fidelity
+    as soon as one exists (online re-profiling).  Deliberately does NOT
+    expose ``.profile``: ``ControlPlane.tick`` then takes T_u from the
+    decision we return (wall units) instead of re-reading the offline
+    profile.
+    """
+
+    def __init__(self, inner, executor, time_scale: float):
+        self.inner = inner
+        self.executor = executor
+        self.time_scale = time_scale
+
+    def select(self, budget: float) -> BMPRDecision:
+        dec = self.inner.select(budget * self.time_scale)
+        lat = self.executor.latency_ema.get(
+            dec.fidelity.key, dec.latency / self.time_scale)
+        return BMPRDecision(dec.fidelity, lat, dec.quality, dec.mode)
+
+
+def uniform_specs(n_streams: int, chunks_per_stream: int) -> List[StreamSpec]:
+    """All-arrive-at-t=0 specs with exact chunk counts — the workload
+    the legacy ``serve_session*`` entry points implied."""
+    frames = chunks_per_stream * cm.PIXEL_FRAMES_PER_CHUNK
+    return [StreamSpec(sid=i, arrival=0.0, frames=frames)
+            for i in range(n_streams)]
+
+
+def cap_specs(specs: List[StreamSpec],
+              max_chunks: int) -> List[StreamSpec]:
+    """Trim every spec to at most ``max_chunks`` chunks (the real tiny
+    model finishes promptly); arrivals and event times are kept."""
+    return [dataclasses.replace(
+        s, frames=min(s.frames, max_chunks * cm.PIXEL_FRAMES_PER_CHUNK))
+        for s in specs]
+
+
+class StreamingSession:
+    """One serving session over a real executor, driven by the paper's
+    control plane.
+
+    Usage::
+
+        session = StreamingSession(SessionConfig(executor="batched"))
+        handles = [session.submit(spec) for spec in workloads.burst(n=6)]
+        result = session.run()                 # SessionResult
+        summary = sched_sim.metrics.summarize(result)
+
+    ``submit`` only registers the spec; admission happens inside
+    ``run()`` when the session clock reaches ``spec.arrival`` (times
+    scaled by ``config.arrival_scale``).  Prompt switches reset playout
+    slack to the initial TTFC and abort the in-flight chunk; pauses
+    extend the playout deadline by their duration — the same event
+    semantics as ``sched_sim.Simulator``.
+    """
+
+    def __init__(self, config: Optional[SessionConfig] = None, *,
+                 executor: Optional[Any] = None,
+                 fidelity_policy: Optional[Any] = None):
+        self.cfg = config or SessionConfig()
+        if executor is not None:
+            self.executor = executor
+        elif self.cfg.executor == "sequential":
+            from repro.serve.executor import SequentialChunkExecutor
+            self.executor = SequentialChunkExecutor(seed=self.cfg.seed)
+        else:
+            from repro.serve.batcher import BatchedChunkExecutor
+            self.executor = BatchedChunkExecutor(
+                seed=self.cfg.seed,
+                max_streams=self.cfg.pool_streams or 16,
+                context_backend=self.cfg.context_backend)
+
+        policy = fidelity_policy or BMPR(get_profile())
+        self._profile = getattr(policy, "profile", None) or get_profile()
+
+        # ---- host calibration (one top-fidelity warm-up chunk) ----------
+        # measures this host's top-fidelity chunk latency, warms the jit
+        # cache for batch-size-1 shapes, and fixes the wall<->profile
+        # time scale that replaces the old hand-tuned budget factor
+        ex = self.executor
+        ex.admit(-1, seed=999)
+        ex.begin_chunk(-1, HIGHEST_QUALITY, 0.0)
+        while -1 in ex.inflight:
+            ex.run_step([-1])
+        ex.retire(-1)
+        self.top_latency = ex.latency_ema[HIGHEST_QUALITY.key]
+        self.chunk_seconds = (self.cfg.realtime_budget
+                              or 4.0 * self.top_latency)
+        time_scale = (self._profile.latency(HIGHEST_QUALITY)
+                      / max(self.top_latency, 1e-9))
+        self.control = ControlPlane(
+            ControlConfig(tick_interval=self.cfg.tick_interval,
+                          use_rehoming=False,     # single local worker
+                          use_elastic_sp=False),
+            fidelity_policy=_HostCalibratedPolicy(policy, ex, time_scale))
+
+        # ---- cluster view: one worker (this host's device) --------------
+        self.worker = Worker(0, node=0)
+        self.view = ClusterView({}, [self.worker], workers_per_node=1)
+        self.handles: Dict[int, StreamHandle] = {}
+        self._order: List[int] = []
+        self._events: List[Tuple[float, int, str, Any]] = []
+        self._eseq = itertools.count()
+        self._pending_arrivals = 0
+        self._t0: Optional[float] = None
+        self._next_tick = 0.0
+        self.fidelity_counts: Dict[str, int] = {}
+        self.worker_tier_samples: List[Tuple[int, int, int]] = []
+
+    # ---- submission --------------------------------------------------------
+    def submit(self, spec: StreamSpec) -> StreamHandle:
+        """Register one stream request.  Times in the spec are relative
+        to session start (``run()``), scaled by ``arrival_scale``."""
+        assert spec.sid not in self.handles, f"duplicate sid {spec.sid}"
+        assert spec.sid >= 0, "negative sids are reserved (warm-up)"
+        sc = self.cfg.arrival_scale
+        h = StreamHandle(self, spec)
+        self.handles[spec.sid] = h
+        self._order.append(spec.sid)
+        self._push(spec.arrival * sc, "arrival", spec.sid)
+        self._pending_arrivals += 1
+        for st in spec.switches:
+            self._push((spec.arrival + st) * sc, "prompt_switch", spec.sid)
+        for (ps, dur) in spec.pauses:
+            self._push((spec.arrival + ps) * sc, "pause",
+                       (spec.sid, dur * sc))
+        return h
+
+    def _push(self, t: float, kind: str, payload: Any) -> None:
+        heapq.heappush(self._events, (t, next(self._eseq), kind, payload))
+
+    # ---- clock -------------------------------------------------------------
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return time.perf_counter() - self._t0
+
+    # ---- event handlers (mirroring sched_sim.Simulator) --------------------
+    def _on_arrival(self, sid: int, t_arr: float) -> None:
+        spec = self.handles[sid].spec
+        self._pending_arrivals -= 1
+        # SS3.3 steps 1-2: initial playout slack from the first-chunk
+        # estimate (measured top-fidelity latency on THIS host)
+        first_est = self.executor.latency_ema.get(HIGHEST_QUALITY.key,
+                                                  self.top_latency)
+        ttfc_slack = self.control.initial_slack(first_est)
+        s = Stream(sid=sid, arrival=t_arr, target_chunks=spec.chunks,
+                   chunk_seconds=self.chunk_seconds, home=0,
+                   ttfc_slack=ttfc_slack,
+                   next_deadline=t_arr + ttfc_slack)
+        s.t_next = first_est
+        self.view.streams[sid] = s
+        self.worker.queue.append(sid)
+        self.executor.admit(sid, seed=sid, streams=self.view.streams,
+                            protect=list(self.executor.inflight))
+
+    def _on_prompt_switch(self, sid: int, now: float) -> None:
+        s = self.view.streams.get(sid)
+        if s is None or s.done:
+            return
+        # chunks buffered under the old condition are useless: playout
+        # slack resets to the initial TTFC and the in-flight chunk is
+        # aborted at the next step boundary (its denoise work is lost,
+        # exactly the simulator's step_done = 0 reset)
+        s.next_deadline = now + s.ttfc_slack
+        s.step_done = 0
+        s.remaining = 0.0
+        self.executor.abort_chunk(sid)
+
+    def _on_pause(self, payload: Tuple[int, float]) -> None:
+        sid, dur = payload
+        s = self.view.streams.get(sid)
+        if s is None or s.done:
+            return
+        s.next_deadline += dur                 # playout halts; slack grows
+
+    def _drain_events(self, now: float) -> None:
+        while self._events and self._events[0][0] <= now:
+            t, _, kind, payload = heapq.heappop(self._events)
+            if kind == "arrival":
+                self._on_arrival(payload, t)
+            elif kind == "prompt_switch":
+                self._on_prompt_switch(payload, now)
+            elif kind == "pause":
+                self._on_pause(payload)
+
+    # ---- the session loop --------------------------------------------------
+    def _all_done(self) -> bool:
+        return (self._pending_arrivals == 0
+                and all(s.done for s in self.view.streams.values()))
+
+    def _sample_tiers(self) -> None:
+        counts = queues.tier_counts(self.view)
+        cls = [queues.worker_class(counts[w.wid]) for w in self.view.workers]
+        self.worker_tier_samples.append(
+            (cls.count("urgent"), cls.count("mixed"), cls.count("relaxed")))
+
+    def run(self) -> SessionResult:
+        """Drive every submitted stream to completion (or starvation
+        stand-still) and return the session's metrics record."""
+        ex = self.executor
+        # the whole-chunk-atomic sequential adapter has no KV pool and
+        # serves one stream per call; the batched executor micro-batches
+        max_batch = self.cfg.max_batch if hasattr(ex, "pool") else 1
+        from repro.serve.batcher import compose_batch
+
+        while not self._all_done():
+            now = self._now()
+            self._drain_events(now)
+
+            # Algorithm 2 control tick: BMPR fidelity -> Eq. 1 credit ->
+            # three-tier queue ordering.  R_u comes from the executor's
+            # measured step EMAs first so the tick sees honest remaining
+            # times (the simulator's policy.on_tick equivalent).
+            for s in self.view.active_streams():
+                s.remaining = ex.remaining_estimate(s.sid)
+                s.running_on = (0,) if s.sid in ex.inflight else None
+            if now >= self._next_tick:
+                self.control.tick(self.view, now)
+                self._sample_tiers()
+                self._next_tick = now + self.cfg.tick_interval
+            else:
+                # between ticks the queue keeps tracking credit at step
+                # boundaries, exactly like the simulator policy's order()
+                for s in self.view.active_streams():
+                    slack.update_stream_credit(s, now,
+                                               self.control.config.alpha)
+                queues.order_queue(self.worker, self.view.streams)
+            runnable = queues.next_dispatch_set(self.worker,
+                                                self.view.streams, now)
+            if not runnable:
+                if self._events:
+                    self._wait_for(self._events[0][0])
+                    continue
+                break                            # nothing left to serve
+
+            # page-granular admission control: fill the micro-batch from
+            # the credit-ordered runnable set with streams that are — or
+            # can be made — page-resident (credit-aware eviction); a
+            # stream that cannot displace anyone defers one iteration.
+            sids: List[int] = []
+            for sid in runnable:
+                if len(sids) >= max_batch:
+                    break
+                if ex.ensure_resident(sid, self.view.streams,
+                                      protect=sids + [sid]):
+                    sids.append(sid)
+            if not sids:
+                if not ex.inflight:
+                    if self._events:
+                        self._wait_for(self._events[0][0])
+                        continue
+                    break          # no residency, no work: stand-still
+                time.sleep(0.0005)
+                continue
+
+            for sid in sids:
+                if sid not in ex.inflight:
+                    s = self.view.streams[sid]
+                    # Eq. 1 (paper SS3.2): C_u = P_u - (R_u + T_u).  The
+                    # fidelity budget at a chunk boundary is the credit
+                    # with T_u left free, B = max(P_u - R_u, 0); R_u = 0
+                    # here because the stream is between chunks.  The
+                    # wall->profile unit conversion lives in
+                    # _HostCalibratedPolicy — no hand-tuned scale.
+                    budget = max(s.playout_slack(now) - s.remaining, 0.0)
+                    dec = self.control.fidelity_policy.select(budget)
+                    s.next_fidelity = dec.fidelity
+                    s.t_next = dec.latency
+                    s.chunk_started = now
+                    s.step_done = 0
+                    ex.begin_chunk(sid, dec.fidelity, now)
+
+            groups = compose_batch(
+                sids, lambda sid: ex.inflight[sid].fidelity, max_batch)
+            for grp in groups:
+                flights = {sid: ex.inflight[sid] for sid in grp}
+                completed, _ = ex.run_step(grp)
+                now = self._now()
+                for sid in completed:
+                    self._complete_chunk(sid, flights[sid].fidelity,
+                                         flights[sid].started, now)
+        return self.result()
+
+    def _wait_for(self, t_event: float) -> None:
+        """Idle until the next workload event (capped nap so arrivals
+        stay responsive without busy-spinning the host)."""
+        now = self._now()
+        time.sleep(max(0.0005, min(t_event - now, 0.05)))
+
+    # ---- playout bookkeeping (the single per-stream record) ----------------
+    def _complete_chunk(self, sid: int, fid: FidelityConfig,
+                        started: float, now: float) -> None:
+        s = self.view.streams[sid]
+        ddl = s.next_deadline
+        s.ready_times.append(now)
+        s.deadlines.append(ddl)
+        if s.first_chunk_time is None:
+            s.first_chunk_time = now
+        if now > ddl:
+            s.stall_time += now - ddl
+            s.stall_events.append(now - ddl)
+        s.next_deadline = max(ddl, now) + s.chunk_seconds
+        s.chunks_done += 1
+        s.step_done = 0
+        s.chunk_started = None
+        s.running_on = None
+        s.remaining = 0.0
+        s.qualities.append(self._profile.quality(fid))
+        s.fidelity_log.append(fid.key)
+        self.fidelity_counts[fid.key] = \
+            self.fidelity_counts.get(fid.key, 0) + 1
+        if s.finished:
+            # free the pages NOW: a finished stream's KV would otherwise
+            # pin residency (generated chunks survive retire)
+            s.done = True
+            self.executor.retire(sid)
+            if sid in self.worker.queue:
+                self.worker.queue.remove(sid)
+        if self.cfg.verbose:
+            print(f"t={now:6.2f}s stream {sid} chunk "
+                  f"{s.chunks_done}/{s.target_chunks} "
+                  f"fid={fid.key:22s} lat={now - started:.2f}s "
+                  f"{'LATE' if now > ddl else 'on-time'}")
+
+    # ---- results -----------------------------------------------------------
+    def result(self) -> SessionResult:
+        engine = (self.executor.pool.engine
+                  if hasattr(self.executor, "pool")
+                  else getattr(self.executor, "engine",
+                               AsyncTransferEngine()))
+        return SessionResult(
+            streams=dict(self.view.streams), engine=engine,
+            n_rehomings=self.control.n_rehomings,
+            n_sp_events=self.control.n_sp_events,
+            worker_tier_samples=list(self.worker_tier_samples),
+            fidelity_counts=dict(self.fidelity_counts),
+            control_tick_times=list(self.control.tick_times))
+
+    def _served_stream(self, sid: int) -> ServedStream:
+        """Back-compat view assembled FROM the per-stream record — the
+        record is written once (``_complete_chunk``); nothing here is a
+        second bookkeeping path."""
+        r = self.view.streams.get(sid)
+        spec = self.handles[sid].spec
+        base = getattr(self.executor, "streams", {}).get(sid)
+        return ServedStream(
+            sid=sid,
+            cond=getattr(base, "cond", None),
+            cache=getattr(base, "cache", None),
+            target_chunks=r.target_chunks if r else spec.chunks,
+            chunks=list(self.executor.chunks.get(sid, ())),
+            fidelity_log=list(r.fidelity_log) if r else [],
+            next_deadline=r.next_deadline if r else 0.0,
+            chunk_seconds=r.chunk_seconds if r else self.chunk_seconds)
+
+    def served_streams(self) -> List[ServedStream]:
+        """All submitted streams as ``ServedStream``s, submission order
+        (the legacy ``serve_session*`` return type)."""
+        return [self._served_stream(sid) for sid in self._order]

@@ -133,6 +133,42 @@ def run_oversubscribed(ex: BatchedChunkExecutor, n_streams: int,
     return dt
 
 
+def run_lanes_session(n_lanes: int, n_streams: int, chunks: int,
+                      seed: int = 0) -> dict:
+    """Multi-lane session scenario: a burst workload served through
+    ``n_lanes`` device lanes under the full control plane (re-homing +
+    elastic SP live).  Reports end-to-end streams/s plus the counts of
+    cross-lane decisions actually applied — the nightly signal that the
+    decision -> apply loop keeps engaging."""
+    from repro.sched_sim.metrics import summarize
+    from repro.sched_sim.workloads import WORKLOADS
+    from repro.serve.session import (SessionConfig, StreamingSession,
+                                     scale_specs)
+    specs = scale_specs(WORKLOADS["burst"](n=n_streams, rate=1.0,
+                                           seed=seed), chunks)
+    session = StreamingSession(SessionConfig(
+        lanes=n_lanes, max_batch=3, pool_streams=n_streams + 1,
+        budget_factor=2.0, verbose=False))
+    for s in specs:
+        session.submit(s)
+    t0 = time.perf_counter()
+    res = session.run()
+    dt = time.perf_counter() - t0
+    s = summarize(res)
+    return {
+        "lanes": n_lanes, "streams": n_streams,
+        "chunks_total": s.n_chunks,
+        "elapsed_s": round(dt, 4),
+        "streams_per_s": round(n_streams / dt, 4),
+        "qoe": round(s.qoe, 4),
+        "migrations": res.n_migrations_applied,
+        "sp_expands": res.n_sp_expands_applied,
+        "sp_releases": res.n_sp_releases_applied,
+        "rehomings_planned": res.n_rehomings,
+        "sp_planned": res.n_sp_events,
+    }
+
+
 def transfer_report(ex: BatchedChunkExecutor) -> dict:
     log = ex.pool.engine.log
     return {
@@ -157,6 +193,13 @@ def main() -> None:
     ap.add_argument("--context-backend", choices=("gather", "paged"),
                     default=None,
                     help="measure only one backend (default: both)")
+    ap.add_argument("--lanes", type=int, default=0,
+                    help="also run the multi-lane session scenario "
+                         "with this many lanes (0 disables)")
+    ap.add_argument("--lane-streams", type=int, default=15,
+                    help="stream count of the --lanes scenario (odd "
+                         "and > lanes*max_batch keeps the cross-lane "
+                         "mechanisms engaged)")
     ap.add_argument("--json", default="BENCH_batched_executor.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args()
@@ -241,6 +284,20 @@ def main() -> None:
               f"total={tr['total_s']:.4f}s "
               f"dispatcher_wait={tr['dispatcher_wait_s']:.4f}s "
               f"(async-stream)")
+
+    if args.lanes:
+        row = run_lanes_session(args.lanes, args.lane_streams,
+                                args.chunks)
+        results["lanes"] = {str(args.lanes): row}
+        print(f"\nlanes/{args.lanes}: {row['streams']} streams through "
+              f"{args.lanes} lanes in {row['elapsed_s']:6.2f}s "
+              f"-> {row['streams_per_s']:5.2f} streams/s "
+              f"QoE={row['qoe']:.3f}")
+        print(f"  applied: migrations={row['migrations']} "
+              f"sp_expands={row['sp_expands']} "
+              f"sp_releases={row['sp_releases']} "
+              f"(planned: rehomings={row['rehomings_planned']} "
+              f"sp={row['sp_planned']})")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -10,6 +10,8 @@ live model instead of the simulator), driven by the unified
         --context-backend=gather ...
     PYTHONPATH=src python examples/serve_stream.py --batched \
         --workload=burst --arrival-scale=0.25 4 2
+    PYTHONPATH=src python examples/serve_stream.py --lanes=2 \
+        --workload=burst 9 4
 
 ``--batched`` serves all streams through the credit-ordered micro-batch
 executor (one jitted denoise step per sub-batch) instead of one stream
@@ -25,6 +27,10 @@ everyone-at-t=0 arrivals with ONLINE arrivals from the named
 ``sched_sim.workloads`` generator (the same StreamSpec objects the
 cluster simulator consumes); ``--arrival-scale`` compresses the
 generator's event times so demos don't wait out real Poisson gaps.
+``--lanes=N`` serves through N device lanes (one batched executor +
+paged KV pool each) under the full control plane: re-homing decisions
+become real cross-lane KV moves and elastic SP becomes a real Ulysses
+SP2 head split on the donor lane (applied counts printed at the end).
 The run ends with the same CPR/TTFC ``Summary`` line the simulator
 prints — one metrics surface for sim and real.
 """
@@ -44,6 +50,7 @@ def main():
     backend = "paged"
     workload = None
     arrival_scale = 1.0
+    lanes = 1
     args = []
     argv = sys.argv[1:]
     i = 0
@@ -51,6 +58,13 @@ def main():
         a = argv[i]
         if a == "--batched":
             pass
+        elif a.startswith("--lanes="):
+            lanes = int(a.split("=", 1)[1])
+        elif a == "--lanes":
+            i += 1
+            if i >= len(argv):
+                sys.exit("--lanes requires a value (e.g. --lanes 2)")
+            lanes = int(argv[i])
         elif a.startswith("--pool="):
             pool = int(a.split("=", 1)[1])
         elif a == "--pool":
@@ -79,7 +93,7 @@ def main():
         else:
             args.append(a)
         i += 1
-    batched = "--batched" in argv
+    batched = "--batched" in argv or lanes > 1   # lanes imply batched
     if pool is not None and not batched:
         sys.exit("--pool only applies to the batched executor; "
                  "add --batched")
@@ -102,7 +116,7 @@ def main():
                           chunks)
     session = StreamingSession(SessionConfig(
         executor="batched" if batched else "sequential",
-        pool_streams=pool or (n_streams + 1),
+        lanes=lanes, pool_streams=pool or (n_streams + 1),
         context_backend=backend, arrival_scale=arrival_scale))
     handles = [session.submit(spec) for spec in specs]
     res = session.run()
@@ -111,8 +125,13 @@ def main():
     for h in handles:
         print(f"  stream {h.sid}: {h.fidelity_log}")
     wl = workload or "all-at-t0"
-    print(f"{'batched' if batched else 'sequential'} on {wl}: "
-          f"{summarize(res).row()}")
+    label = (f"{lanes}-lane" if lanes > 1 else
+             "batched" if batched else "sequential")
+    print(f"{label} on {wl}: {summarize(res).row()}")
+    if lanes > 1:
+        print(f"applied: migrations={res.n_migrations_applied} "
+              f"sp_expands={res.n_sp_expands_applied} "
+              f"sp_releases={res.n_sp_releases_applied}")
 
 
 if __name__ == "__main__":

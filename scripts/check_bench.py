@@ -5,12 +5,15 @@ and fail on a >15% streams/s regression in any tracked scenario.
 
     python scripts/check_bench.py NEW.json PREV.json [--threshold 0.15]
 
-Tracked scenarios: ``sequential``, ``batched/<backend>`` and
-``oversubscribed/<backend>`` ``streams_per_s`` entries.  Scenarios
-missing from the previous artifact (first run, new backend) are
-reported and skipped — the check only compares like with like, so the
-nightly job can bootstrap from an empty history.  Exit code 0 = no
-regression (or nothing to compare), 1 = regression beyond threshold.
+Tracked scenarios: ``sequential``, ``batched/<backend>``,
+``oversubscribed/<backend>`` and ``lanes/<n>`` ``streams_per_s``
+entries; any other fields a scenario row carries (migration/SP counts,
+QoE, transfer reports, ...) are ignored, so the compare tolerates new
+JSON fields without breaking.  Scenarios missing from the previous
+artifact (first run, new backend or lane count) are reported and
+skipped — the check only compares like with like, so the nightly job
+can bootstrap from an empty history.  Exit code 0 = no regression (or
+nothing to compare), 1 = regression beyond threshold.
 """
 from __future__ import annotations
 
@@ -26,10 +29,10 @@ def _rates(bench: dict) -> dict:
     seq = bench.get("sequential", {})
     if "streams_per_s" in seq:
         out["sequential"] = seq["streams_per_s"]
-    for section in ("batched", "oversubscribed"):
-        for backend, row in bench.get(section, {}).items():
-            if "streams_per_s" in row:
-                out[f"{section}/{backend}"] = row["streams_per_s"]
+    for section in ("batched", "oversubscribed", "lanes"):
+        for key, row in bench.get(section, {}).items():
+            if isinstance(row, dict) and "streams_per_s" in row:
+                out[f"{section}/{key}"] = row["streams_per_s"]
     return out
 
 

@@ -55,7 +55,13 @@ class ControlPlane:
 
     # ---- admission (SS3.3 steps 1-2) --------------------------------------
     def choose_home(self, view: ClusterView) -> int:
-        return min(view.workers, key=lambda w: w.load()).wid
+        """Least-loaded worker, excluding SP donors: a worker serving
+        someone else's SP2 half has no headroom its own queue shows
+        (``Worker.load`` also counts the donation, but an admitted
+        stream would still contend with the borrowed one, so donors are
+        skipped outright while any non-donating worker exists)."""
+        free = [w for w in view.workers if w.donated_to is None]
+        return min(free or view.workers, key=lambda w: w.load()).wid
 
     def initial_slack(self, first_chunk_estimate: float) -> float:
         return self.config.ttfc_factor * first_chunk_estimate

@@ -41,9 +41,19 @@ def plan_elastic_sp(view: ClusterView, now: float,
                 if s.sp_donor is not None}
 
     # ---- releases first (free donors at safe boundaries) ------------------
+    # t_next == 0.0 is the "no latency estimate yet" default (e.g.
+    # use_fidelity=False, or before the first selection); comparing
+    # credit against RELEASE_FACTOR * 0 would release every donor on
+    # the very tick it was borrowed, so the check requires a real
+    # estimate.  A donor released here rejoins the donor set below —
+    # it is free again this tick, not stranded until the next one.
+    released: set = set()
     for s in view.active_streams():
-        if s.sp_donor is not None and s.credit >= RELEASE_FACTOR * s.t_next:
+        if (s.sp_donor is not None and s.t_next > 0.0
+                and s.credit >= RELEASE_FACTOR * s.t_next):
             decisions.append(SPDecision(s.sid, s.sp_donor, "release"))
+            borrowed.discard(s.sp_donor)
+            released.add(s.sp_donor)
 
     # ---- expansions: C_u < 0 streams, one donor each -----------------------
     for s in sorted(view.active_streams(), key=lambda s: s.credit):
@@ -53,7 +63,8 @@ def plan_elastic_sp(view: ClusterView, now: float,
         node = view.node_of(s.home)
         donors = [w for w in view.workers
                   if view.node_of(w.wid) == node and w.wid != s.home
-                  and w.donated_to is None and w.wid not in borrowed
+                  and (w.donated_to is None or w.wid in released)
+                  and w.wid not in borrowed
                   and queues.worker_class(counts[w.wid]) == "relaxed"]
         if not donors:
             continue          # no same-node RELAXED donor: SP not triggered

@@ -39,8 +39,13 @@ def plan_rehoming(view: ClusterView, now: float,
                    if view.streams[sid].tier == Tier.URGENT
                    and view.streams[sid].running_on is None)
     senders = [w for w in view.workers if queued_urgent(w) >= 1]
+    # a worker serving someone else's SP2 half is NOT slack headroom:
+    # its donated compute is invisible to its own tier counts (the
+    # borrowed stream is homed elsewhere), so without this filter a
+    # migration could land on a lane that is already busy donating
     receivers = [w for w in view.workers
-                 if queues.worker_class(counts[w.wid]) == "relaxed"]
+                 if w.donated_to is None
+                 and queues.worker_class(counts[w.wid]) == "relaxed"]
     # most-pressured senders first
     senders.sort(key=lambda w: -counts[w.wid][Tier.URGENT])
 
@@ -49,11 +54,17 @@ def plan_rehoming(view: ClusterView, now: float,
     plan: List[Migration] = []
 
     for src in senders:
-        # movable: queued URGENT streams not in cooldown and not running
+        # movable: queued URGENT streams not in cooldown, not running,
+        # and not mid-SP2 — a stream borrowing a donor is already being
+        # helped (SS4's escalation order), and its head-partition state
+        # spans two workers, so re-homing it is not a clean page move.
+        # (Planning it anyway would also burn its cooldown on a
+        # migration the apply layer refuses.)
         movable = [view.streams[sid] for sid in src.queue
                    if view.streams[sid].tier == Tier.URGENT
                    and view.streams[sid].cooldown_until <= now
-                   and view.streams[sid].running_on is None]
+                   and view.streams[sid].running_on is None
+                   and view.streams[sid].sp_donor is None]
         movable.sort(key=lambda s: s.credit)          # lowest credit first
         for s in movable:
             if sent[src.wid] >= cap_send:

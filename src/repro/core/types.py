@@ -78,7 +78,11 @@ class Worker:
     recv_this_tick: int = 0
 
     def load(self) -> int:
-        return len(self.queue) + (1 if self.running is not None else 0)
+        """Queued + running + donated: a worker lending itself as an
+        SP2 half (SS4.3) is occupied even though the borrowed stream
+        never appears in its own queue."""
+        return (len(self.queue) + (1 if self.running is not None else 0)
+                + (1 if self.donated_to is not None else 0))
 
 
 @dataclasses.dataclass

@@ -12,6 +12,11 @@ Two modes, ONE workload spec and ONE metrics surface:
                --workload/--rate/--seed StreamSpec generators, and the
                run prints the same one-line ``Summary.row()`` — so a
                workload can be compared sim-vs-real apples-to-apples.
+               ``--lanes N`` serves through N device lanes (one batched
+               executor + paged KV pool each) and re-enables re-homing
+               and elastic SP: tick decisions become REAL cross-lane KV
+               moves and Ulysses SP2 head splits; the run additionally
+               reports decisions applied by the lane pool.
 
     PYTHONPATH=src python -m repro.launch.serve --sim \
         --workload steady --policy slackserve --streams 300
@@ -20,6 +25,8 @@ Two modes, ONE workload spec and ONE metrics surface:
         --workload burst --streams 6 --seed 0
     PYTHONPATH=src python -m repro.launch.serve --real --batched \
         --streams 4 --pool-streams 2        # oversubscribed page pool
+    PYTHONPATH=src python -m repro.launch.serve --real --lanes 2 \
+        --workload burst                    # multi-lane: migrations + SP
 """
 from __future__ import annotations
 
@@ -34,7 +41,22 @@ def main() -> None:
     mode.add_argument("--real", action="store_true")
     ap.add_argument("--workload", default="steady")
     ap.add_argument("--policy", default="slackserve")
-    ap.add_argument("--streams", type=int, default=300)
+    ap.add_argument("--streams", type=int, default=None,
+                    help="stream count (default: 300 for --sim, 6 for "
+                         "--real — the live tiny model is the demo)")
+    ap.add_argument("--lanes", type=int, default=1,
+                    help="device lanes for --real (> 1 implies the "
+                         "batched executor and re-enables re-homing + "
+                         "elastic SP)")
+    ap.add_argument("--workers-per-node", type=int, default=0,
+                    help="lanes per node for --real --lanes "
+                         "(0 -> all lanes in one node)")
+    ap.add_argument("--budget-factor", type=float, default=0.0,
+                    help="playout seconds per chunk as a multiple of "
+                         "the measured top-fidelity latency (0 -> 4.0 "
+                         "single-lane, 2.0 multi-lane: the tighter "
+                         "budget keeps tail streams urgent so the "
+                         "cross-lane mechanisms engage)")
     ap.add_argument("--rate", type=float, default=1.0)
     ap.add_argument("--model", default="causal-forcing")
     ap.add_argument("--chunks", type=int, default=4,
@@ -43,7 +65,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--batched", action="store_true",
                     help="credit-ordered micro-batch executor (--real)")
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="micro-batch cap per lane (0 -> 4, or 3 "
+                         "multi-lane: a smaller batch keeps real "
+                         "WAITING streams in loaded queues — the "
+                         "congestion signal Algorithm 1 reads)")
     ap.add_argument("--arrival-scale", type=float, default=1.0,
                     help="multiply workload event times for --real "
                          "(< 1 compresses Poisson gaps / trace idles)")
@@ -58,11 +84,15 @@ def main() -> None:
                          "contiguous context (reference path)")
     args = ap.parse_args()
 
+    if args.lanes > 1:
+        args.batched = True          # lanes ride the batched executor
     if args.pool_streams and not (args.real and args.batched):
         ap.error("--pool-streams only applies to --real --batched")
     if any(a.startswith("--context-backend") for a in sys.argv[1:]) \
             and not (args.real and args.batched):
         ap.error("--context-backend only applies to --real --batched")
+    if args.lanes > 1 and not args.real:
+        ap.error("--lanes only applies to --real")
 
     from repro.sched_sim.metrics import summarize, transfer_stats
     from repro.sched_sim.workloads import WORKLOADS
@@ -71,14 +101,36 @@ def main() -> None:
         from repro.serve.session import (SessionConfig, StreamingSession,
                                          cap_specs)
 
-        specs = cap_specs(
-            WORKLOADS[args.workload](n=args.streams, rate=args.rate,
-                                     seed=args.seed), args.chunks)
+        # multi-lane demo defaults: enough streams that each lane's
+        # queue exceeds the micro-batch (genuinely WAITING streams are
+        # what Algorithm 1 calls congestion), odd so the lanes drain
+        # unevenly and a relaxed receiver appears
+        n_streams = (args.streams if args.streams is not None
+                     else 15 if args.lanes > 1 else 6)
+        # multi-lane default budget: tight enough that a lane still
+        # holding work keeps URGENT streams even at solo speed (~2x the
+        # measured top latency vs the single-lane demo's 4x), so when
+        # the other lane drains first the sender/receiver pair of
+        # Algorithm 1 actually materializes
+        budget_factor = (args.budget_factor
+                         or (2.0 if args.lanes > 1 else 4.0))
+        raw = WORKLOADS[args.workload](n=n_streams, rate=args.rate,
+                                       seed=args.seed)
+        # multi-lane keeps the workload's length DIVERSITY (scaled into
+        # the chunk budget) — lanes then drain unevenly, which is what
+        # re-homing and elastic SP exist to absorb
+        from repro.serve.session import scale_specs
+        specs = (scale_specs(raw, args.chunks) if args.lanes > 1
+                 else cap_specs(raw, args.chunks))
         session = StreamingSession(SessionConfig(
             executor="batched" if args.batched else "sequential",
-            max_batch=args.max_batch,
-            # 0 -> everyone fits, like the legacy wrapper default
-            pool_streams=args.pool_streams or args.streams + 1,
+            max_batch=args.max_batch
+            or (3 if args.lanes > 1 else 4),
+            lanes=args.lanes,
+            workers_per_node=args.workers_per_node,
+            budget_factor=budget_factor,
+            # 0 -> everyone fits (per lane), like the legacy default
+            pool_streams=args.pool_streams or n_streams + 1,
             context_backend=args.context_backend,
             arrival_scale=args.arrival_scale,
             verbose=True))   # --seed varies the workload, not the model
@@ -86,17 +138,23 @@ def main() -> None:
             session.submit(spec)
         res = session.run()
         s = summarize(res)
-        label = "real-batched" if args.batched else "real-sequential"
+        label = (f"real-{args.lanes}-lane" if args.lanes > 1 else
+                 "real-batched" if args.batched else "real-sequential")
         print(f"{label} on {args.workload}: {s.row()}")
         print(f"  rehomings={s.n_rehomings} elastic_sp={s.n_sp_events} "
               f"transfers={transfer_stats(res)}")
+        if args.lanes > 1:
+            print(f"  applied: migrations={res.n_migrations_applied} "
+                  f"sp_expands={res.n_sp_expands_applied} "
+                  f"sp_releases={res.n_sp_releases_applied}")
         return
 
     from repro.sched_sim.policies import SDV2Policy, make_policy
     from repro.sched_sim.simulator import SimConfig, Simulator
 
-    specs = WORKLOADS[args.workload](n=args.streams, rate=args.rate,
-                                     seed=args.seed)
+    specs = WORKLOADS[args.workload](
+        n=args.streams if args.streams is not None else 300,
+        rate=args.rate, seed=args.seed)
     policy = make_policy(args.policy, model=args.model)
     sim_cfg = (SDV2Policy.sim_config() if args.policy == "sdv2"
                else SimConfig(model=args.model))

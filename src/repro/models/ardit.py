@@ -31,7 +31,8 @@ from repro.configs.base import ModelConfig
 from repro.distributed.logical import shard
 from repro.models import kvcache
 from repro.models import layers as L
-from repro.models.attention import mha, paged_mha, sparse_keep_list
+from repro.models.attention import (merge_head_shards, mha, paged_mha,
+                                    shard_heads, sparse_keep_list)
 
 Params = Dict[str, Any]
 
@@ -318,6 +319,77 @@ def denoise_step(cfg: ModelConfig, p: Params, x: jax.Array, t: jax.Array,
     return x_new, new_kv
 
 
+def _chunk_forward_pages(cfg: ModelConfig, p: Params, x_chunk: jax.Array,
+                         t: jax.Array, pools,
+                         page_mask: Optional[jax.Array], *, q_offset,
+                         ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Shared DiT body of the page-table-native forwards.
+
+    ``pools`` is a tuple of ``(k_pages, v_pages, block_table, head_lo,
+    head_hi)`` KV-head shards covering ``[0, n_kv_heads)``: one shard
+    is the plain paged forward (no head slicing at all — identical to
+    the pre-SP code path); two shards is elastic SP2, each shard's
+    attention reading its own pool/table (Ulysses head partition —
+    per-head attention never mixes heads, so the sharded result is
+    bit-identical to the single-shard one whenever the shards mirror
+    the same KV).
+    """
+    b, tc, _ = x_chunk.shape
+    d = cfg.d_model
+    hkv = cfg.n_kv_heads
+    single = len(pools) == 1
+    h = shard(x_chunk.astype(p["in_proj"].dtype) @ p["in_proj"],
+              "batch", None, "embed")
+    temb = _time_embed(p, t, d)                                   # [B,D]
+    q_off = jnp.asarray(q_offset)
+    if q_off.ndim:                                  # per-stream offsets
+        positions = q_off[:, None] + jnp.arange(tc)[None, :]      # [B,Tc]
+    else:
+        positions = q_off + jnp.arange(tc)                        # [Tc]
+    ones = jnp.ones((d,), h.dtype)
+
+    def body(hh, xs):
+        lp = xs["layer"]
+        mod = jax.nn.silu(temb) @ lp["mod"] + lp["mod_b"]         # [B,6D]
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+        a_in = _modulate(L.rmsnorm(hh, ones, cfg.norm_eps), sh1, sc1)
+        q, k, v = L.attn_qkv(cfg, lp["attn"], a_in, positions)
+        outs = []
+        for i, (_, _, tbl, lo, hi) in enumerate(pools):
+            kp, vp = xs[f"kp{i}"], xs[f"vp{i}"]
+            if single:
+                o_s = paged_mha(q, kp, vp, tbl, page_mask, k, v,
+                                n_kv_heads=hkv, sink=COND_TOKENS,
+                                chunk_tokens=tc)
+            else:
+                o_s = paged_mha(shard_heads(q, hkv, lo, hi),
+                                kp[..., lo:hi, :], vp[..., lo:hi, :],
+                                tbl, page_mask,
+                                shard_heads(k, hkv, lo, hi),
+                                shard_heads(v, hkv, lo, hi),
+                                n_kv_heads=hi - lo, sink=COND_TOKENS,
+                                chunk_tokens=tc)
+            outs.append(o_s)
+        o = outs[0] if single else merge_head_shards(
+            outs, [hi - lo for (_, _, _, lo, hi) in pools])
+        o = o.reshape(b, tc, cfg.n_heads * cfg.head_dim)
+        hh = hh + g1[:, None, :] * shard(o @ lp["attn"]["wo"],
+                                         "batch", None, "embed")
+        f_in = _modulate(L.rmsnorm(hh, ones, cfg.norm_eps), sh2, sc2)
+        hh = hh + g2[:, None, :] * L.mlp_block(cfg, lp["mlp"], f_in)
+        return hh, {"k": k, "v": v}
+
+    xs = {"layer": p["layers"]}
+    for i, (kp, vp, _, _, _) in enumerate(pools):
+        xs[f"kp{i}"], xs[f"vp{i}"] = kp, vp
+    h, new_kv = jax.lax.scan(body, h, xs)
+
+    mod = jax.nn.silu(temb) @ p["final_mod"]
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    h = _modulate(L.rmsnorm(h, p["final_norm"], cfg.norm_eps), sh, sc)
+    return h @ p["out_proj"], new_kv
+
+
 def chunk_forward_paged(cfg: ModelConfig, p: Params, x_chunk: jax.Array,
                         t: jax.Array, k_pages: jax.Array,
                         v_pages: jax.Array, block_table: jax.Array,
@@ -339,41 +411,10 @@ def chunk_forward_paged(cfg: ModelConfig, p: Params, x_chunk: jax.Array,
     same (prediction, {"k","v"}) as ``chunk_forward``; numerics agree
     with the gathered path up to fp32 online-softmax merge order.
     """
-    b, tc, _ = x_chunk.shape
-    d = cfg.d_model
-    h = shard(x_chunk.astype(p["in_proj"].dtype) @ p["in_proj"],
-              "batch", None, "embed")
-    temb = _time_embed(p, t, d)                                   # [B,D]
-    q_off = jnp.asarray(q_offset)
-    if q_off.ndim:                                  # per-stream offsets
-        positions = q_off[:, None] + jnp.arange(tc)[None, :]      # [B,Tc]
-    else:
-        positions = q_off + jnp.arange(tc)                        # [Tc]
-    ones = jnp.ones((d,), h.dtype)
-
-    def body(hh, xs):
-        lp = xs["layer"]
-        mod = jax.nn.silu(temb) @ lp["mod"] + lp["mod_b"]         # [B,6D]
-        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
-        a_in = _modulate(L.rmsnorm(hh, ones, cfg.norm_eps), sh1, sc1)
-        q, k, v = L.attn_qkv(cfg, lp["attn"], a_in, positions)
-        o = paged_mha(q, xs["kp"], xs["vp"], block_table, page_mask,
-                      k, v, n_kv_heads=cfg.n_kv_heads,
-                      sink=COND_TOKENS, chunk_tokens=tc)
-        o = o.reshape(b, tc, cfg.n_heads * cfg.head_dim)
-        hh = hh + g1[:, None, :] * shard(o @ lp["attn"]["wo"],
-                                         "batch", None, "embed")
-        f_in = _modulate(L.rmsnorm(hh, ones, cfg.norm_eps), sh2, sc2)
-        hh = hh + g2[:, None, :] * L.mlp_block(cfg, lp["mlp"], f_in)
-        return hh, {"k": k, "v": v}
-
-    h, new_kv = jax.lax.scan(
-        body, h, {"layer": p["layers"], "kp": k_pages, "vp": v_pages})
-
-    mod = jax.nn.silu(temb) @ p["final_mod"]
-    sh, sc = jnp.split(mod, 2, axis=-1)
-    h = _modulate(L.rmsnorm(h, p["final_norm"], cfg.norm_eps), sh, sc)
-    return h @ p["out_proj"], new_kv
+    return _chunk_forward_pages(
+        cfg, p, x_chunk, t,
+        ((k_pages, v_pages, block_table, 0, cfg.n_kv_heads),),
+        page_mask, q_offset=q_offset)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -397,6 +438,61 @@ def denoise_step_paged(cfg: ModelConfig, p: Params, x: jax.Array,
     v_pred, new_kv = chunk_forward_paged(cfg, p, x, t, k_pages, v_pages,
                                          block_table, mask,
                                          q_offset=q_offset)
+    x_new = x - dt[:, None, None] * v_pred.astype(x.dtype)
+    return x_new, new_kv
+
+
+def chunk_forward_paged_sp(cfg: ModelConfig, p: Params, x_chunk: jax.Array,
+                           t: jax.Array, k_home: jax.Array,
+                           v_home: jax.Array, k_donor: jax.Array,
+                           v_donor: jax.Array, table_home: jax.Array,
+                           table_donor: jax.Array,
+                           page_mask: Optional[jax.Array], *, q_offset,
+                           ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """SP2 sibling of ``chunk_forward_paged``: the stream's KV heads are
+    Ulysses-partitioned across two lanes (paper SS4.3 / App. C.4).
+
+    The home lane's pool ``k_home``/``v_home`` is the system of record
+    (full heads); the donor lane's pool ``k_donor``/``v_donor`` carries
+    the stream's UPPER half heads in its own page set (``table_donor``).
+    Each shard runs paged attention over its own half — the home shard
+    reads heads [0, H/2) from the home pool, the donor shard reads
+    heads [H/2, H) from the donor pool — and the outputs concatenate
+    back into full-head order.  Per-head attention never mixes heads,
+    so the result is bit-identical to the SP1 ``chunk_forward_paged``
+    whenever the donor's half mirrors the home pool's upper half.  On a
+    multi-device mesh the two shards map onto the two lanes' devices;
+    on CPU they model the donor's borrowed compute slot.
+    """
+    hkv = cfg.n_kv_heads
+    h2 = hkv // 2
+    assert hkv % 2 == 0, f"SP2 head split needs even n_kv_heads ({hkv})"
+    return _chunk_forward_pages(
+        cfg, p, x_chunk, t,
+        ((k_home, v_home, table_home, 0, h2),
+         (k_donor, v_donor, table_donor, h2, hkv)),
+        page_mask, q_offset=q_offset)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def denoise_step_paged_sp(cfg: ModelConfig, p: Params, x: jax.Array,
+                          t: jax.Array, dt: jax.Array, k_home: jax.Array,
+                          v_home: jax.Array, k_donor: jax.Array,
+                          v_donor: jax.Array, table_home: jax.Array,
+                          table_donor: jax.Array,
+                          dn_mask: Optional[jax.Array],
+                          cl_mask: Optional[jax.Array],
+                          q_offset: jax.Array, is_denoise: jax.Array):
+    """Elastic-SP2 sibling of ``denoise_step_paged``: one stream's
+    denoise step with its KV heads split across the home and donor
+    lanes' pools.  Mask semantics match ``denoise_step_paged``.  The
+    serving executor pre-jits this per SP group (`LanePool.prejit_sp`)
+    so triggering elastic SP never compiles on the critical path."""
+    mask = dn_mask if cl_mask is None else \
+        jnp.where(is_denoise[:, None], dn_mask, cl_mask)
+    v_pred, new_kv = chunk_forward_paged_sp(
+        cfg, p, x, t, k_home, v_home, k_donor, v_donor, table_home,
+        table_donor, mask, q_offset=q_offset)
     x_new = x - dt[:, None, None] * v_pred.astype(x.dtype)
     return x_new, new_kv
 

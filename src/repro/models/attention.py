@@ -215,6 +215,36 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out
 
 
+def shard_heads(x: jax.Array, n_kv_heads: int, lo: int,
+                hi: int) -> jax.Array:
+    """Slice a [B,S,H,D] tensor to the heads grouped under KV heads
+    [lo, hi) — the Ulysses-style head partition of elastic SP (SS4.3).
+
+    For a query tensor H = n_heads = G * n_kv_heads and the slice keeps
+    the G query heads of every KV head in [lo, hi); for a KV tensor
+    H = n_kv_heads and the slice is direct.  Head order is preserved, so
+    concatenating the shards' attention outputs with
+    ``merge_head_shards`` is bit-identical to the unsharded call —
+    per-head attention never mixes heads.
+    """
+    b, s, h, d = x.shape
+    g = h // n_kv_heads
+    return x.reshape(b, s, n_kv_heads, g, d)[:, :, lo:hi] \
+        .reshape(b, s, (hi - lo) * g, d)
+
+
+def merge_head_shards(outs: Sequence[jax.Array],
+                      n_kv_heads_per_shard: Sequence[int]) -> jax.Array:
+    """Concatenate per-shard attention outputs back into full-head
+    order (inverse of ``shard_heads`` over a covering partition)."""
+    b, s = outs[0].shape[:2]
+    d = outs[0].shape[-1]
+    parts = [o.reshape(b, s, h, -1, d)
+             for o, h in zip(outs, n_kv_heads_per_shard)]
+    merged = jnp.concatenate(parts, axis=2)
+    return merged.reshape(b, s, -1, d)
+
+
 def paged_mha(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
               block_table: jax.Array, page_mask: jax.Array,
               chunk_k: jax.Array, chunk_v: jax.Array, *,

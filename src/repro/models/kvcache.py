@@ -151,6 +151,24 @@ def pool_write_pages(pool: jax.Array, new: jax.Array,
     return pool
 
 
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnums=(3,))
+def pool_write_pages_heads(pool: jax.Array, new: jax.Array,
+                           pages: jax.Array, head_offset: int) -> jax.Array:
+    """pool [L,n_pages,P,Hkv,D]; new [L,b,T,h_sub,D] (T <= P,
+    h_sub <= Hkv - head_offset); pages [b].
+
+    Head-sliced sibling of ``pool_write_pages``: writes each block at
+    token 0 of its destination page, KV-head offset ``head_offset`` —
+    the elastic-SP donor pool holds only its half of a stream's KV
+    heads (Ulysses head partition, paper App. C.4), so appends touch
+    only that half."""
+    for i in range(new.shape[1]):
+        pool = jax.lax.dynamic_update_slice(
+            pool, new[:, i:i + 1].astype(pool.dtype),
+            (0, pages[i], 0, head_offset, 0))
+    return pool
+
+
 def place_prefill(k: jax.Array, cap: int, sink: int,
                   window: int) -> jax.Array:
     """[B,S,H,D] -> [B,cap,H,D]: full copy if it fits, else sink+ring gather.

@@ -165,7 +165,8 @@ class KVPool:
     the pool holds) never loses context.
     """
 
-    def __init__(self, cfg: ModelConfig, params: Any, max_streams: int):
+    def __init__(self, cfg: ModelConfig, params: Any, max_streams: int,
+                 engine: Optional[AsyncTransferEngine] = None):
         self.cfg, self.params = cfg, params
         self._tc = A.chunk_tokens(cfg)
         self._w = cfg.ardit_window_chunks
@@ -185,8 +186,10 @@ class KVPool:
         # spill/restore traffic goes through the state plane's async
         # transfer engine so residency churn is charged the paper's
         # async-stream protocol latency (ROADMAP "transfer-engine
-        # timing"); the log doubles as the benchmark's transfer report
-        self.engine = AsyncTransferEngine(n_layers=cfg.n_layers)
+        # timing"); the log doubles as the benchmark's transfer report.
+        # A multi-lane session injects ONE shared engine so migrations
+        # and SP head-partition moves land on one metrics surface.
+        self.engine = engine or AsyncTransferEngine(n_layers=cfg.n_layers)
         self.transfer_bytes = 0
 
     # ---- ledger views ------------------------------------------------------
@@ -304,17 +307,54 @@ class KVPool:
                               + self._spill[sid]["v"].nbytes)
         return self.pages_per_stream
 
-    def restore(self, sid: int) -> bool:
+    def restore(self, sid: int, *, charge: bool = True) -> bool:
         """Bring a spilled stream back resident (bit-exact: its pages
-        are written back verbatim).  False when the pool is full."""
+        are written back verbatim).  False when the pool is full.
+        ``charge=False`` skips the transfer-engine accounting — used
+        when the caller already charged the movement (a cross-lane
+        migration models ONE src->dst transfer, not a host round
+        trip)."""
         if not self.can_admit():
             return False
         sp = self._spill.pop(sid)
         table = self.ledger.take(sid, chunks=self.ledger.chunks[sid])
         self._dev_tables.pop(sid, None)
         self._write(table, jnp.asarray(sp["k"]), jnp.asarray(sp["v"]))
-        self._charge_transfer(sp["k"].nbytes + sp["v"].nbytes)
+        if charge:
+            self._charge_transfer(sp["k"].nbytes + sp["v"].nbytes)
         return True
+
+    def export_spill(self, sid: int) -> Tuple[Dict[str, Any], int]:
+        """Detach one stream's KV as host pages + chunk count (the
+        migration export half): a resident stream's pages are
+        materialized to host and freed, a spilled stream hands over its
+        existing spill buffer verbatim.  No transfer is charged — the
+        caller owns the movement (``import_spill`` on the destination
+        pool is where the cross-lane transfer is modeled)."""
+        n_chunks = self.ledger.chunks.get(sid, 0)
+        if self.ledger.resident(sid):
+            rows = jnp.asarray(self.ledger.tables[sid], jnp.int32)
+            pages = {"k": np.asarray(self.k[:, rows]),
+                     "v": np.asarray(self.v[:, rows])}
+            self.ledger.drop(sid, spill=False)
+        else:
+            pages = self._spill.pop(sid)
+            self.ledger.spilled.discard(sid)
+            self.ledger.chunks.pop(sid, None)
+        self._dev_tables.pop(sid, None)
+        return pages, n_chunks
+
+    def import_spill(self, sid: int, pages: Dict[str, Any],
+                     n_chunks: int) -> None:
+        """Adopt an exported stream host-side (spilled, re-admittable):
+        the inverse of ``export_spill`` on the destination pool.  The
+        stream becomes resident through the normal ``restore`` path, so
+        the round trip is bit-exact."""
+        assert not self.ledger.resident(sid) and sid not in self._spill, \
+            f"stream {sid} already present in destination pool"
+        self._spill[sid] = pages
+        self.ledger.spilled.add(sid)
+        self.ledger.chunks[sid] = n_chunks
 
     def release(self, sid: int) -> None:
         """Retire a stream entirely (resident or spilled).  Idempotent."""
@@ -334,6 +374,17 @@ class KVPool:
         self._write(pages, new_kv["k"], new_kv["v"])
         for sid in sids:
             self.ledger.chunks[sid] += 1
+
+
+@dataclasses.dataclass
+class SPLink:
+    """One stream's active elastic-SP2 borrow (SS4.3): the donor lane id
+    and the donor lane's KV pool, which carries the stream's upper half
+    KV heads in its own page set (Ulysses head partition, App. C.4).
+    The home pool stays the full-head system of record, so releasing a
+    link frees the donor pages and nothing moves back."""
+    donor: int
+    pool: KVPool
 
 
 @dataclasses.dataclass
@@ -374,14 +425,30 @@ class BatchedChunkExecutor(ChunkExecutor):
     def __init__(self, cfg: Optional[ModelConfig] = None,
                  params: Optional[Any] = None, seed: int = 0,
                  max_streams: int = 16,
-                 context_backend: str = "paged"):
+                 context_backend: str = "paged",
+                 engine: Optional[AsyncTransferEngine] = None):
         super().__init__(cfg=cfg, params=params, seed=seed)
         assert context_backend in ("gather", "paged"), context_backend
         self.context_backend = context_backend
-        self.pool = KVPool(self.cfg, self.params, max_streams)
+        self.pool = KVPool(self.cfg, self.params, max_streams,
+                           engine=engine)
         self.inflight: Dict[int, InflightChunk] = {}
         self.chunks: Dict[int, List[jax.Array]] = {}
         self.fidelity_log: Dict[int, List[str]] = {}
+        # noise-sequence counter per stream: tracks generated chunks
+        # but RESETS on a prompt switch (generation restarts under the
+        # new condition, so the post-switch chunk equals a fresh
+        # stream's first chunk bit-exactly), while ``chunks`` keeps the
+        # full playout history
+        self.chunk_seq: Dict[int, int] = {}
+        # active elastic-SP2 borrows: sid -> (donor lane, donor pool).
+        # Set/cleared by the LanePool apply layer; run_step takes the
+        # head-split path for a solo stream with a link.
+        self.sp_links: Dict[int, SPLink] = {}
+        # sids whose pages in THIS pool are another lane's live SP
+        # half-head mirror (the stream is inflight on its HOME lane, so
+        # the inflight filter alone would not protect it here)
+        self.sp_mirrors: set = set()
         self.step_ema: Dict[str, float] = {}      # per-step wall seconds
         self.evictions = 0
         self.restores = 0
@@ -415,6 +482,7 @@ class BatchedChunkExecutor(ChunkExecutor):
             key, (1, A.COND_TOKENS, self.cfg.d_model)) * 0.02
         self.chunks[sid] = []
         self.fidelity_log[sid] = []
+        self.chunk_seq[sid] = 0
         # boundary keys are (sids, fills, fid) and would collide with a
         # previous stream of the same id at the same fill — drop them
         self._boundary_cache.clear()
@@ -443,12 +511,16 @@ class BatchedChunkExecutor(ChunkExecutor):
     def _evict_one(self, streams: Optional[Dict[int, Stream]],
                    protect: set) -> bool:
         """Free one stream's pages: credit-aware victim selection over
-        the evictable residents (in-flight streams are protected — their
-        chunk is mid-denoise and rejoins the batch at the next step)."""
+        the evictable residents.  In-flight streams are protected (their
+        chunk is mid-denoise and rejoins the batch at the next step);
+        so are live SP half-head mirrors (``sp_mirrors``) — the owning
+        stream is inflight on its HOME lane, invisible to this lane's
+        inflight set, and evicting its mirror would break the linked
+        SP2 step mid-borrow."""
         if streams is None:
             return False
         victims = [s for s in self.pool.resident_sids()
-                   if s not in self.inflight]
+                   if s not in self.inflight and s not in self.sp_mirrors]
         victim = queues.pick_eviction(victims, streams, protect=protect)
         if victim is None:
             return False
@@ -491,16 +563,80 @@ class BatchedChunkExecutor(ChunkExecutor):
         self.inflight.pop(sid, None)
 
     def retire(self, sid: int) -> None:
+        assert sid not in self.sp_links, \
+            f"stream {sid} retired with a live SP link (release first)"
         self.pool.release(sid)
         self.inflight.pop(sid, None)
         self._pending_wait.pop(sid, None)
+        self.chunk_seq.pop(sid, None)
+        self._boundary_cache.clear()
+
+    def reset_condition(self, sid: int, seed: int) -> bool:
+        """Prompt switch (SS3.3): re-encode a FRESH conditioning and
+        rewrite the stream's sink page through the normal
+        ``KVPool.admit`` path (release + re-admit), discarding the old
+        prompt's ring KV (its chunks conditioned on the old prompt) and
+        resetting the noise sequence — the post-switch chunk is
+        bit-identical to a fresh stream's first chunk under the same
+        conditioning seed.  Generated chunks/logs keep the playout
+        history.  Returns False when the pool is full and the stream
+        parked host-side (it rejoins via ``ensure_resident``)."""
+        self.inflight.pop(sid, None)
+        key = jax.random.PRNGKey(1000 + seed)
+        cond = jax.random.normal(
+            key, (1, A.COND_TOKENS, self.cfg.d_model)) * 0.02
+        mark = len(self.pool.engine.log)
+        self.pool.release(sid)
+        ok = self.pool.admit(sid, cond)
+        if not ok:
+            self.deferrals += 1
+        self._charge_transfer_wait(sid, mark)
+        self.chunk_seq[sid] = 0
+        self._boundary_cache.clear()
+        return ok
+
+    def export_stream(self, sid: int) -> Dict[str, Any]:
+        """Detach a stream for cross-lane migration (KV pages, counters,
+        generated chunks).  Only legal at a chunk boundary with no live
+        SP link — exactly the streams ``rehoming.plan_rehoming`` deems
+        movable.  No transfer is charged here; ``import_stream`` on the
+        destination models the src->dst move."""
+        assert sid not in self.inflight, f"stream {sid} is mid-chunk"
+        assert sid not in self.sp_links, f"stream {sid} has a live SP link"
+        pages, n_chunks = self.pool.export_spill(sid)
+        self._boundary_cache.clear()
+        return {"pages": pages, "chunk_count": n_chunks,
+                "chunks": self.chunks.pop(sid),
+                "fidelity_log": self.fidelity_log.pop(sid),
+                "chunk_seq": self.chunk_seq.pop(sid, 0),
+                "pending_wait": self._pending_wait.pop(sid, 0.0)}
+
+    def import_stream(self, sid: int, state: Dict[str, Any], *,
+                      cross_node: bool = False) -> None:
+        """Adopt an exported stream (the re-homing apply half): its KV
+        arrives host-side, ONE src->dst transfer is charged on the
+        shared engine (cross-node bandwidth when the lanes' nodes
+        differ), and the dispatcher wait rides on the stream's next
+        completed chunk.  The stream becomes page-resident through the
+        normal restore path, bit-exactly."""
+        self.chunks[sid] = state["chunks"]
+        self.fidelity_log[sid] = state["fidelity_log"]
+        self.chunk_seq[sid] = state["chunk_seq"]
+        self.pool.import_spill(sid, state["pages"], state["chunk_count"])
+        n_bytes = state["pages"]["k"].nbytes + state["pages"]["v"].nbytes
+        self.pool.transfer_bytes += n_bytes
+        t = self.pool.engine.transfer(time.perf_counter(), n_bytes,
+                                      cross_node=cross_node)
+        w = state["pending_wait"] + t.residual_wait
+        self._pending_wait[sid] = self._pending_wait.get(sid, 0.0) + w
+        self.transfer_wait_s += t.residual_wait
         self._boundary_cache.clear()
 
     def begin_chunk(self, sid: int, fidelity: FidelityConfig,
                     now: float) -> None:
         """Start a chunk at a step boundary (noise seeding matches the
         sequential path so the two executors are comparable)."""
-        key = jax.random.PRNGKey(len(self.chunks[sid]) * 7919 + sid)
+        key = jax.random.PRNGKey(self.chunk_seq[sid] * 7919 + sid)
         tc = A.chunk_tokens(self.cfg)
         noise = jax.random.normal(key, (1, tc, A.LATENT_CH))
         self.inflight[sid] = InflightChunk(x=noise, fidelity=fidelity,
@@ -513,14 +649,18 @@ class BatchedChunkExecutor(ChunkExecutor):
 
     # ---- the batched step --------------------------------------------------
     def _boundary(self, sids: Sequence[int], chunk_idx: np.ndarray,
-                  fid: FidelityConfig) -> Dict[str, Any]:
+                  fid: FidelityConfig,
+                  sp: Optional[SPLink] = None) -> Dict[str, Any]:
         """Per-chunk-boundary state of a sub-batch (constant across the
         chunk's steps): positions, denoise/clean visibility, and the
         backend's context handle — a gathered [L, b, extent, ...] copy
         for ``gather``, or the block tables + page-coordinate masks the
         paged step reads the pool through (both sliced to the group's
-        resident extent, so compute scales with fill either way)."""
-        key = (tuple(sids), tuple(chunk_idx.tolist()), fid.key)
+        resident extent, so compute scales with fill either way).  An
+        active SP2 link adds the donor pool's block table — the
+        head-split step reads its upper half heads through it."""
+        key = (tuple(sids), tuple(chunk_idx.tolist()), fid.key,
+               sp.donor if sp is not None else None)
         bnd = self._boundary_cache.get(key)
         if bnd is not None:
             return bnd
@@ -549,6 +689,8 @@ class BatchedChunkExecutor(ChunkExecutor):
             # — cl=None then means "reuse dn"
             tables = self.pool.tables_for(sids)[:, :1 + n_ring]
             bnd["tables"] = tables
+            if sp is not None:
+                bnd["tables_d"] = sp.pool.tables_for(sids)[:, :1 + n_ring]
             if dn.all():
                 bnd["dn"] = None
                 bnd["cl"] = None
@@ -600,8 +742,16 @@ class BatchedChunkExecutor(ChunkExecutor):
             self._staging_cache[key] = st
         return st
 
-    def run_step(self, sids: Sequence[int]) -> Tuple[List[int], float]:
+    def run_step(self, sids: Sequence[int],
+                 sp_serve: bool = False) -> Tuple[List[int], float]:
         """Advance a same-fidelity sub-batch by one step.
+
+        ``sp_serve=True`` marks a dispatch that RESERVED the linked
+        stream's donor step slot (the scheduler's solo SP2 dispatch):
+        only then does a solo linked stream take the head-split path.
+        An unreserved dispatch — even a singleton fidelity group — runs
+        the SP1 step, so donor compute is never consumed twice (or zero
+        times) in one round.
 
         Streams in their denoise phase take an Euler step; streams in
         their clean phase produce context KV, append it to the pool, and
@@ -623,15 +773,30 @@ class BatchedChunkExecutor(ChunkExecutor):
             "sub-batch contains a non-resident (spilled) stream"
         chunk_idx = np.asarray([self.pool.chunks[sid] for sid in sids],
                                np.int64)
+        # elastic SP2 takes the head-split step for a SOLO linked stream
+        # whose dispatch reserved the donor slot; a linked stream folded
+        # into a normal batch falls back to the SP1 step — the home pool
+        # holds full heads, so SP is an acceleration path, never a
+        # correctness dependency
+        sp = (self.sp_links.get(sids[0])
+              if sp_serve and len(sids) == 1
+              and self.context_backend == "paged"
+              else None)
 
         t0 = time.perf_counter()
-        bnd = self._boundary(sids, chunk_idx, fid)
+        bnd = self._boundary(sids, chunk_idx, fid, sp=sp)
         x = (flights[0].x if len(flights) == 1
              else jnp.concatenate([f.x for f in flights], axis=0))
         denoising = tuple(f.phase == "denoise" for f in flights)
         t, dt_sig, is_dn = self._staging(
             fid, tuple(f.step for f in flights), denoising)
-        if self.context_backend == "paged":
+        if sp is not None:
+            x_new, new_kv = A.denoise_step_paged_sp(
+                self.cfg, self.params, x, t, dt_sig, self.pool.k,
+                self.pool.v, sp.pool.k, sp.pool.v, bnd["tables"],
+                bnd["tables_d"], bnd["dn"], bnd["cl"],
+                bnd["q_offset"], is_dn)
+        elif self.context_backend == "paged":
             # context stays IN the pool: the step reads the current
             # device buffers through the cached block tables (appends
             # only ever touch pages outside every in-flight window, so
@@ -660,12 +825,24 @@ class BatchedChunkExecutor(ChunkExecutor):
             self.pool.append([sids[i] for i in clean_rows],
                              {"k": new_kv["k"][:, rows],
                               "v": new_kv["v"][:, rows]}, fid.quant)
+            for i in clean_rows:
+                link = self.sp_links.get(sids[i])
+                if link is not None:
+                    # the donor's half-head mirror must track the home
+                    # pool: ring-write this chunk's upper half into the
+                    # donor page set so the next SP2 boundary sees
+                    # consistent halves
+                    self._append_sp_half(link, sids[i],
+                                         {"k": new_kv["k"][:, i:i + 1],
+                                          "v": new_kv["v"][:, i:i + 1]},
+                                         fid.quant)
             now_wall = None
             for i in clean_rows:
                 sid = sids[i]
                 f = self.inflight.pop(sid)
                 self.chunks[sid].append(f.x)
                 self.fidelity_log[sid].append(fid.key)
+                self.chunk_seq[sid] = self.chunk_seq.get(sid, 0) + 1
                 if now_wall is None:        # one sync per completion step
                     f.x.block_until_ready()
                     now_wall = time.perf_counter()
@@ -690,6 +867,23 @@ class BatchedChunkExecutor(ChunkExecutor):
             if f is not None:               # still mid-chunk
                 f.active_s += dt
         return completed, dt
+
+    def _append_sp_half(self, link: SPLink, sid: int,
+                        new_kv: Dict[str, jax.Array], quant: str) -> None:
+        """Ring-write one chunk's UPPER half KV heads into the donor
+        pool's page set for ``sid`` (kept in lockstep with the home
+        pool's full-head append)."""
+        h2 = self.cfg.n_kv_heads // 2
+        nk, nv = new_kv["k"][..., h2:, :], new_kv["v"][..., h2:, :]
+        if quant == "fp8":
+            nk = nk.astype(jnp.float8_e4m3fn)
+            nv = nv.astype(jnp.float8_e4m3fn)
+        page = jnp.asarray([link.pool.ledger.append_page(sid)], jnp.int32)
+        link.pool.k = kvcache.pool_write_pages_heads(
+            link.pool.k, nk, page, h2)
+        link.pool.v = kvcache.pool_write_pages_heads(
+            link.pool.v, nv, page, h2)
+        link.pool.ledger.chunks[sid] += 1
 
     def remaining_estimate(self, sid: int) -> float:
         """R_u from the measured step EMA (not the offline profile)."""

@@ -150,6 +150,20 @@ class SequentialChunkExecutor(ChunkExecutor):
         """Drop the pending chunk (prompt switch before generation)."""
         self.inflight.pop(sid, None)
 
+    def reset_condition(self, sid: int, seed: int) -> bool:
+        """Prompt switch: re-encode a fresh conditioning and rebuild the
+        stream's cache around it (the eager path's sink rewrite) — the
+        old prompt's context KV is discarded with it.  Unlike the
+        batched executor, the noise sequence continues (the eager cache
+        has no separate generation counter)."""
+        self.inflight.pop(sid, None)
+        st = self.streams[sid]
+        key = jax.random.PRNGKey(1000 + seed)
+        st.cond = jax.random.normal(
+            key, (1, A.COND_TOKENS, self.cfg.d_model)) * 0.02
+        st.cache = A.init_cache(self.cfg, self.params, st.cond)
+        return True
+
     def retire(self, sid: int) -> None:
         self.inflight.pop(sid, None)
 

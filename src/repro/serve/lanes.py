@@ -1,0 +1,302 @@
+"""Multi-lane serving: N device lanes under one control plane.
+
+A *lane* is one execution slot over a device — one
+``BatchedChunkExecutor`` with its own paged ``KVPool`` — standing in
+for one Worker of the paper's cluster (SS3.1).  On CPU the lanes are
+distinct executor instances over the host device (``jax.device_put``
+sharding applies when real devices exist), which makes the whole
+decision -> apply -> metrics loop testable in CI.
+
+``LanePool`` is the **apply layer** for the cross-worker decisions
+``core.control_plane.ControlPlane.tick`` already emits (and which the
+discrete-event simulator already applies on its virtual clock):
+
+* ``rehoming.Migration`` -> :meth:`migrate`: a real cross-lane KV move.
+  The source lane's pages are detached host-side
+  (``KVPool.export_spill``, bit-exact), ONE src->dst transfer is
+  charged on the shared ``state_plane.AsyncTransferEngine``
+  (cross-node bandwidth when the lanes' nodes differ), and the stream
+  lands in the destination pool through the normal restore path — at a
+  chunk boundary, exactly the streams ``plan_rehoming`` deems movable.
+* ``elastic_sp.SPDecision`` -> :meth:`sp_expand` / :meth:`sp_release`:
+  a real SP2 step.  Expand copies the stream's UPPER half KV heads
+  into a page set of the donor lane's pool (the App. C.4
+  head-partition transfer: half the stream's bytes through the state
+  plane) and links the stream; the executor then serves it with the
+  Ulysses head-split ``ardit.denoise_step_paged_sp`` — home lane
+  computes heads [0, H/2) from its pool, donor lane heads [H/2, H)
+  from its copy — dispatched solo so the donor's step slot is
+  genuinely occupied.  The home pool stays the full-head system of
+  record, so release just frees the donor pages at the next safe
+  boundary.
+
+All lanes share ONE model replica (same params), one transfer engine
+(one metrics surface), and — because the jitted step functions are
+module-level — one compile cache: warming a shape on any lane warms it
+for every lane.  :meth:`prejit_sp` warms the SP2 executables up front
+so triggering elastic SP never compiles on the critical path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state_plane import AsyncTransferEngine
+from repro.core.types import Stream
+from repro.models import ardit as A
+from repro.models import kvcache
+from repro.serve.batcher import BatchedChunkExecutor, KVPool, SPLink
+
+
+class LanePool:
+    """One ``BatchedChunkExecutor`` per lane + the decision apply layer.
+
+    ``lane_of`` maps every admitted stream to its current home lane;
+    migrations move it.  Counters (``n_migrations``, ``n_sp_expands``,
+    ``n_sp_releases``) record decisions actually *applied* — the
+    control plane separately counts decisions *planned*.
+    """
+
+    def __init__(self, n_lanes: int, cfg: Any = None, params: Any = None,
+                 seed: int = 0, max_streams: int = 16,
+                 context_backend: str = "paged",
+                 engine: Optional[AsyncTransferEngine] = None):
+        assert n_lanes >= 1
+        first = BatchedChunkExecutor(cfg=cfg, params=params, seed=seed,
+                                     max_streams=max_streams,
+                                     context_backend=context_backend,
+                                     engine=engine)
+        self.engine = first.pool.engine
+        self.executors: List[Any] = [first]
+        for _ in range(n_lanes - 1):
+            self.executors.append(BatchedChunkExecutor(
+                cfg=first.cfg, params=first.params,
+                max_streams=max_streams, context_backend=context_backend,
+                engine=self.engine))
+        self.lane_of: Dict[int, int] = {}
+        self.n_migrations = 0
+        self.n_sp_expands = 0
+        self.n_sp_releases = 0
+
+    @classmethod
+    def wrap(cls, executor: Any) -> "LanePool":
+        """Single-lane pool around an existing executor (the session's
+        back-compat ``executor=`` injection; also adapts the sequential
+        whole-chunk executor, which has no page pool)."""
+        self = cls.__new__(cls)
+        self.executors = [executor]
+        pool = getattr(executor, "pool", None)
+        self.engine = (pool.engine if pool is not None
+                       else getattr(executor, "engine",
+                                    AsyncTransferEngine()))
+        self.lane_of = {}
+        self.n_migrations = 0
+        self.n_sp_expands = 0
+        self.n_sp_releases = 0
+        return self
+
+    # ---- views -------------------------------------------------------------
+    @property
+    def n_lanes(self) -> int:
+        return len(self.executors)
+
+    def ex(self, lane: int) -> Any:
+        return self.executors[lane]
+
+    def executor_of(self, sid: int) -> Any:
+        return self.executors[self.lane_of.get(sid, 0)]
+
+    def chunks_of(self, sid: int) -> List[Any]:
+        return self.executor_of(sid).chunks.get(sid, [])
+
+    def is_inflight(self, sid: int) -> bool:
+        return sid in self.executor_of(sid).inflight
+
+    def any_inflight(self) -> bool:
+        return any(ex.inflight for ex in self.executors)
+
+    def sp_link(self, sid: int) -> Optional[SPLink]:
+        return getattr(self.executor_of(sid), "sp_links", {}).get(sid)
+
+    def remaining_estimate(self, sid: int) -> float:
+        return self.executor_of(sid).remaining_estimate(sid)
+
+    def latency_ema_get(self, key: str, default: float) -> float:
+        """Measured chunk-latency EMA for a fidelity, averaged over the
+        lanes that have observed it (all lanes share one host/device
+        class, so their EMAs estimate the same quantity)."""
+        vals = [ex.latency_ema[key] for ex in self.executors
+                if key in ex.latency_ema]
+        return sum(vals) / len(vals) if vals else default
+
+    # ---- stream lifecycle (routed to the home lane) ------------------------
+    def admit(self, sid: int, lane: int, seed: int = 0,
+              streams: Optional[Dict[int, Stream]] = None,
+              protect: Sequence[int] = ()) -> bool:
+        self.lane_of[sid] = lane
+        return self.executors[lane].admit(sid, seed=seed, streams=streams,
+                                          protect=protect)
+
+    def ensure_resident(self, sid: int,
+                        streams: Optional[Dict[int, Stream]] = None,
+                        protect: Sequence[int] = ()) -> bool:
+        return self.executor_of(sid).ensure_resident(sid, streams,
+                                                     protect=protect)
+
+    def abort_chunk(self, sid: int) -> None:
+        self.executor_of(sid).abort_chunk(sid)
+
+    def reset_condition(self, sid: int, seed: int) -> bool:
+        """Prompt switch: fresh cond encode + sink rewrite on the home
+        lane.  Any live SP link must be released by the caller FIRST
+        (the donor's half mirrors the old prompt's KV)."""
+        ex = self.executor_of(sid)
+        assert sid not in getattr(ex, "sp_links", {}), \
+            f"stream {sid}: release the SP link before a prompt switch"
+        return ex.reset_condition(sid, seed)
+
+    def retire(self, sid: int) -> None:
+        if self.sp_link(sid) is not None:
+            self.sp_release(sid)
+        self.executor_of(sid).retire(sid)
+
+    # ---- decision apply: re-homing -----------------------------------------
+    def migrate(self, sid: int, src: int, dst: int, *,
+                cross_node: bool = False) -> bool:
+        """Apply one ``rehoming.Migration`` as a real KV move.  Returns
+        False (decision dropped) when the stream is mid-chunk or
+        SP-linked — states the planner excludes, re-checked here
+        because the executor, not the planner, owns ground truth."""
+        if self.lane_of.get(sid) != src or src == dst:
+            return False
+        src_ex, dst_ex = self.executors[src], self.executors[dst]
+        if sid in src_ex.inflight or sid in src_ex.sp_links:
+            return False
+        state = src_ex.export_stream(sid)
+        dst_ex.import_stream(sid, state, cross_node=cross_node)
+        self.lane_of[sid] = dst
+        # land it in the destination pool right away when there is room
+        # — the import already charged the src->dst move, so this
+        # restore is free; under pressure the stream stays parked and
+        # rejoins via ensure_resident (a genuine second movement,
+        # charged then)
+        if dst_ex.pool.can_admit():
+            dst_ex.pool.restore(sid, charge=False)
+            dst_ex._boundary_cache.clear()
+        self.n_migrations += 1
+        return True
+
+    # ---- decision apply: elastic SP ----------------------------------------
+    def sp_expand(self, sid: int, donor: int,
+                  streams: Optional[Dict[int, Stream]] = None) -> bool:
+        """Apply one SP expand: allocate a donor-pool page set, copy the
+        stream's upper half KV heads into it (App. C.4 head-partition
+        transfer, half the stream's bytes), and link the stream so
+        ``run_step`` takes the head-split path.  False when the apply
+        is impossible right now (non-paged backend, stream not
+        resident, donor pool unevictable) — the decision is dropped
+        and the planner may re-issue it next tick."""
+        home = self.lane_of.get(sid)
+        if home is None or donor == home:
+            return False
+        ex = self.executors[home]
+        if getattr(ex, "context_backend", None) != "paged":
+            return False          # head split rides the paged step only
+        if sid in ex.sp_links:
+            return True
+        if not ex.pool.resident(sid) and \
+                not ex.ensure_resident(sid, streams, protect=[sid]):
+            return False
+        donor_ex = self.executors[donor]
+        dpool: KVPool = donor_ex.pool
+        while not dpool.can_admit():
+            # the executor's own credit-aware eviction (protects the
+            # donor's in-flight streams AND any live SP mirrors)
+            if not donor_ex._evict_one(streams, protect={sid}):
+                return False
+        dpool.ledger.take(sid, chunks=ex.pool.ledger.chunks[sid])
+        dpool._dev_tables.pop(sid, None)
+        n_bytes = self._copy_sp_half(ex.pool, dpool, sid)
+        t = self.engine.transfer(time.perf_counter(), n_bytes,
+                                 cross_node=False)
+        ex._pending_wait[sid] = ex._pending_wait.get(sid, 0.0) \
+            + t.residual_wait
+        ex.transfer_wait_s += t.residual_wait
+        ex.pool.transfer_bytes += n_bytes
+        ex.sp_links[sid] = SPLink(donor=donor, pool=dpool)
+        donor_ex.sp_mirrors.add(sid)   # shield the mirror from eviction
+        ex._boundary_cache.clear()
+        self.n_sp_expands += 1
+        return True
+
+    def _copy_sp_half(self, home: KVPool, dpool: KVPool,
+                      sid: int) -> int:
+        """Mirror the stream's upper half KV heads (all of its pages)
+        into the donor pool's page set.  Verbatim copy — the SP2 step's
+        donor shard then reads bit-identical values, which is what
+        makes SP2 == SP1 numerically."""
+        h2 = home.cfg.n_kv_heads // 2
+        rows = jnp.asarray(home.ledger.tables[sid], jnp.int32)
+        drows = jnp.asarray(dpool.ledger.tables[sid], jnp.int32)
+        kh = home.k[:, rows][..., h2:, :]       # [L, pps, P, H/2, Dh]
+        vh = home.v[:, rows][..., h2:, :]
+        dpool.k = kvcache.pool_write_pages_heads(dpool.k, kh, drows, h2)
+        dpool.v = kvcache.pool_write_pages_heads(dpool.v, vh, drows, h2)
+        return kh.nbytes + vh.nbytes
+
+    def sp_release(self, sid: int) -> None:
+        """Apply one SP release at a safe boundary: drop the link and
+        free the donor pages.  The home pool kept full heads, so
+        nothing moves back.  Idempotent."""
+        ex = self.executor_of(sid)
+        link = getattr(ex, "sp_links", {}).pop(sid, None)
+        if link is None:
+            return
+        link.pool.ledger.drop(sid, spill=False)
+        link.pool._dev_tables.pop(sid, None)
+        self.executors[link.donor].sp_mirrors.discard(sid)
+        ex._boundary_cache.clear()
+        self.n_sp_releases += 1
+
+    # ---- compile-cache warm-up ---------------------------------------------
+    def prejit_sp(self, extents: Sequence[int] = (0, 1, 2)) -> None:
+        """Warm the SP2 head-split executables for the given ring
+        extents — unmasked, dn-masked, and dn+cl-masked variants (a
+        C<0 stream is exactly the one BMPR pushes toward sparsified
+        fidelities, whose clean mask differs from the denoise mask) —
+        so an expansion mid-burst never compiles on the critical path.
+        All SP groups share these executables — the jitted steps are
+        module-level, so one warm-up covers every (home, donor) lane
+        pair.  Extents beyond the list (deep rings under long streams)
+        compile on first use."""
+        if self.n_lanes < 2:
+            return
+        ex0, ex1 = self.executors[0], self.executors[1]
+        if getattr(ex0, "context_backend", None) != "paged":
+            return
+        cfg = ex0.cfg
+        tc = A.chunk_tokens(cfg)
+        pt = ex0.pool.page_tokens
+        x = jnp.zeros((1, tc, A.LATENT_CH))
+        t = jnp.zeros((1,), jnp.float32)
+        qo = jnp.asarray([A.COND_TOKENS], jnp.int32)
+        is_dn = jnp.asarray([True])
+        for n_ring in extents:
+            if n_ring > cfg.ardit_window_chunks:
+                continue
+            tables = jnp.zeros((1, 1 + n_ring), jnp.int32)
+            full = np.zeros((1, (1 + n_ring) * pt), bool)
+            full[:, :A.COND_TOKENS] = True
+            for r in range(n_ring):
+                lo = (1 + r) * pt
+                full[:, lo:lo + tc] = True
+            m = jnp.asarray(full)
+            for dn, cl in ((None, None), (m, None), (m, m)):
+                A.denoise_step_paged_sp(
+                    cfg, ex0.params, x, t, t, ex0.pool.k, ex0.pool.v,
+                    ex1.pool.k, ex1.pool.v, tables, tables, dn, cl,
+                    qo, is_dn)

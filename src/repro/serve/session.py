@@ -26,6 +26,19 @@ fidelity-budget scale) and emitting no ``sched_sim.metrics.Summary``.
       produces the same CPR / TTFC / stall Summary over a real session
       that it produces over a simulation.
 
+Multi-lane sessions (``SessionConfig.lanes > 1``): the session owns a
+``serve.lanes.LanePool`` — one ``BatchedChunkExecutor`` (own paged KV
+pool) per device lane, lanes grouped into nodes via
+``workers_per_node`` — and the cluster view grows one Worker per lane,
+which re-enables the cross-worker mechanisms the single-lane session
+had to switch off: ``rehoming.Migration`` decisions become real
+cross-lane KV moves (bit-exact spill through the state plane, restored
+into the destination lane's pool at a chunk boundary) and
+``elastic_sp.SPDecision`` becomes a real Ulysses head-split SP2 step
+on the donor lane's pool (pre-jitted, released at the next safe
+boundary).  On CPU the lanes are distinct executor instances over the
+host device, so the full decision -> apply -> metrics loop runs in CI.
+
 Budget units (the fix for the old hand-tuned budget fudge): the offline
 profile's latencies are H100-calibrated while the session's clock is
 this host's wall clock, so the session measures one top-fidelity warm-up
@@ -45,9 +58,11 @@ import itertools
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core import queues, slack
+from repro.core import elastic_sp, queues, rehoming, slack
 from repro.core.bmpr import BMPR, BMPRDecision
-from repro.core.control_plane import ControlConfig, ControlPlane
+from repro.core.control_plane import (ControlConfig, ControlPlane,
+                                      TickDecisions)
+from repro.core.elastic_sp import SPDecision
 from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
 from repro.core.state_plane import AsyncTransferEngine
 from repro.core.types import ClusterView, Stream, Worker
@@ -55,6 +70,7 @@ from repro.profiler.profiles import get_profile
 from repro.sched_sim import cost_model as cm
 from repro.sched_sim.workloads import StreamSpec
 from repro.serve.executor import ServedStream
+from repro.serve.lanes import LanePool
 
 
 @dataclasses.dataclass
@@ -63,21 +79,31 @@ class SessionConfig:
 
     ``executor`` picks the apply layer: ``"batched"`` (credit-ordered
     micro-batches over the paged KV pool) or ``"sequential"``
-    (whole-chunk-atomic, one stream at a time).  ``tick_interval`` is
-    the control-tick cadence in session seconds; 0 runs Algorithm 2 at
-    every scheduler iteration (the natural cadence when chunk latencies
-    are far below the paper's 3 s tick).  ``arrival_scale`` multiplies
-    every StreamSpec time (arrival, switch offsets, pause windows) —
-    < 1 compresses a workload trace so demos and tests don't wait out
-    real Poisson gaps.  ``realtime_budget`` fixes the playout seconds
-    per chunk; None calibrates 4x the measured top-fidelity latency so
-    any host speed exercises both BMPR modes.
+    (whole-chunk-atomic, one stream at a time).  ``lanes`` is the
+    number of device lanes (one batched executor + KV pool each; > 1
+    re-enables re-homing and elastic SP in the control plane);
+    ``workers_per_node`` groups lanes into nodes for the intra-node
+    preferences of Algorithm 1 and SS4.3 (0 = all lanes in one node).
+    ``pool_streams`` caps co-resident streams PER LANE.
+    ``tick_interval`` is the control-tick cadence in session seconds; 0
+    runs Algorithm 2 at every scheduler iteration (the natural cadence
+    when chunk latencies are far below the paper's 3 s tick).
+    ``arrival_scale`` multiplies every StreamSpec time (arrival, switch
+    offsets, pause windows) — < 1 compresses a workload trace so demos
+    and tests don't wait out real Poisson gaps.  ``realtime_budget``
+    fixes the playout seconds per chunk; None calibrates 4x the
+    measured top-fidelity latency so any host speed exercises both BMPR
+    modes.
     """
     executor: str = "batched"
     max_batch: int = 4
+    lanes: int = 1
+    workers_per_node: int = 0
     pool_streams: Optional[int] = None
     context_backend: str = "paged"
+    model_cfg: Optional[Any] = None    # None -> the reduced default model
     realtime_budget: Optional[float] = None
+    budget_factor: float = 4.0     # chunk_seconds = factor x top latency
     tick_interval: float = 0.0
     arrival_scale: float = 1.0
     seed: int = 0
@@ -88,7 +114,9 @@ class SessionConfig:
 class SessionResult:
     """Same surface as ``sched_sim.simulator.SimResult`` — one metrics
     language for simulated and real runs (``metrics.summarize`` accepts
-    either)."""
+    either).  The ``*_applied`` counters record decisions the apply
+    layer actually executed (``n_rehomings``/``n_sp_events`` count
+    decisions the control plane *planned*, like the simulator's)."""
     streams: Dict[int, Stream]
     engine: AsyncTransferEngine
     n_rehomings: int
@@ -96,6 +124,9 @@ class SessionResult:
     worker_tier_samples: List[Tuple[int, int, int]]
     fidelity_counts: Dict[str, int]
     control_tick_times: List[float]
+    n_migrations_applied: int = 0
+    n_sp_expands_applied: int = 0
+    n_sp_releases_applied: int = 0
 
 
 class StreamHandle:
@@ -121,12 +152,12 @@ class StreamHandle:
 
     @property
     def chunks_ready(self) -> int:
-        return len(self._session.executor.chunks.get(self.sid, ()))
+        return len(self._session.lanes.chunks_of(self.sid))
 
     @property
     def chunks(self) -> List[Any]:
         """Generated latent chunks, in playout order."""
-        return list(self._session.executor.chunks.get(self.sid, ()))
+        return list(self._session.lanes.chunks_of(self.sid))
 
     @property
     def done(self) -> bool:
@@ -150,21 +181,21 @@ class _HostCalibratedPolicy:
 
     ``select(B)`` hands the wrapped policy ``B * time_scale`` (profile
     units) and converts the decision's latency estimate back to wall
-    seconds — replaced by the executor's measured EMA for that fidelity
-    as soon as one exists (online re-profiling).  Deliberately does NOT
-    expose ``.profile``: ``ControlPlane.tick`` then takes T_u from the
-    decision we return (wall units) instead of re-reading the offline
-    profile.
+    seconds — replaced by the measured EMA for that fidelity (averaged
+    across lanes: same host, same device class) as soon as one exists
+    (online re-profiling).  Deliberately does NOT expose ``.profile``:
+    ``ControlPlane.tick`` then takes T_u from the decision we return
+    (wall units) instead of re-reading the offline profile.
     """
 
-    def __init__(self, inner, executor, time_scale: float):
+    def __init__(self, inner, lanes: LanePool, time_scale: float):
         self.inner = inner
-        self.executor = executor
+        self.lanes = lanes
         self.time_scale = time_scale
 
     def select(self, budget: float) -> BMPRDecision:
         dec = self.inner.select(budget * self.time_scale)
-        lat = self.executor.latency_ema.get(
+        lat = self.lanes.latency_ema_get(
             dec.fidelity.key, dec.latency / self.time_scale)
         return BMPRDecision(dec.fidelity, lat, dec.quality, dec.mode)
 
@@ -186,47 +217,71 @@ def cap_specs(specs: List[StreamSpec],
         for s in specs]
 
 
+def scale_specs(specs: List[StreamSpec],
+                max_chunks: int) -> List[StreamSpec]:
+    """Proportionally shrink spec lengths so the LONGEST stream runs
+    ``max_chunks`` chunks and the workload's relative length diversity
+    survives (a uniform ``cap_specs`` cap erases the short-vs-long
+    imbalance that makes lanes drain unevenly — exactly what the
+    cross-worker mechanisms feed on); arrivals and event times are
+    kept."""
+    longest = max(s.chunks for s in specs)
+    return [dataclasses.replace(
+        s, frames=max(1, round(s.chunks * max_chunks / longest))
+        * cm.PIXEL_FRAMES_PER_CHUNK) for s in specs]
+
+
 class StreamingSession:
-    """One serving session over a real executor, driven by the paper's
-    control plane.
+    """One serving session over a real executor pool, driven by the
+    paper's control plane.
 
     Usage::
 
-        session = StreamingSession(SessionConfig(executor="batched"))
+        session = StreamingSession(SessionConfig(lanes=2))
         handles = [session.submit(spec) for spec in workloads.burst(n=6)]
         result = session.run()                 # SessionResult
         summary = sched_sim.metrics.summarize(result)
 
     ``submit`` only registers the spec; admission happens inside
     ``run()`` when the session clock reaches ``spec.arrival`` (times
-    scaled by ``config.arrival_scale``).  Prompt switches reset playout
-    slack to the initial TTFC and abort the in-flight chunk; pauses
-    extend the playout deadline by their duration — the same event
-    semantics as ``sched_sim.Simulator``.
+    scaled by ``config.arrival_scale``), homed on the least-loaded
+    non-donating lane (``ControlPlane.choose_home``).  Prompt switches
+    reset playout slack to the initial TTFC, abort the in-flight chunk
+    AND re-encode a fresh conditioning (sink-page rewrite through
+    ``KVPool.admit`` — the old cond must not serve the new prompt);
+    pauses extend the playout deadline by their duration — the same
+    event semantics as ``sched_sim.Simulator``.
     """
 
     def __init__(self, config: Optional[SessionConfig] = None, *,
                  executor: Optional[Any] = None,
                  fidelity_policy: Optional[Any] = None):
         self.cfg = config or SessionConfig()
+        n_lanes = max(1, self.cfg.lanes)
         if executor is not None:
-            self.executor = executor
+            assert n_lanes == 1, \
+                "multi-lane sessions build their own executors " \
+                "(SessionConfig.lanes is incompatible with executor=)"
+            self.lanes = LanePool.wrap(executor)
         elif self.cfg.executor == "sequential":
+            assert n_lanes == 1, "the sequential executor is single-lane"
             from repro.serve.executor import SequentialChunkExecutor
-            self.executor = SequentialChunkExecutor(seed=self.cfg.seed)
+            self.lanes = LanePool.wrap(
+                SequentialChunkExecutor(seed=self.cfg.seed))
         else:
-            from repro.serve.batcher import BatchedChunkExecutor
-            self.executor = BatchedChunkExecutor(
-                seed=self.cfg.seed,
+            self.lanes = LanePool(
+                n_lanes, cfg=self.cfg.model_cfg, seed=self.cfg.seed,
                 max_streams=self.cfg.pool_streams or 16,
                 context_backend=self.cfg.context_backend)
+        self.executor = self.lanes.ex(0)      # back-compat accessor
 
         policy = fidelity_policy or BMPR(get_profile())
         self._profile = getattr(policy, "profile", None) or get_profile()
 
         # ---- host calibration (one top-fidelity warm-up chunk) ----------
         # measures this host's top-fidelity chunk latency, warms the jit
-        # cache for batch-size-1 shapes, and fixes the wall<->profile
+        # cache for batch-size-1 shapes (shared by ALL lanes: the step
+        # functions are module-level), and fixes the wall<->profile
         # time scale that replaces the old hand-tuned budget factor
         ex = self.executor
         ex.admit(-1, seed=999)
@@ -236,18 +291,27 @@ class StreamingSession:
         ex.retire(-1)
         self.top_latency = ex.latency_ema[HIGHEST_QUALITY.key]
         self.chunk_seconds = (self.cfg.realtime_budget
-                              or 4.0 * self.top_latency)
+                              or self.cfg.budget_factor * self.top_latency)
         time_scale = (self._profile.latency(HIGHEST_QUALITY)
                       / max(self.top_latency, 1e-9))
+        multi = self.lanes.n_lanes > 1
         self.control = ControlPlane(
             ControlConfig(tick_interval=self.cfg.tick_interval,
-                          use_rehoming=False,     # single local worker
-                          use_elastic_sp=False),
-            fidelity_policy=_HostCalibratedPolicy(policy, ex, time_scale))
+                          # cross-worker mechanisms need >1 lane
+                          use_rehoming=multi,
+                          use_elastic_sp=multi),
+            fidelity_policy=_HostCalibratedPolicy(policy, self.lanes,
+                                                  time_scale))
+        if multi:
+            # SP2 expansion must never compile on the critical path
+            self.lanes.prejit_sp()
 
-        # ---- cluster view: one worker (this host's device) --------------
-        self.worker = Worker(0, node=0)
-        self.view = ClusterView({}, [self.worker], workers_per_node=1)
+        # ---- cluster view: one Worker per lane --------------------------
+        wpn = self.cfg.workers_per_node or self.lanes.n_lanes
+        self.workers = [Worker(i, node=i // wpn)
+                        for i in range(self.lanes.n_lanes)]
+        self.worker = self.workers[0]         # back-compat accessor
+        self.view = ClusterView({}, self.workers, wpn)
         self.handles: Dict[int, StreamHandle] = {}
         self._order: List[int] = []
         self._events: List[Tuple[float, int, str, Any]] = []
@@ -255,6 +319,8 @@ class StreamingSession:
         self._pending_arrivals = 0
         self._t0: Optional[float] = None
         self._next_tick = 0.0
+        self._switches: Dict[int, int] = {}
+        self._pending_sp_release: Dict[int, int] = {}
         self.fidelity_counts: Dict[str, int] = {}
         self.worker_tier_samples: List[Tuple[int, int, int]] = []
 
@@ -291,19 +357,21 @@ class StreamingSession:
         spec = self.handles[sid].spec
         self._pending_arrivals -= 1
         # SS3.3 steps 1-2: initial playout slack from the first-chunk
-        # estimate (measured top-fidelity latency on THIS host)
-        first_est = self.executor.latency_ema.get(HIGHEST_QUALITY.key,
-                                                  self.top_latency)
+        # estimate (measured top-fidelity latency on THIS host), home
+        # from the control plane (least-loaded non-donating lane)
+        first_est = self.lanes.latency_ema_get(HIGHEST_QUALITY.key,
+                                               self.top_latency)
         ttfc_slack = self.control.initial_slack(first_est)
+        home = self.control.choose_home(self.view)
         s = Stream(sid=sid, arrival=t_arr, target_chunks=spec.chunks,
-                   chunk_seconds=self.chunk_seconds, home=0,
+                   chunk_seconds=self.chunk_seconds, home=home,
                    ttfc_slack=ttfc_slack,
                    next_deadline=t_arr + ttfc_slack)
         s.t_next = first_est
         self.view.streams[sid] = s
-        self.worker.queue.append(sid)
-        self.executor.admit(sid, seed=sid, streams=self.view.streams,
-                            protect=list(self.executor.inflight))
+        self.workers[home].queue.append(sid)
+        self.lanes.admit(sid, home, seed=sid, streams=self.view.streams,
+                         protect=list(self.lanes.ex(home).inflight))
 
     def _on_prompt_switch(self, sid: int, now: float) -> None:
         s = self.view.streams.get(sid)
@@ -316,7 +384,28 @@ class StreamingSession:
         s.next_deadline = now + s.ttfc_slack
         s.step_done = 0
         s.remaining = 0.0
-        self.executor.abort_chunk(sid)
+        self.lanes.abort_chunk(sid)
+        if s.sp_donor is not None:
+            # the donor's half-head mirror holds the OLD prompt's KV:
+            # release the borrow before resetting (SP re-triggers if
+            # the stream is still behind under the new prompt)
+            self._pending_sp_release.pop(sid, None)
+            elastic_sp.apply_release(
+                self.view, SPDecision(sid, s.sp_donor, "release"))
+            self.lanes.sp_release(sid)
+        # fresh conditioning: the old cond embedding must NOT serve the
+        # new prompt — re-encode and rewrite the sink page through the
+        # normal KVPool.admit path (generation restarts bit-identically
+        # to a fresh stream under the same conditioning seed)
+        self._switches[sid] = self._switches.get(sid, 0) + 1
+        self.lanes.reset_condition(sid, seed=self.switch_seed(sid))
+
+    def switch_seed(self, sid: int) -> int:
+        """Conditioning seed of a stream's CURRENT prompt: the admission
+        seed (= sid) before any switch, then a deterministic fresh seed
+        per switch (regression tests re-derive it)."""
+        n = self._switches.get(sid, 0)
+        return sid if n == 0 else sid + 100003 * n
 
     def _on_pause(self, payload: Tuple[int, float]) -> None:
         sid, dur = payload
@@ -349,41 +438,118 @@ class StreamingSession:
     def run(self) -> SessionResult:
         """Drive every submitted stream to completion (or starvation
         stand-still) and return the session's metrics record."""
-        ex = self.executor
-        # the whole-chunk-atomic sequential adapter has no KV pool and
-        # serves one stream per call; the batched executor micro-batches
-        max_batch = self.cfg.max_batch if hasattr(ex, "pool") else 1
-        from repro.serve.batcher import compose_batch
-
         while not self._all_done():
             now = self._now()
             self._drain_events(now)
 
             # Algorithm 2 control tick: BMPR fidelity -> Eq. 1 credit ->
-            # three-tier queue ordering.  R_u comes from the executor's
-            # measured step EMAs first so the tick sees honest remaining
-            # times (the simulator's policy.on_tick equivalent).
+            # three-tier queue ordering -> re-homing plan -> elastic-SP
+            # plan.  R_u comes from the executors' measured step EMAs
+            # first so the tick sees honest remaining times (the
+            # simulator's policy.on_tick equivalent).
             for s in self.view.active_streams():
-                s.remaining = ex.remaining_estimate(s.sid)
-                s.running_on = (0,) if s.sid in ex.inflight else None
+                s.remaining = self.lanes.remaining_estimate(s.sid)
+                if self.lanes.is_inflight(s.sid):
+                    lane = self.lanes.lane_of.get(s.sid, 0)
+                    link = self.lanes.sp_link(s.sid)
+                    s.running_on = ((lane, link.donor) if link is not None
+                                    else (lane,))
+                else:
+                    s.running_on = None
             if now >= self._next_tick:
-                self.control.tick(self.view, now)
+                decisions = self.control.tick(self.view, now)
+                self._apply_decisions(decisions)
                 self._sample_tiers()
                 self._next_tick = now + self.cfg.tick_interval
             else:
-                # between ticks the queue keeps tracking credit at step
+                # between ticks the queues keep tracking credit at step
                 # boundaries, exactly like the simulator policy's order()
                 for s in self.view.active_streams():
                     slack.update_stream_credit(s, now,
                                                self.control.config.alpha)
-                queues.order_queue(self.worker, self.view.streams)
-            runnable = queues.next_dispatch_set(self.worker,
-                                                self.view.streams, now)
+                queues.order_all(self.view)
+
+            any_ran, any_runnable = self._dispatch_round(now)
+            if any_ran:
+                continue
+            if any_runnable:
+                # runnable streams, but none could be made page-resident
+                # this round (all victims mid-chunk): defer one beat
+                if not self.lanes.any_inflight():
+                    if self._events:
+                        self._wait_for(self._events[0][0])
+                        continue
+                    break      # no residency, no work: stand-still
+                time.sleep(0.0005)
+                continue
+            if self._events:
+                self._wait_for(self._events[0][0])
+                continue
+            break                                # nothing left to serve
+        return self.result()
+
+    def _dispatch_round(self, now: float) -> Tuple[bool, bool]:
+        """One step round over every lane: each lane advances at most
+        one micro-batch (or one solo SP2 stream, which also consumes
+        its donor lane's slot) by one denoise step.  Returns
+        (any step ran, any lane had runnable streams)."""
+        from repro.serve.batcher import compose_batch
+        streams = self.view.streams
+        runnables = {w.wid: queues.next_dispatch_set(w, streams, now)
+                     for w in self.view.workers}
+
+        # elastic SP2 reservation happens BEFORE any lane serves, so a
+        # donor's step slot is genuinely consumed regardless of lane
+        # iteration order (a donor with a smaller wid would otherwise
+        # have served its own queue already by the time its borrower
+        # dispatched).  Only a linked stream at the HEAD of its lane's
+        # credit order reserves; linked streams deeper in the queue —
+        # or whose donor is already committed — fold into the normal
+        # micro-batch on the SP1 step (the home pool holds full heads,
+        # so SP is an acceleration, never a correctness dependency; the
+        # donor mirror keeps appending either way).
+        sp_homes: Dict[int, int] = {}      # home wid -> linked sid
+        lent: set = set()                  # donor wids, slot lent out
+        for w in self.view.workers:
+            r = runnables[w.wid]
+            if not r or w.wid in lent:
+                continue
+            link = self.lanes.sp_link(r[0])
+            if (link is not None and link.donor != w.wid
+                    and link.donor not in lent
+                    and link.donor not in sp_homes
+                    # reserve only a stream that can actually run NOW:
+                    # a failed residency fill must not idle the donor
+                    # for the round (the stream defers; the lane serves
+                    # its normal batch below)
+                    and self.lanes.ex(w.wid).ensure_resident(
+                        r[0], streams, protect=[r[0]])):
+                sp_homes[w.wid] = r[0]
+                lent.add(link.donor)
+
+        any_ran = False
+        any_runnable = False
+        for w in self.view.workers:
+            runnable = runnables[w.wid]
             if not runnable:
-                if self._events:
-                    self._wait_for(self._events[0][0])
-                    continue
-                break                            # nothing left to serve
+                continue
+            any_runnable = True
+            if w.wid in lent:
+                continue       # step slot lent to another lane's SP2
+            ex = self.lanes.ex(w.wid)
+            max_batch = self.cfg.max_batch if hasattr(ex, "pool") else 1
+
+            sp_sid = sp_homes.get(w.wid)
+            if sp_sid is not None:       # reserved (and already resident)
+                self._begin_if_needed(ex, sp_sid, now)
+                flights = {sp_sid: ex.inflight[sp_sid]}
+                completed, _ = ex.run_step([sp_sid], sp_serve=True)
+                any_ran = True
+                now = self._now()
+                for sid in completed:
+                    self._complete_chunk(sid, flights[sid].fidelity,
+                                         flights[sid].started, now)
+                continue
 
             # page-granular admission control: fill the micro-batch from
             # the credit-ordered runnable set with streams that are — or
@@ -393,51 +559,74 @@ class StreamingSession:
             for sid in runnable:
                 if len(sids) >= max_batch:
                     break
-                if ex.ensure_resident(sid, self.view.streams,
-                                      protect=sids + [sid]):
+                if ex.ensure_resident(sid, streams, protect=sids + [sid]):
                     sids.append(sid)
             if not sids:
-                if not ex.inflight:
-                    if self._events:
-                        self._wait_for(self._events[0][0])
-                        continue
-                    break          # no residency, no work: stand-still
-                time.sleep(0.0005)
                 continue
-
             for sid in sids:
-                if sid not in ex.inflight:
-                    s = self.view.streams[sid]
-                    # Eq. 1 (paper SS3.2): C_u = P_u - (R_u + T_u).  The
-                    # fidelity budget at a chunk boundary is the credit
-                    # with T_u left free, B = max(P_u - R_u, 0); R_u = 0
-                    # here because the stream is between chunks.  The
-                    # wall->profile unit conversion lives in
-                    # _HostCalibratedPolicy — no hand-tuned scale.
-                    budget = max(s.playout_slack(now) - s.remaining, 0.0)
-                    dec = self.control.fidelity_policy.select(budget)
-                    s.next_fidelity = dec.fidelity
-                    s.t_next = dec.latency
-                    s.chunk_started = now
-                    s.step_done = 0
-                    ex.begin_chunk(sid, dec.fidelity, now)
-
+                self._begin_if_needed(ex, sid, now)
             groups = compose_batch(
                 sids, lambda sid: ex.inflight[sid].fidelity, max_batch)
             for grp in groups:
                 flights = {sid: ex.inflight[sid] for sid in grp}
                 completed, _ = ex.run_step(grp)
+                any_ran = True
                 now = self._now()
                 for sid in completed:
                     self._complete_chunk(sid, flights[sid].fidelity,
                                          flights[sid].started, now)
-        return self.result()
+        return any_ran, any_runnable
 
-    def _wait_for(self, t_event: float) -> None:
-        """Idle until the next workload event (capped nap so arrivals
-        stay responsive without busy-spinning the host)."""
-        now = self._now()
-        time.sleep(max(0.0005, min(t_event - now, 0.05)))
+    def _begin_if_needed(self, ex: Any, sid: int, now: float) -> None:
+        if sid in ex.inflight:
+            return
+        s = self.view.streams[sid]
+        # Eq. 1 (paper SS3.2): C_u = P_u - (R_u + T_u).  The fidelity
+        # budget at a chunk boundary is the credit with T_u left free,
+        # B = max(P_u - R_u, 0); R_u = 0 here because the stream is
+        # between chunks.  The wall->profile unit conversion lives in
+        # _HostCalibratedPolicy — no hand-tuned scale.
+        budget = max(s.playout_slack(now) - s.remaining, 0.0)
+        dec = self.control.fidelity_policy.select(budget)
+        s.next_fidelity = dec.fidelity
+        s.t_next = dec.latency
+        s.chunk_started = now
+        s.step_done = 0
+        ex.begin_chunk(sid, dec.fidelity, now)
+
+    # ---- decision apply (the simulator's policy.on_tick equivalent) --------
+    def _apply_decisions(self, decisions: TickDecisions) -> None:
+        """Execute the tick's cross-worker decisions against the lane
+        pool.  An apply can fail (state moved since planning — e.g. a
+        full donor pool with nothing evictable); the decision is then
+        dropped and the planner re-evaluates next tick."""
+        for mig in decisions.migrations:
+            if self.lanes.migrate(mig.sid, mig.src, mig.dst,
+                                  cross_node=mig.cross_node):
+                rehoming.apply_migration(self.view, mig)
+        # a donor whose release had to be DEFERRED (its stream is
+        # mid-chunk) is still physically borrowed until that boundary —
+        # the planner's same-tick rejoin must not re-grant it, or the
+        # deferred apply_release would later clear the NEW borrower's
+        # donated_to mark (releases precede expands in the plan, so one
+        # pass suffices)
+        deferred_donors: set = set()
+        for dec in decisions.sp_decisions:
+            if dec.kind == "expand":
+                if dec.donor in deferred_donors:
+                    continue
+                if self.lanes.sp_expand(dec.sid, dec.donor,
+                                        self.view.streams):
+                    elastic_sp.apply_expand(self.view, dec)
+            elif self.lanes.is_inflight(dec.sid):
+                # released at the next safe boundary (chunk completion):
+                # the in-flight chunk's head-split step still reads the
+                # donor pool
+                self._pending_sp_release[dec.sid] = dec.donor
+                deferred_donors.add(dec.donor)
+            else:
+                elastic_sp.apply_release(self.view, dec)
+                self.lanes.sp_release(dec.sid)
 
     # ---- playout bookkeeping (the single per-stream record) ----------------
     def _complete_chunk(self, sid: int, fid: FidelityConfig,
@@ -461,32 +650,47 @@ class StreamingSession:
         s.fidelity_log.append(fid.key)
         self.fidelity_counts[fid.key] = \
             self.fidelity_counts.get(fid.key, 0) + 1
+        donor = self._pending_sp_release.pop(sid, None)
+        if donor is not None and not s.finished:
+            # the promised safe boundary: drop the borrow now
+            elastic_sp.apply_release(
+                self.view, SPDecision(sid, donor, "release"))
+            self.lanes.sp_release(sid)
         if s.finished:
             # free the pages NOW: a finished stream's KV would otherwise
             # pin residency (generated chunks survive retire)
             s.done = True
-            self.executor.retire(sid)
-            if sid in self.worker.queue:
-                self.worker.queue.remove(sid)
+            if s.sp_donor is not None:
+                elastic_sp.apply_release(
+                    self.view, SPDecision(sid, s.sp_donor, "release"))
+            self.lanes.retire(sid)               # releases any SP link
+            wq = self.workers[s.home].queue
+            if sid in wq:
+                wq.remove(sid)
         if self.cfg.verbose:
             print(f"t={now:6.2f}s stream {sid} chunk "
                   f"{s.chunks_done}/{s.target_chunks} "
                   f"fid={fid.key:22s} lat={now - started:.2f}s "
                   f"{'LATE' if now > ddl else 'on-time'}")
 
+    def _wait_for(self, t_event: float) -> None:
+        """Idle until the next workload event (capped nap so arrivals
+        stay responsive without busy-spinning the host)."""
+        now = self._now()
+        time.sleep(max(0.0005, min(t_event - now, 0.05)))
+
     # ---- results -----------------------------------------------------------
     def result(self) -> SessionResult:
-        engine = (self.executor.pool.engine
-                  if hasattr(self.executor, "pool")
-                  else getattr(self.executor, "engine",
-                               AsyncTransferEngine()))
         return SessionResult(
-            streams=dict(self.view.streams), engine=engine,
+            streams=dict(self.view.streams), engine=self.lanes.engine,
             n_rehomings=self.control.n_rehomings,
             n_sp_events=self.control.n_sp_events,
             worker_tier_samples=list(self.worker_tier_samples),
             fidelity_counts=dict(self.fidelity_counts),
-            control_tick_times=list(self.control.tick_times))
+            control_tick_times=list(self.control.tick_times),
+            n_migrations_applied=self.lanes.n_migrations,
+            n_sp_expands_applied=self.lanes.n_sp_expands,
+            n_sp_releases_applied=self.lanes.n_sp_releases)
 
     def _served_stream(self, sid: int) -> ServedStream:
         """Back-compat view assembled FROM the per-stream record — the
@@ -494,13 +698,14 @@ class StreamingSession:
         second bookkeeping path."""
         r = self.view.streams.get(sid)
         spec = self.handles[sid].spec
-        base = getattr(self.executor, "streams", {}).get(sid)
+        ex = self.lanes.executor_of(sid)
+        base = getattr(ex, "streams", {}).get(sid)
         return ServedStream(
             sid=sid,
             cond=getattr(base, "cond", None),
             cache=getattr(base, "cache", None),
             target_chunks=r.target_chunks if r else spec.chunks,
-            chunks=list(self.executor.chunks.get(sid, ())),
+            chunks=list(self.lanes.chunks_of(sid)),
             fidelity_log=list(r.fidelity_log) if r else [],
             next_deadline=r.next_deadline if r else 0.0,
             chunk_seconds=r.chunk_seconds if r else self.chunk_seconds)

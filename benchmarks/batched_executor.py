@@ -24,6 +24,15 @@ through.  Spill/restore traffic is routed through the state plane's
 actually charged into the latency EMAs) next to eviction/restore
 counts.
 
+``--lanes N`` adds the multi-lane session scenario; when more than one
+device is visible (e.g. the runner sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``) each lane's
+pool is committed to its own device, cross-lane moves are real
+``jax.device_put`` copies, and the lanes row carries the MEASURED
+transfer bandwidth (``transfer_measured``: count/bytes/seconds/
+bytes_per_s plus the model -> calibrated ``bw_intra`` pair) next to the
+per-lane directional byte attribution (``lane_transfer_bytes``).
+
 Results are also written as machine-readable JSON (``--json PATH``,
 default ``BENCH_batched_executor.json``) so CI can track the perf
 trajectory as an artifact.
@@ -140,6 +149,8 @@ def run_lanes_session(n_lanes: int, n_streams: int, chunks: int,
     elastic SP live).  Reports end-to-end streams/s plus the counts of
     cross-lane decisions actually applied — the nightly signal that the
     decision -> apply loop keeps engaging."""
+    import jax
+
     from repro.sched_sim.metrics import summarize
     from repro.sched_sim.workloads import WORKLOADS
     from repro.serve.session import (SessionConfig, StreamingSession,
@@ -155,8 +166,13 @@ def run_lanes_session(n_lanes: int, n_streams: int, chunks: int,
     res = session.run()
     dt = time.perf_counter() - t0
     s = summarize(res)
+    # per-lane directional byte attribution (out = sent, in = received)
+    lane_bytes = [{"out": ex.pool.transfer_bytes_out,
+                   "in": ex.pool.transfer_bytes_in}
+                  for ex in session.lanes.executors]
     return {
         "lanes": n_lanes, "streams": n_streams,
+        "devices": jax.local_device_count(),
         "chunks_total": s.n_chunks,
         "elapsed_s": round(dt, 4),
         "streams_per_s": round(n_streams / dt, 4),
@@ -166,6 +182,11 @@ def run_lanes_session(n_lanes: int, n_streams: int, chunks: int,
         "sp_releases": res.n_sp_releases_applied,
         "rehomings_planned": res.n_rehomings,
         "sp_planned": res.n_sp_events,
+        "lane_transfer_bytes": lane_bytes,
+        # measured wall time of real cross-device jax.device_put moves
+        # (zeros on a single visible device: lanes share it and moves
+        # are byte-charged but not device-copied)
+        "transfer_measured": res.engine.measured_stats(),
     }
 
 
@@ -174,6 +195,8 @@ def transfer_report(ex: BatchedChunkExecutor) -> dict:
     return {
         "count": len(log),
         "bytes": ex.pool.transfer_bytes,
+        "bytes_out": ex.pool.transfer_bytes_out,
+        "bytes_in": ex.pool.transfer_bytes_in,
         "total_s": round(sum(t.total for t in log), 6),
         "dispatcher_wait_s": round(ex.transfer_wait_s, 6),
     }
@@ -298,6 +321,13 @@ def main() -> None:
               f"sp_releases={row['sp_releases']} "
               f"(planned: rehomings={row['rehomings_planned']} "
               f"sp={row['sp_planned']})")
+        ms = row["transfer_measured"]
+        if ms["count"]:
+            print(f"  measured moves: n={ms['count']} "
+                  f"bytes={ms['bytes']} bw={ms['bytes_per_s']:.3g} B/s "
+                  f"(model {ms['bw_intra_model']:.3g} -> "
+                  f"calibrated {ms['bw_intra_calibrated']:.3g}) "
+                  f"on {row['devices']} devices")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -8,8 +8,11 @@ and fail on a >15% streams/s regression in any tracked scenario.
 Tracked scenarios: ``sequential``, ``batched/<backend>``,
 ``oversubscribed/<backend>`` and ``lanes/<n>`` ``streams_per_s``
 entries; any other fields a scenario row carries (migration/SP counts,
-QoE, transfer reports, ...) are ignored, so the compare tolerates new
-JSON fields without breaking.  Scenarios missing from the previous
+QoE, transfer reports, the device-lane ``transfer_measured`` stats and
+``lane_transfer_bytes`` in/out attribution, ...) are ignored, so the
+compare tolerates new JSON fields without breaking.  Measured transfer
+bandwidth is deliberately NOT gated: host-to-host ``jax.device_put``
+wall time is too noisy on shared runners for a hard threshold.  Scenarios missing from the previous
 artifact (first run, new backend or lane count) are reported and
 skipped — the check only compares like with like, so the nightly job
 can bootstrap from an empty history.  Exit code 0 = no regression (or

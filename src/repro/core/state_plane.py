@@ -87,6 +87,22 @@ class PagedKVPool:
 
 
 @dataclasses.dataclass(frozen=True)
+class MeasuredTransfer:
+    """One REAL cross-device move observed by the executor (wall time
+    around a ``jax.device_put`` + ``block_until_ready``), recorded next
+    to the modeled ``TransferTiming`` log so measured and modeled
+    transfer costs share one surface."""
+    n_bytes: int
+    seconds: float
+    cross_node: bool
+    kind: str                     # "migration" | "sp-expand" | "move"
+
+    @property
+    def bytes_per_s(self) -> float:
+        return self.n_bytes / max(self.seconds, 1e-9)
+
+
+@dataclasses.dataclass(frozen=True)
 class TransferTiming:
     submitted: float
     first_layer_ready: float      # stream may re-enter the queue here
@@ -108,16 +124,64 @@ class AsyncTransferEngine:
     """Models SS4.4's NIXL/NCCL engine; one protocol for eviction,
     re-homing and elastic SP."""
 
+    # blend of prior vs newest observed bandwidth when calibrating
+    BW_EMA_DECAY = 0.5
+
     def __init__(self, *, protocol: str = "async-stream",
                  bw_intra: float = 200e9, bw_inter: float = 40e9,
-                 overhead: float = 0.004, n_layers: int = 30):
+                 overhead: float = 0.004, n_layers: int = 30,
+                 calibrate: bool = True):
         assert protocol in ("sync", "async-nostream", "async-stream")
         self.protocol = protocol
         self.bw_intra = bw_intra
         self.bw_inter = bw_inter
+        # the offline constants, kept for reporting once measurement
+        # starts calibrating the live values
+        self.bw_intra_model = bw_intra
+        self.bw_inter_model = bw_inter
         self.overhead = overhead
         self.n_layers = n_layers
+        self.calibrate = calibrate
         self.log: List[TransferTiming] = []
+        self.measured: List[MeasuredTransfer] = []
+
+    def record_measured(self, n_bytes: int, seconds: float, *,
+                        cross_node: bool = False,
+                        kind: str = "move") -> MeasuredTransfer:
+        """Record one REAL device-to-device move (measured wall time)
+        and, when ``calibrate``, fold its observed bytes/sec into the
+        matching bandwidth constant (EMA) — so the *modeled* timelines
+        of future ``transfer`` calls track this host's interconnect
+        instead of the offline testbed constant."""
+        m = MeasuredTransfer(n_bytes, seconds, cross_node, kind)
+        self.measured.append(m)
+        if self.calibrate and n_bytes > 0:
+            obs = m.bytes_per_s
+            if cross_node:
+                self.bw_inter = (self.BW_EMA_DECAY * self.bw_inter
+                                 + (1.0 - self.BW_EMA_DECAY) * obs) \
+                    if len([x for x in self.measured
+                            if x.cross_node]) > 1 else obs
+            else:
+                self.bw_intra = (self.BW_EMA_DECAY * self.bw_intra
+                                 + (1.0 - self.BW_EMA_DECAY) * obs) \
+                    if len([x for x in self.measured
+                            if not x.cross_node]) > 1 else obs
+        return m
+
+    def measured_stats(self) -> Dict[str, float]:
+        """Aggregate view of the measured-move log (the benchmark's
+        ``transfer_measured`` block)."""
+        n_bytes = sum(m.n_bytes for m in self.measured)
+        seconds = sum(m.seconds for m in self.measured)
+        return {
+            "count": len(self.measured),
+            "bytes": n_bytes,
+            "seconds": round(seconds, 6),
+            "bytes_per_s": round(n_bytes / seconds, 2) if seconds else 0.0,
+            "bw_intra_calibrated": round(self.bw_intra, 2),
+            "bw_intra_model": self.bw_intra_model,
+        }
 
     def transfer(self, now: float, n_bytes: int, *,
                  cross_node: bool) -> TransferTiming:

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
@@ -45,7 +46,7 @@ class Stream:
     step_done: int = 0                # denoise steps finished in cur chunk
     chunk_started: Optional[float] = None
     next_fidelity: FidelityConfig = HIGHEST_QUALITY
-    t_next: float = 0.0               # profiled latency of next chunk
+    _t_next: float = dataclasses.field(default=0.0, repr=False)
     remaining: float = 0.0            # R_u estimate for running chunk
 
     # --- control state ---
@@ -56,6 +57,26 @@ class Stream:
     resident_on: Set[int] = dataclasses.field(default_factory=set)
     paused_until: float = -1.0
     done: bool = False
+
+    @property
+    def t_next(self) -> float:
+        """T_u (Eq. 1): profiled *latency* of the next chunk — a
+        DURATION in driving-clock seconds, never an absolute completion
+        time.  Both writers (the simulator's cost model and the real
+        session's ``_begin_if_needed``) must store the same unit; the
+        elastic-SP release guard compares it against ``credit`` (also a
+        duration), so an absolute timestamp here silently disables
+        release.  The setter rejects values that cannot be a latency."""
+        return self._t_next
+
+    @t_next.setter
+    def t_next(self, latency: float) -> None:
+        if not (isinstance(latency, (int, float))
+                and math.isfinite(latency) and latency >= 0.0):
+            raise ValueError(
+                f"t_next must be a finite non-negative duration (T_u), "
+                f"got {latency!r} — absolute timestamps are a unit bug")
+        self._t_next = float(latency)
 
     @property
     def finished(self) -> bool:

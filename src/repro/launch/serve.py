@@ -31,6 +31,7 @@ Two modes, ONE workload spec and ONE metrics surface:
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 
@@ -47,7 +48,14 @@ def main() -> None:
     ap.add_argument("--lanes", type=int, default=1,
                     help="device lanes for --real (> 1 implies the "
                          "batched executor and re-enables re-homing + "
-                         "elastic SP)")
+                         "elastic SP); with > 1 visible devices each "
+                         "lane commits its pool to its own device and "
+                         "cross-lane moves are real jax.device_put")
+    ap.add_argument("--device-count", type=int, default=0,
+                    help="force N host platform devices before JAX "
+                         "initializes (XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N) so device-backed "
+                         "lanes are testable on one CPU host")
     ap.add_argument("--workers-per-node", type=int, default=0,
                     help="lanes per node for --real --lanes "
                          "(0 -> all lanes in one node)")
@@ -93,6 +101,15 @@ def main() -> None:
         ap.error("--context-backend only applies to --real --batched")
     if args.lanes > 1 and not args.real:
         ap.error("--lanes only applies to --real")
+    if args.device_count:
+        if not args.real:
+            ap.error("--device-count only applies to --real")
+        # must land in the environment BEFORE jax initializes its
+        # backends (repro imports below pull jax in)
+        flag = ("--xla_force_host_platform_device_count="
+                f"{args.device_count}")
+        os.environ["XLA_FLAGS"] = \
+            (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
 
     from repro.sched_sim.metrics import summarize, transfer_stats
     from repro.sched_sim.workloads import WORKLOADS
@@ -147,6 +164,19 @@ def main() -> None:
             print(f"  applied: migrations={res.n_migrations_applied} "
                   f"sp_expands={res.n_sp_expands_applied} "
                   f"sp_releases={res.n_sp_releases_applied}")
+            import jax
+            lanes = session.lanes
+            placement = [str(d) if d is not None else "default"
+                         for d in getattr(lanes, "lane_devices", [])]
+            print(f"  devices: {jax.local_device_count()} visible, "
+                  f"lanes -> {placement}")
+            ms = res.engine.measured_stats()
+            if ms["count"]:
+                print(f"  measured moves: n={ms['count']} "
+                      f"bytes={ms['bytes']} "
+                      f"bw={ms['bytes_per_s']:.3g} B/s "
+                      f"(model {ms['bw_intra_model']:.3g} -> "
+                      f"calibrated {ms['bw_intra_calibrated']:.3g})")
         return
 
     from repro.sched_sim.policies import SDV2Policy, make_policy

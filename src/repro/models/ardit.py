@@ -426,7 +426,12 @@ def denoise_step_paged(cfg: ModelConfig, p: Params, x: jax.Array,
                        q_offset: jax.Array, is_denoise: jax.Array):
     """Page-table-native sibling of ``denoise_step``: the sub-batch's
     context stays IN the pool and per-stream visibility rides in the
-    page-coordinate masks.  ``dn_mask=None`` is the all-visible fast
+    page-coordinate masks.  Batch-axis elastic SP rides this same step:
+    a stream borrowed onto another device becomes an ordinary extra
+    batch row over the donor's pool (full-head mirror pages in the
+    donor's block table), so co-serving it with the donor's own streams
+    is the one fused call — no SP-specific kernel and no solo dispatch.
+    ``dn_mask=None`` is the all-visible fast
     path (homogeneous fill, full window, no sparsity: each page's
     static valid prefix is visible, no per-score select — the paged
     analogue of the gathered path's dropped masks; note dn all-visible

@@ -143,7 +143,11 @@ def pool_write_pages(pool: jax.Array, new: jax.Array,
     Writes one T-token block per stream at token 0 of its destination
     page — the page-granular sibling of ``write_block``.  The pool
     buffer is donated so the update happens in place where the backend
-    supports it."""
+    supports it.  Device-backed pools rely on this donation staying
+    device-local: ``new`` blocks arriving from another lane (migration
+    landings, SP shipbacks) are ``device_put`` onto the pool's device by
+    the caller BEFORE this jit, so the write never silently pins the
+    donated pool to a foreign device."""
     for i in range(new.shape[1]):
         pool = jax.lax.dynamic_update_slice(
             pool, new[:, i:i + 1].astype(pool.dtype),

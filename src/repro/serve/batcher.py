@@ -166,7 +166,8 @@ class KVPool:
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, max_streams: int,
-                 engine: Optional[AsyncTransferEngine] = None):
+                 engine: Optional[AsyncTransferEngine] = None,
+                 device: Optional[Any] = None):
         self.cfg, self.params = cfg, params
         self._tc = A.chunk_tokens(cfg)
         self._w = cfg.ardit_window_chunks
@@ -176,8 +177,16 @@ class KVPool:
         shape = (cfg.n_layers, self.ledger.n_pages, self.page_tokens,
                  cfg.n_kv_heads, cfg.head_dim)
         dt = jnp.dtype(cfg.kv_dtype)
+        # a device-backed pool COMMITS its buffers to its lane's device
+        # (``jax.devices()[lane]`` under a multi-device runtime), so a
+        # cross-lane page move is a real ``jax.device_put`` between
+        # device buffers, not a host-array relabel
+        self.device = device
         self.k = jnp.zeros(shape, dt)
         self.v = jnp.zeros(shape, dt)
+        if device is not None:
+            self.k = jax.device_put(self.k, device)
+            self.v = jax.device_put(self.v, device)
         self._spill: Dict[int, Dict[str, Any]] = {}   # sid -> host pages
         # device-side per-stream page tables, built once per residency
         # epoch (invalidated on admit/evict/restore/retire) instead of
@@ -190,7 +199,20 @@ class KVPool:
         # A multi-lane session injects ONE shared engine so migrations
         # and SP head-partition moves land on one metrics surface.
         self.engine = engine or AsyncTransferEngine(n_layers=cfg.n_layers)
-        self.transfer_bytes = 0
+        # directional byte counters: what this pool RECEIVED vs what it
+        # SENT AWAY.  A cross-lane move charges the source's ``out`` and
+        # the destination's ``in`` — never the same pool twice — so
+        # per-lane benchmark rows attribute traffic to the lane that
+        # actually carried it (spill = out, restore = in)
+        self.transfer_bytes_in = 0
+        self.transfer_bytes_out = 0
+
+    @property
+    def transfer_bytes(self) -> int:
+        """Total KV bytes moved through this pool's boundary (in + out):
+        the back-compat aggregate the benchmark's transfer report keys
+        on."""
+        return self.transfer_bytes_in + self.transfer_bytes_out
 
     # ---- ledger views ------------------------------------------------------
     @property
@@ -226,6 +248,14 @@ class KVPool:
     def _write(self, pages: np.ndarray, nk: jax.Array,
                nv: jax.Array) -> None:
         pg = jnp.asarray(np.asarray(pages), jnp.int32)
+        if self.device is not None:
+            # incoming rows may be committed to ANOTHER lane's device
+            # (batch-axis SP shipback, migration import): land them here
+            # first — a same-device put is a no-op, a cross-device put
+            # is the real move
+            nk = jax.device_put(nk, self.device)
+            nv = jax.device_put(nv, self.device)
+            pg = jax.device_put(pg, self.device)
         self.k = kvcache.pool_write_pages(self.k, nk, pg)
         self.v = kvcache.pool_write_pages(self.v, nv, pg)
 
@@ -242,6 +272,8 @@ class KVPool:
         t = self._dev_tables.get(sid)
         if t is None:
             t = jnp.asarray(self.ledger.tables[sid], jnp.int32)
+            if self.device is not None:
+                t = jax.device_put(t, self.device)
             self._dev_tables[sid] = t
         return t
 
@@ -284,11 +316,16 @@ class KVPool:
         self.ledger.chunks[sid] = 0
         return False
 
-    def _charge_transfer(self, n_bytes: int) -> None:
+    def _charge_transfer(self, n_bytes: int, direction: str) -> None:
         """Record one spill/restore on the async transfer engine (the
         paper's async-stream protocol: the dispatcher only waits for the
-        first layer; later layers overlap with compute)."""
-        self.transfer_bytes += n_bytes
+        first layer; later layers overlap with compute).  ``direction``
+        attributes the bytes: ``"out"`` = left this pool (spill),
+        ``"in"`` = arrived (restore / import)."""
+        if direction == "out":
+            self.transfer_bytes_out += n_bytes
+        else:
+            self.transfer_bytes_in += n_bytes
         self.engine.transfer(time.perf_counter(), n_bytes,
                              cross_node=False)
 
@@ -304,7 +341,7 @@ class KVPool:
         self.ledger.drop(sid, spill=True)
         self._dev_tables.pop(sid, None)
         self._charge_transfer(self._spill[sid]["k"].nbytes
-                              + self._spill[sid]["v"].nbytes)
+                              + self._spill[sid]["v"].nbytes, "out")
         return self.pages_per_stream
 
     def restore(self, sid: int, *, charge: bool = True) -> bool:
@@ -321,21 +358,29 @@ class KVPool:
         self._dev_tables.pop(sid, None)
         self._write(table, jnp.asarray(sp["k"]), jnp.asarray(sp["v"]))
         if charge:
-            self._charge_transfer(sp["k"].nbytes + sp["v"].nbytes)
+            self._charge_transfer(sp["k"].nbytes + sp["v"].nbytes, "in")
         return True
 
-    def export_spill(self, sid: int) -> Tuple[Dict[str, Any], int]:
-        """Detach one stream's KV as host pages + chunk count (the
-        migration export half): a resident stream's pages are
-        materialized to host and freed, a spilled stream hands over its
-        existing spill buffer verbatim.  No transfer is charged — the
-        caller owns the movement (``import_spill`` on the destination
-        pool is where the cross-lane transfer is modeled)."""
+    def export_spill(self, sid: int, *,
+                     to_host: bool = True) -> Tuple[Dict[str, Any], int]:
+        """Detach one stream's KV as pages + chunk count (the migration
+        export half): a resident stream's pages are materialized to host
+        and freed, a spilled stream hands over its existing spill buffer
+        verbatim.  ``to_host=False`` keeps a RESIDENT stream's pages as
+        device arrays (no host round trip) so the caller can
+        ``jax.device_put`` them straight onto the destination lane's
+        device — the real cross-device migration path.  No transfer is
+        charged — the caller owns the movement (``import_spill`` /
+        ``import_pages`` on the destination pool is where the cross-lane
+        transfer is accounted)."""
         n_chunks = self.ledger.chunks.get(sid, 0)
         if self.ledger.resident(sid):
             rows = jnp.asarray(self.ledger.tables[sid], jnp.int32)
-            pages = {"k": np.asarray(self.k[:, rows]),
-                     "v": np.asarray(self.v[:, rows])}
+            if to_host:
+                pages = {"k": np.asarray(self.k[:, rows]),
+                         "v": np.asarray(self.v[:, rows])}
+            else:
+                pages = {"k": self.k[:, rows], "v": self.v[:, rows]}
             self.ledger.drop(sid, spill=False)
         else:
             pages = self._spill.pop(sid)
@@ -355,6 +400,21 @@ class KVPool:
         self._spill[sid] = pages
         self.ledger.spilled.add(sid)
         self.ledger.chunks[sid] = n_chunks
+
+    def import_pages(self, sid: int, pages: Dict[str, Any],
+                     n_chunks: int) -> None:
+        """Adopt an exported DEVICE page set directly into a fresh page
+        table (the real cross-device migration landing: the caller
+        already moved the pages to this pool's device with
+        ``jax.device_put``).  Unlike ``import_spill`` the stream becomes
+        page-resident immediately — no host-side parking."""
+        assert not self.ledger.resident(sid) and sid not in self._spill, \
+            f"stream {sid} already present in destination pool"
+        assert self.can_admit(), \
+            "direct import requires space (caller checks can_admit)"
+        table = self.ledger.take(sid, chunks=n_chunks)
+        self._dev_tables.pop(sid, None)
+        self._write(table, pages["k"], pages["v"])
 
     def release(self, sid: int) -> None:
         """Retire a stream entirely (resident or spilled).  Idempotent."""
@@ -379,11 +439,35 @@ class KVPool:
 @dataclasses.dataclass
 class SPLink:
     """One stream's active elastic-SP2 borrow (SS4.3): the donor lane id
-    and the donor lane's KV pool, which carries the stream's upper half
-    KV heads in its own page set (Ulysses head partition, App. C.4).
-    The home pool stays the full-head system of record, so releasing a
+    and the donor lane's KV pool.  Two serving modes:
+
+    * ``"solo"`` — same-device lanes: the donor page set carries the
+      stream's UPPER half KV heads (Ulysses head partition, App. C.4)
+      and the home lane runs the fused head-split step
+      ``ardit.denoise_step_paged_sp`` reading BOTH pools in one jitted
+      call, dispatched solo with the donor's step slot reserved.
+    * ``"batch"`` — device-backed lanes (one jitted call cannot read two
+      pools committed to different devices): the donor page set carries
+      FULL heads and the stream is served ON the donor lane as an
+      ordinary extra row of the donor's own micro-batch (one fused
+      jitted call co-serving donor streams + the borrowed stream — no
+      solo dispatch slot consumed), bit-identical to the SP1 step.
+
+    Either way the home pool stays the full-head system of record
+    (batch mode ships each completed chunk's KV home), so releasing a
     link frees the donor pages and nothing moves back."""
     donor: int
+    pool: KVPool
+    mode: str = "solo"
+
+
+@dataclasses.dataclass
+class SPGuest:
+    """Donor-side view of one batch-axis SP borrow: the borrowed stream
+    runs HERE as a guest batch row over full-head donor pages, while
+    ``pool`` (the HOME lane's pool) stays the system of record — each
+    completed guest chunk's full-head KV is shipped back into it."""
+    home: int
     pool: KVPool
 
 
@@ -426,12 +510,19 @@ class BatchedChunkExecutor(ChunkExecutor):
                  params: Optional[Any] = None, seed: int = 0,
                  max_streams: int = 16,
                  context_backend: str = "paged",
-                 engine: Optional[AsyncTransferEngine] = None):
+                 engine: Optional[AsyncTransferEngine] = None,
+                 device: Optional[Any] = None):
         super().__init__(cfg=cfg, params=params, seed=seed)
         assert context_backend in ("gather", "paged"), context_backend
         self.context_backend = context_backend
+        # a device-backed lane commits its params replica and pool
+        # buffers to its own device, so every jitted step runs there and
+        # cross-lane state movement is a real device-to-device copy
+        self.device = device
+        if device is not None:
+            self.params = jax.device_put(self.params, device)
         self.pool = KVPool(self.cfg, self.params, max_streams,
-                           engine=engine)
+                           engine=engine, device=device)
         self.inflight: Dict[int, InflightChunk] = {}
         self.chunks: Dict[int, List[jax.Array]] = {}
         self.fidelity_log: Dict[int, List[str]] = {}
@@ -449,6 +540,10 @@ class BatchedChunkExecutor(ChunkExecutor):
         # half-head mirror (the stream is inflight on its HOME lane, so
         # the inflight filter alone would not protect it here)
         self.sp_mirrors: set = set()
+        # batch-axis SP borrows served ON this lane: sid -> SPGuest
+        # (guest rows join this lane's micro-batches; completed chunks
+        # ship full-head KV back to the guest's home pool)
+        self.sp_guests: Dict[int, SPGuest] = {}
         self.step_ema: Dict[str, float] = {}      # per-step wall seconds
         self.evictions = 0
         self.restores = 0
@@ -516,11 +611,15 @@ class BatchedChunkExecutor(ChunkExecutor):
         so are live SP half-head mirrors (``sp_mirrors``) — the owning
         stream is inflight on its HOME lane, invisible to this lane's
         inflight set, and evicting its mirror would break the linked
-        SP2 step mid-borrow."""
+        SP2 step mid-borrow.  A stream with a live SP link (home side)
+        or borrowed onto this lane as a batch-axis guest is protected
+        for the same reason: its pages on BOTH lanes must survive the
+        borrow."""
         if streams is None:
             return False
         victims = [s for s in self.pool.resident_sids()
-                   if s not in self.inflight and s not in self.sp_mirrors]
+                   if s not in self.inflight and s not in self.sp_mirrors
+                   and s not in self.sp_links and s not in self.sp_guests]
         victim = queues.pick_eviction(victims, streams, protect=protect)
         if victim is None:
             return False
@@ -562,13 +661,21 @@ class BatchedChunkExecutor(ChunkExecutor):
         completed chunk (the restore really happened)."""
         self.inflight.pop(sid, None)
 
-    def retire(self, sid: int) -> None:
+    def retire(self, sid: int, drop_history: bool = False) -> None:
+        """Retire a stream: free its pages and per-stream counters.
+        ``drop_history=True`` also drops the generated-chunk and
+        fidelity history — used for the warm-up calibration stream
+        (sid -1), whose residue would otherwise leak into lane 0's
+        per-stream dicts forever."""
         assert sid not in self.sp_links, \
             f"stream {sid} retired with a live SP link (release first)"
         self.pool.release(sid)
         self.inflight.pop(sid, None)
         self._pending_wait.pop(sid, None)
         self.chunk_seq.pop(sid, None)
+        if drop_history:
+            self.chunks.pop(sid, None)
+            self.fidelity_log.pop(sid, None)
         self._boundary_cache.clear()
 
     def reset_condition(self, sid: int, seed: int) -> bool:
@@ -595,15 +702,18 @@ class BatchedChunkExecutor(ChunkExecutor):
         self._boundary_cache.clear()
         return ok
 
-    def export_stream(self, sid: int) -> Dict[str, Any]:
+    def export_stream(self, sid: int, *,
+                      to_host: bool = True) -> Dict[str, Any]:
         """Detach a stream for cross-lane migration (KV pages, counters,
         generated chunks).  Only legal at a chunk boundary with no live
         SP link — exactly the streams ``rehoming.plan_rehoming`` deems
-        movable.  No transfer is charged here; ``import_stream`` on the
-        destination models the src->dst move."""
+        movable.  ``to_host=False`` hands over device arrays (the real
+        cross-device path; see ``KVPool.export_spill``).  No transfer is
+        charged here; ``import_stream`` on the destination accounts the
+        src->dst move."""
         assert sid not in self.inflight, f"stream {sid} is mid-chunk"
         assert sid not in self.sp_links, f"stream {sid} has a live SP link"
-        pages, n_chunks = self.pool.export_spill(sid)
+        pages, n_chunks = self.pool.export_spill(sid, to_host=to_host)
         self._boundary_cache.clear()
         return {"pages": pages, "chunk_count": n_chunks,
                 "chunks": self.chunks.pop(sid),
@@ -612,19 +722,28 @@ class BatchedChunkExecutor(ChunkExecutor):
                 "pending_wait": self._pending_wait.pop(sid, 0.0)}
 
     def import_stream(self, sid: int, state: Dict[str, Any], *,
-                      cross_node: bool = False) -> None:
-        """Adopt an exported stream (the re-homing apply half): its KV
-        arrives host-side, ONE src->dst transfer is charged on the
-        shared engine (cross-node bandwidth when the lanes' nodes
-        differ), and the dispatcher wait rides on the stream's next
-        completed chunk.  The stream becomes page-resident through the
-        normal restore path, bit-exactly."""
+                      cross_node: bool = False,
+                      direct: bool = False) -> None:
+        """Adopt an exported stream (the re-homing apply half): ONE
+        src->dst transfer is charged on the shared engine (cross-node
+        bandwidth when the lanes' nodes differ), and the dispatcher
+        wait rides on the stream's next completed chunk.
+        ``direct=True`` means ``state["pages"]`` are device arrays the
+        caller already moved onto this lane's device — they are written
+        straight into a fresh page table (immediately resident);
+        otherwise the KV arrives host-side and the stream becomes
+        page-resident through the normal restore path, bit-exactly."""
         self.chunks[sid] = state["chunks"]
         self.fidelity_log[sid] = state["fidelity_log"]
         self.chunk_seq[sid] = state["chunk_seq"]
-        self.pool.import_spill(sid, state["pages"], state["chunk_count"])
+        if direct:
+            self.pool.import_pages(sid, state["pages"],
+                                   state["chunk_count"])
+        else:
+            self.pool.import_spill(sid, state["pages"],
+                                   state["chunk_count"])
         n_bytes = state["pages"]["k"].nbytes + state["pages"]["v"].nbytes
-        self.pool.transfer_bytes += n_bytes
+        self.pool.transfer_bytes_in += n_bytes
         t = self.pool.engine.transfer(time.perf_counter(), n_bytes,
                                       cross_node=cross_node)
         w = state["pending_wait"] + t.residual_wait
@@ -773,6 +892,13 @@ class BatchedChunkExecutor(ChunkExecutor):
             "sub-batch contains a non-resident (spilled) stream"
         chunk_idx = np.asarray([self.pool.chunks[sid] for sid in sids],
                                np.int64)
+        # a batch-mode link is served on the DONOR lane (the stream is
+        # a guest row there); its home lane must never also step it, or
+        # the two page sets would diverge
+        assert not any(s in self.sp_links
+                       and self.sp_links[s].mode == "batch"
+                       for s in sids), \
+            "batch-axis SP: linked stream must be served on its donor lane"
         # elastic SP2 takes the head-split step for a SOLO linked stream
         # whose dispatch reserved the donor slot; a linked stream folded
         # into a normal batch falls back to the SP1 step — the home pool
@@ -782,6 +908,8 @@ class BatchedChunkExecutor(ChunkExecutor):
               if sp_serve and len(sids) == 1
               and self.context_backend == "paged"
               else None)
+        if sp is not None and sp.mode != "solo":
+            sp = None
 
         t0 = time.perf_counter()
         bnd = self._boundary(sids, chunk_idx, fid, sp=sp)
@@ -826,16 +954,23 @@ class BatchedChunkExecutor(ChunkExecutor):
                              {"k": new_kv["k"][:, rows],
                               "v": new_kv["v"][:, rows]}, fid.quant)
             for i in clean_rows:
+                row = {"k": new_kv["k"][:, i:i + 1],
+                       "v": new_kv["v"][:, i:i + 1]}
                 link = self.sp_links.get(sids[i])
                 if link is not None:
                     # the donor's half-head mirror must track the home
                     # pool: ring-write this chunk's upper half into the
                     # donor page set so the next SP2 boundary sees
-                    # consistent halves
-                    self._append_sp_half(link, sids[i],
-                                         {"k": new_kv["k"][:, i:i + 1],
-                                          "v": new_kv["v"][:, i:i + 1]},
-                                         fid.quant)
+                    # consistent halves (solo mode only — the assertion
+                    # above keeps batch-linked streams off this lane)
+                    self._append_sp_half(link, sids[i], row, fid.quant)
+                guest = self.sp_guests.get(sids[i])
+                if guest is not None:
+                    # batch-axis SP shipback: the guest's home pool is
+                    # the system of record — append the full-head chunk
+                    # there too (a real cross-device put when the lanes
+                    # are device-backed), so release never moves state
+                    guest.pool.append([sids[i]], row, fid.quant)
             now_wall = None
             for i in clean_rows:
                 sid = sids[i]

@@ -164,8 +164,15 @@ class SequentialChunkExecutor(ChunkExecutor):
         st.cache = A.init_cache(self.cfg, self.params, st.cond)
         return True
 
-    def retire(self, sid: int) -> None:
+    def retire(self, sid: int, drop_history: bool = False) -> None:
+        """Retire a stream; ``drop_history=True`` also removes its
+        record and generated chunks (warm-up calibration stream — no
+        residue may survive into the serving session)."""
         self.inflight.pop(sid, None)
+        if drop_history:
+            self.streams.pop(sid, None)
+            self.chunks.pop(sid, None)
+            self.fidelity_log.pop(sid, None)
 
 
 def serve_session(n_streams: int = 2, chunks_per_stream: int = 4,

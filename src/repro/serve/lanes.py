@@ -1,40 +1,59 @@
-"""Multi-lane serving: N device lanes under one control plane.
+"""Multi-lane serving: N DEVICE-BACKED lanes under one control plane.
 
 A *lane* is one execution slot over a device — one
 ``BatchedChunkExecutor`` with its own paged ``KVPool`` — standing in
-for one Worker of the paper's cluster (SS3.1).  On CPU the lanes are
-distinct executor instances over the host device (``jax.device_put``
-sharding applies when real devices exist), which makes the whole
-decision -> apply -> metrics loop testable in CI.
+for one Worker of the paper's cluster (SS3.1).  When the runtime
+exposes more than one device (real accelerators, or forced host
+devices in CI via ``XLA_FLAGS=--xla_force_host_platform_device_
+count=N``), each lane COMMITS its pool, params view, and per-stream
+buffers to its own ``jax.devices()`` entry; cross-lane KV movement is
+then a real ``jax.device_put`` between device buffers, timed on the
+spot (``MeasuredTransfer``) next to the engine's modeled timeline, and
+the measurements EMA-calibrate the model's ``bw_intra``.  A
+single-device runtime keeps the legacy placement (uncommitted buffers)
+bit-for-bit.
 
 ``LanePool`` is the **apply layer** for the cross-worker decisions
 ``core.control_plane.ControlPlane.tick`` already emits (and which the
 discrete-event simulator already applies on its virtual clock):
 
 * ``rehoming.Migration`` -> :meth:`migrate`: a real cross-lane KV move.
-  The source lane's pages are detached host-side
-  (``KVPool.export_spill``, bit-exact), ONE src->dst transfer is
-  charged on the shared ``state_plane.AsyncTransferEngine``
-  (cross-node bandwidth when the lanes' nodes differ), and the stream
-  lands in the destination pool through the normal restore path — at a
-  chunk boundary, exactly the streams ``plan_rehoming`` deems movable.
-* ``elastic_sp.SPDecision`` -> :meth:`sp_expand` / :meth:`sp_release`:
-  a real SP2 step.  Expand copies the stream's UPPER half KV heads
-  into a page set of the donor lane's pool (the App. C.4
-  head-partition transfer: half the stream's bytes through the state
-  plane) and links the stream; the executor then serves it with the
-  Ulysses head-split ``ardit.denoise_step_paged_sp`` — home lane
-  computes heads [0, H/2) from its pool, donor lane heads [H/2, H)
-  from its copy — dispatched solo so the donor's step slot is
-  genuinely occupied.  The home pool stays the full-head system of
-  record, so release just frees the donor pages at the next safe
-  boundary.
+  Same-device lanes detach the pages host-side (``KVPool.export_spill``,
+  bit-exact) and land through the normal restore path; device-backed
+  lanes ship the page block device-to-device (measured) and land it
+  immediately resident (``KVPool.import_pages``).  Either way ONE
+  src->dst transfer is charged on the shared
+  ``state_plane.AsyncTransferEngine`` (cross-node bandwidth when the
+  lanes' nodes differ) and the bytes are attributed directionally:
+  source ``transfer_bytes_out``, destination ``transfer_bytes_in``.
+* ``elastic_sp.SPDecision`` -> :meth:`sp_expand` / :meth:`sp_release`,
+  in one of two modes (``SPLink.mode``):
 
-All lanes share ONE model replica (same params), one transfer engine
-(one metrics surface), and — because the jitted step functions are
-module-level — one compile cache: warming a shape on any lane warms it
-for every lane.  :meth:`prejit_sp` warms the SP2 executables up front
-so triggering elastic SP never compiles on the critical path.
+  - **solo** (same-device lanes): expand copies the stream's UPPER
+    half KV heads into a page set of the donor lane's pool (the
+    App. C.4 head-partition transfer: half the stream's bytes) and the
+    executor serves it with the Ulysses head-split
+    ``ardit.denoise_step_paged_sp`` — home computes heads [0, H/2),
+    donor heads [H/2, H) — dispatched solo, so the donor's step slot
+    is genuinely occupied.  The home pool stays the full-head system
+    of record; release just frees the donor pages.
+  - **batch** (cross-device lanes, where one jit cannot read two
+    devices' pools): expand mirrors FULL-head pages into the donor
+    pool and the borrowed stream joins the *batch axis* of the donor's
+    own sub-batch — co-served with the donor's streams in the donor's
+    standard fused ``denoise_step_paged`` call, consuming no solo
+    dispatch slot.  Each completed chunk's KV is shipped back
+    (appended) to the home pool, which therefore stays the system of
+    record: release frees the donor pages and moves nothing back.
+
+  Both modes are bit-identical to the SP1 step.
+
+All lanes share ONE model replica (per-device views of the same
+params), one transfer engine (one metrics surface), and — because the
+jitted step functions are module-level — one compile cache per device.
+:meth:`prejit_sp` warms the solo-SP executables up front so triggering
+elastic SP never compiles on the critical path (batch-axis SP reuses
+the donor's ordinary step shapes, which warm naturally).
 """
 from __future__ import annotations
 
@@ -49,7 +68,8 @@ from repro.core.state_plane import AsyncTransferEngine
 from repro.core.types import Stream
 from repro.models import ardit as A
 from repro.models import kvcache
-from repro.serve.batcher import BatchedChunkExecutor, KVPool, SPLink
+from repro.serve.batcher import (BatchedChunkExecutor, KVPool, SPGuest,
+                                 SPLink)
 
 
 class LanePool:
@@ -64,19 +84,31 @@ class LanePool:
     def __init__(self, n_lanes: int, cfg: Any = None, params: Any = None,
                  seed: int = 0, max_streams: int = 16,
                  context_backend: str = "paged",
-                 engine: Optional[AsyncTransferEngine] = None):
+                 engine: Optional[AsyncTransferEngine] = None,
+                 sp_mode: str = "auto"):
         assert n_lanes >= 1
+        assert sp_mode in ("auto", "solo", "batch"), sp_mode
+        # lanes round-robin over the runtime's real devices (forced host
+        # devices in CI via XLA_FLAGS=--xla_force_host_platform_device_
+        # count=N); a single-device runtime keeps the legacy placement
+        # (device=None, uncommitted buffers) bit-for-bit
+        devs = jax.devices()
+        self.lane_devices: List[Optional[Any]] = (
+            [devs[i % len(devs)] for i in range(n_lanes)]
+            if len(devs) > 1 else [None] * n_lanes)
+        self.sp_mode = sp_mode
         first = BatchedChunkExecutor(cfg=cfg, params=params, seed=seed,
                                      max_streams=max_streams,
                                      context_backend=context_backend,
-                                     engine=engine)
+                                     engine=engine,
+                                     device=self.lane_devices[0])
         self.engine = first.pool.engine
         self.executors: List[Any] = [first]
-        for _ in range(n_lanes - 1):
+        for lane in range(1, n_lanes):
             self.executors.append(BatchedChunkExecutor(
                 cfg=first.cfg, params=first.params,
                 max_streams=max_streams, context_backend=context_backend,
-                engine=self.engine))
+                engine=self.engine, device=self.lane_devices[lane]))
         self.lane_of: Dict[int, int] = {}
         self.n_migrations = 0
         self.n_sp_expands = 0
@@ -89,6 +121,8 @@ class LanePool:
         whole-chunk executor, which has no page pool)."""
         self = cls.__new__(cls)
         self.executors = [executor]
+        self.lane_devices = [getattr(executor, "device", None)]
+        self.sp_mode = "auto"
         pool = getattr(executor, "pool", None)
         self.engine = (pool.engine if pool is not None
                        else getattr(executor, "engine",
@@ -113,8 +147,17 @@ class LanePool:
     def chunks_of(self, sid: int) -> List[Any]:
         return self.executor_of(sid).chunks.get(sid, [])
 
+    def serving_ex(self, sid: int) -> Any:
+        """The executor currently SERVING ``sid``: its donor lane during
+        a batch-axis SP borrow (the stream runs there as a guest batch
+        row), its home lane otherwise."""
+        link = self.sp_link(sid)
+        if link is not None and getattr(link, "mode", "solo") == "batch":
+            return self.executors[link.donor]
+        return self.executor_of(sid)
+
     def is_inflight(self, sid: int) -> bool:
-        return sid in self.executor_of(sid).inflight
+        return sid in self.serving_ex(sid).inflight
 
     def any_inflight(self) -> bool:
         return any(ex.inflight for ex in self.executors)
@@ -123,7 +166,7 @@ class LanePool:
         return getattr(self.executor_of(sid), "sp_links", {}).get(sid)
 
     def remaining_estimate(self, sid: int) -> float:
-        return self.executor_of(sid).remaining_estimate(sid)
+        return self.serving_ex(sid).remaining_estimate(sid)
 
     def latency_ema_get(self, key: str, default: float) -> float:
         """Measured chunk-latency EMA for a fidelity, averaged over the
@@ -148,7 +191,7 @@ class LanePool:
                                                      protect=protect)
 
     def abort_chunk(self, sid: int) -> None:
-        self.executor_of(sid).abort_chunk(sid)
+        self.serving_ex(sid).abort_chunk(sid)
 
     def reset_condition(self, sid: int, seed: int) -> bool:
         """Prompt switch: fresh cond encode + sink rewrite on the home
@@ -164,42 +207,97 @@ class LanePool:
             self.sp_release(sid)
         self.executor_of(sid).retire(sid)
 
+    # ---- real device moves -------------------------------------------------
+    def _measured_put(self, tree: Any, device: Any, *,
+                      cross_node: bool = False,
+                      kind: str = "move") -> Any:
+        """Move a pytree of arrays onto ``device`` with
+        ``jax.device_put``, timing the copy wall-to-wall (source blocked
+        first so pending compute doesn't pollute the measurement) and
+        recording the measured move on the shared engine — which
+        calibrates its bandwidth model from the observed bytes/sec."""
+        jax.block_until_ready(tree)
+        n = sum(int(x.nbytes) for x in jax.tree_util.tree_leaves(tree))
+        t0 = time.perf_counter()
+        moved = jax.device_put(tree, device)
+        jax.block_until_ready(moved)
+        self.engine.record_measured(n, time.perf_counter() - t0,
+                                    cross_node=cross_node, kind=kind)
+        return moved
+
     # ---- decision apply: re-homing -----------------------------------------
     def migrate(self, sid: int, src: int, dst: int, *,
                 cross_node: bool = False) -> bool:
         """Apply one ``rehoming.Migration`` as a real KV move.  Returns
         False (decision dropped) when the stream is mid-chunk or
         SP-linked — states the planner excludes, re-checked here
-        because the executor, not the planner, owns ground truth."""
+        because the executor, not the planner, owns ground truth.
+
+        Device-backed lanes take the DIRECT path: the source's resident
+        pages are handed over as device arrays and ``jax.device_put``
+        onto the destination lane's device (measured, recorded on the
+        engine), landing straight in the destination page table — no
+        host round trip.  Lanes sharing one device (or a parked source
+        stream) keep the host-spill path; either way the stream's KV is
+        bit-identical after the move."""
         if self.lane_of.get(sid) != src or src == dst:
             return False
         src_ex, dst_ex = self.executors[src], self.executors[dst]
         if sid in src_ex.inflight or sid in src_ex.sp_links:
             return False
-        state = src_ex.export_stream(sid)
-        dst_ex.import_stream(sid, state, cross_node=cross_node)
+        dst_dev = getattr(dst_ex, "device", None)
+        direct = (dst_dev is not None
+                  and dst_dev != getattr(src_ex, "device", None)
+                  and src_ex.pool.resident(sid)
+                  and dst_ex.pool.can_admit())
+        state = src_ex.export_stream(sid, to_host=not direct)
+        n_bytes = int(state["pages"]["k"].nbytes
+                      + state["pages"]["v"].nbytes)
+        src_ex.pool.transfer_bytes_out += n_bytes
+        if direct:
+            state["pages"] = self._measured_put(
+                state["pages"], dst_dev, cross_node=cross_node,
+                kind="migration")
+        dst_ex.import_stream(sid, state, cross_node=cross_node,
+                             direct=direct)
         self.lane_of[sid] = dst
         # land it in the destination pool right away when there is room
         # — the import already charged the src->dst move, so this
         # restore is free; under pressure the stream stays parked and
         # rejoins via ensure_resident (a genuine second movement,
-        # charged then)
-        if dst_ex.pool.can_admit():
+        # charged then).  The direct path is already page-resident.
+        if not direct and dst_ex.pool.can_admit():
             dst_ex.pool.restore(sid, charge=False)
             dst_ex._boundary_cache.clear()
         self.n_migrations += 1
         return True
 
     # ---- decision apply: elastic SP ----------------------------------------
+    def _sp_mode_for(self, home_ex: Any, donor_ex: Any) -> str:
+        """Serving mode of a new SP link.  Lanes on DIFFERENT devices
+        always use batch-axis SP: the fused head-split step reads both
+        pools in ONE jitted call, which JAX rejects across committed
+        devices.  Same-device lanes follow ``sp_mode`` ("auto" keeps
+        the legacy solo head-split; "batch" forces the batch axis —
+        how the parity tests compare the two on one device)."""
+        if getattr(home_ex, "device", None) != \
+                getattr(donor_ex, "device", None):
+            return "batch"
+        return "batch" if self.sp_mode == "batch" else "solo"
+
     def sp_expand(self, sid: int, donor: int,
                   streams: Optional[Dict[int, Stream]] = None) -> bool:
         """Apply one SP expand: allocate a donor-pool page set, copy the
-        stream's upper half KV heads into it (App. C.4 head-partition
-        transfer, half the stream's bytes), and link the stream so
-        ``run_step`` takes the head-split path.  False when the apply
-        is impossible right now (non-paged backend, stream not
-        resident, donor pool unevictable) — the decision is dropped
-        and the planner may re-issue it next tick."""
+        stream's KV into it, and link the stream.  Solo mode copies the
+        UPPER half heads (App. C.4 head-partition transfer, half the
+        stream's bytes) and ``run_step`` takes the head-split path;
+        batch mode copies FULL heads onto the donor's device (a
+        measured ``jax.device_put`` when the lanes are device-backed)
+        and registers the stream as a donor-lane guest — it joins the
+        donor's own micro-batches instead of consuming a solo dispatch
+        slot.  False when the apply is impossible right now (non-paged
+        backend, stream not resident, donor pool unevictable) — the
+        decision is dropped and the planner may re-issue it next tick."""
         home = self.lane_of.get(sid)
         if home is None or donor == home:
             return False
@@ -218,18 +316,38 @@ class LanePool:
             # donor's in-flight streams AND any live SP mirrors)
             if not donor_ex._evict_one(streams, protect={sid}):
                 return False
+        mode = self._sp_mode_for(ex, donor_ex)
         dpool.ledger.take(sid, chunks=ex.pool.ledger.chunks[sid])
         dpool._dev_tables.pop(sid, None)
-        n_bytes = self._copy_sp_half(ex.pool, dpool, sid)
+        if mode == "batch":
+            n_bytes = self._copy_sp_full(ex.pool, dpool, sid)
+            # the donor serves the guest with the HOME stream's noise
+            # cursor and playout history: the chunk/fidelity lists are
+            # SHARED objects (one system of record), the noise counter
+            # is synced here and synced back on release
+            donor_ex.sp_guests[sid] = SPGuest(home=home, pool=ex.pool)
+            donor_ex.chunk_seq[sid] = ex.chunk_seq.get(sid, 0)
+            donor_ex.chunks[sid] = ex.chunks[sid]
+            donor_ex.fidelity_log[sid] = ex.fidelity_log[sid]
+        else:
+            n_bytes = self._copy_sp_half(ex.pool, dpool, sid)
         t = self.engine.transfer(time.perf_counter(), n_bytes,
                                  cross_node=False)
-        ex._pending_wait[sid] = ex._pending_wait.get(sid, 0.0) \
-            + t.residual_wait
-        ex.transfer_wait_s += t.residual_wait
-        ex.pool.transfer_bytes += n_bytes
-        ex.sp_links[sid] = SPLink(donor=donor, pool=dpool)
+        # the modeled dispatcher wait rides on the stream's next
+        # completed chunk — which batch mode completes on the DONOR
+        serving = donor_ex if mode == "batch" else ex
+        serving._pending_wait[sid] = \
+            serving._pending_wait.get(sid, 0.0) + t.residual_wait
+        serving.transfer_wait_s += t.residual_wait
+        # per-lane attribution: the mirror bytes LEAVE the home pool and
+        # LAND in the donor pool (charging the home pool's aggregate for
+        # pages the donor received made per-lane rows lie)
+        ex.pool.transfer_bytes_out += n_bytes
+        dpool.transfer_bytes_in += n_bytes
+        ex.sp_links[sid] = SPLink(donor=donor, pool=dpool, mode=mode)
         donor_ex.sp_mirrors.add(sid)   # shield the mirror from eviction
         ex._boundary_cache.clear()
+        donor_ex._boundary_cache.clear()
         self.n_sp_expands += 1
         return True
 
@@ -248,17 +366,47 @@ class LanePool:
         dpool.v = kvcache.pool_write_pages_heads(dpool.v, vh, drows, h2)
         return kh.nbytes + vh.nbytes
 
+    def _copy_sp_full(self, home: KVPool, dpool: KVPool,
+                      sid: int) -> int:
+        """Copy the stream's FULL-head pages into the donor pool's page
+        set (batch-axis SP): a measured ``jax.device_put`` when the
+        pools live on different devices.  Verbatim copy — the donor
+        then serves the stream with the ordinary SP1 step over
+        bit-identical values."""
+        rows = jnp.asarray(home.ledger.tables[sid], jnp.int32)
+        pages = {"k": home.k[:, rows], "v": home.v[:, rows]}
+        if dpool.device is not None and dpool.device != home.device:
+            pages = self._measured_put(pages, dpool.device,
+                                       kind="sp-expand")
+        dpool._write(dpool.ledger.tables[sid], pages["k"], pages["v"])
+        return int(pages["k"].nbytes + pages["v"].nbytes)
+
     def sp_release(self, sid: int) -> None:
         """Apply one SP release at a safe boundary: drop the link and
-        free the donor pages.  The home pool kept full heads, so
-        nothing moves back.  Idempotent."""
+        free the donor pages.  The home pool kept full heads (batch
+        mode shipped each completed chunk's KV home), so nothing moves
+        back; a batch-mode release also clears the guest registration
+        and carries the noise cursor home.  Idempotent."""
         ex = self.executor_of(sid)
         link = getattr(ex, "sp_links", {}).pop(sid, None)
         if link is None:
             return
+        donor_ex = self.executors[link.donor]
+        if link.mode == "batch":
+            assert sid not in donor_ex.inflight, \
+                "batch-axis SP release only at a chunk boundary"
+            donor_ex.sp_guests.pop(sid, None)
+            ex.chunk_seq[sid] = donor_ex.chunk_seq.pop(
+                sid, ex.chunk_seq.get(sid, 0))
+            donor_ex.chunks.pop(sid, None)        # shared list: home keeps it
+            donor_ex.fidelity_log.pop(sid, None)
+            w = donor_ex._pending_wait.pop(sid, 0.0)
+            if w:
+                ex._pending_wait[sid] = ex._pending_wait.get(sid, 0.0) + w
+            donor_ex._boundary_cache.clear()
         link.pool.ledger.drop(sid, spill=False)
         link.pool._dev_tables.pop(sid, None)
-        self.executors[link.donor].sp_mirrors.discard(sid)
+        donor_ex.sp_mirrors.discard(sid)
         ex._boundary_cache.clear()
         self.n_sp_releases += 1
 
@@ -275,8 +423,17 @@ class LanePool:
         compile on first use."""
         if self.n_lanes < 2:
             return
-        ex0, ex1 = self.executors[0], self.executors[1]
+        ex0 = self.executors[0]
         if getattr(ex0, "context_backend", None) != "paged":
+            return
+        # the fused two-pool head-split step only ever runs between
+        # lanes that SHARE a device (cross-device pairs use batch-axis
+        # SP, which rides the already-warm SP1 step) — warm it for the
+        # first same-device pair, or skip when every pair is split
+        ex1 = next((e for e in self.executors[1:]
+                    if getattr(e, "device", None)
+                    == getattr(ex0, "device", None)), None)
+        if ex1 is None or self.sp_mode == "batch":
             return
         cfg = ex0.cfg
         tc = A.chunk_tokens(cfg)

@@ -288,8 +288,20 @@ class StreamingSession:
         ex.begin_chunk(-1, HIGHEST_QUALITY, 0.0)
         while -1 in ex.inflight:
             ex.run_step([-1])
-        ex.retire(-1)
         self.top_latency = ex.latency_ema[HIGHEST_QUALITY.key]
+        # drop the calibration stream WITH its history: sid -1 must not
+        # leak ledger/page-table/device-table entries or generated
+        # chunks into the serving session
+        ex.retire(-1, drop_history=True)
+        # seed EVERY lane with the one measured prior (identical to
+        # lane 0's single-observation EMA), so lane 0 carries no
+        # warm-up asymmetry and cold lanes report honest R_u from their
+        # first chunk
+        step = self.top_latency / (HIGHEST_QUALITY.steps + 1)
+        for lex in self.lanes.executors:
+            lex.latency_ema[HIGHEST_QUALITY.key] = self.top_latency
+            if hasattr(lex, "step_ema"):
+                lex.step_ema[HIGHEST_QUALITY.key] = step
         self.chunk_seconds = (self.cfg.realtime_budget
                               or self.cfg.budget_factor * self.top_latency)
         time_scale = (self._profile.latency(HIGHEST_QUALITY)
@@ -498,6 +510,23 @@ class StreamingSession:
         runnables = {w.wid: queues.next_dispatch_set(w, streams, now)
                      for w in self.view.workers}
 
+        # batch-axis SP rerouting: a stream whose link is mode "batch"
+        # is served ON ITS DONOR lane as an extra row of the donor's
+        # own micro-batch (one fused jitted call co-serving donor
+        # streams + the borrowed stream) — it leaves its home lane's
+        # runnable list and never consumes a solo dispatch slot
+        guests: Dict[int, List[int]] = {}
+        for w in self.view.workers:
+            kept: List[int] = []
+            for sid in runnables[w.wid]:
+                link = self.lanes.sp_link(sid)
+                if (link is not None
+                        and getattr(link, "mode", "solo") == "batch"):
+                    guests.setdefault(link.donor, []).append(sid)
+                else:
+                    kept.append(sid)
+            runnables[w.wid] = kept
+
         # elastic SP2 reservation happens BEFORE any lane serves, so a
         # donor's step slot is genuinely consumed regardless of lane
         # iteration order (a donor with a smaller wid would otherwise
@@ -531,7 +560,8 @@ class StreamingSession:
         any_runnable = False
         for w in self.view.workers:
             runnable = runnables[w.wid]
-            if not runnable:
+            glist = guests.get(w.wid, [])
+            if not runnable and not glist:
                 continue
             any_runnable = True
             if w.wid in lent:
@@ -555,9 +585,12 @@ class StreamingSession:
             # the credit-ordered runnable set with streams that are — or
             # can be made — page-resident (credit-aware eviction); a
             # stream that cannot displace anyone defers one iteration.
-            sids: List[int] = []
+            # Batch-axis guests ride ON TOP of max_batch (their donor
+            # pages are already resident and eviction-protected), so a
+            # borrow adds capacity instead of displacing donor streams.
+            sids: List[int] = list(glist)
             for sid in runnable:
-                if len(sids) >= max_batch:
+                if len(sids) >= max_batch + len(glist):
                     break
                 if ex.ensure_resident(sid, streams, protect=sids + [sid]):
                     sids.append(sid)
@@ -566,7 +599,8 @@ class StreamingSession:
             for sid in sids:
                 self._begin_if_needed(ex, sid, now)
             groups = compose_batch(
-                sids, lambda sid: ex.inflight[sid].fidelity, max_batch)
+                sids, lambda sid: ex.inflight[sid].fidelity,
+                max_batch + len(glist))
             for grp in groups:
                 flights = {sid: ex.inflight[sid] for sid in grp}
                 completed, _ = ex.run_step(grp)

@@ -1,0 +1,229 @@
+"""Forced-device-count parity harness (run in a SUBPROCESS).
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set
+before JAX initializes, so these checks cannot run in the main pytest
+process (its JAX backend is already up with one device).  The driver
+(``tests/test_device_lanes.py``) launches this file with the flag in
+the environment; the assertions here cover the device-backed lane
+matrix:
+
+  1. cross-lane migration is a REAL ``jax.device_put`` move (measured,
+     recorded on the engine) and the stream's chunks stay bit-identical
+     to a never-migrated run;
+  2. elastic SP across devices takes batch-axis mode: the guest is
+     co-served in the donor's own fused jitted call (one ``run_step``)
+     and stays bit-identical to the SP1 step through expand, appends
+     under SP, and release;
+  3. (2 devices) a full StreamingSession applies a forced re-homing +
+     SP expand across real devices, bit-identical to the single-lane
+     session, with measured moves on the engine.
+
+Prints ``DEVICE-LANES-OK`` + a stats JSON on success; any assertion
+failure exits nonzero.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+N_DEV = int(sys.argv[1]) if len(sys.argv) > 1 else 2
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + f" --xla_force_host_platform_device_count="
+                             f"{N_DEV}").strip()
+
+import jax                                                   # noqa: E402
+import numpy as np                                           # noqa: E402
+
+from repro.configs.base import get_config                    # noqa: E402
+from repro.core.fidelity import FidelityConfig               # noqa: E402
+from repro.serve.lanes import LanePool                       # noqa: E402
+
+FID = FidelityConfig(2, 0.0, 2, "bf16")
+
+
+def tiny_cfg(window_chunks=2):
+    return dataclasses.replace(
+        get_config("ardit-self-forcing").reduced(),
+        n_layers=2, ardit_window_chunks=window_chunks)
+
+
+def gen_chunks(ex, sid, n=1, fid=FID):
+    out = []
+    for _ in range(n):
+        ex.begin_chunk(sid, fid, 0.0)
+        while sid in ex.inflight:
+            ex.run_step([sid])
+        out.append(np.asarray(ex.chunks[sid][-1]))
+    return out
+
+
+def device_of(arr):
+    return next(iter(arr.devices()))
+
+
+def check_migration(cfg, ref_params, ref_chunks_5):
+    """Real cross-device migration: measured move, committed landing,
+    bit-exact continuation."""
+    lanes = LanePool(2, cfg=cfg, params=ref_params, max_streams=3)
+    assert lanes.lane_devices[0] != lanes.lane_devices[1]
+    assert device_of(lanes.ex(0).pool.k) == lanes.lane_devices[0]
+    assert device_of(lanes.ex(1).pool.k) == lanes.lane_devices[1]
+    lanes.admit(5, 0, seed=0)
+    got = gen_chunks(lanes.ex(0), 5, 2)
+    n_meas, n_log = len(lanes.engine.measured), len(lanes.engine.log)
+    assert lanes.migrate(5, 0, 1)
+    # the direct path: one MEASURED device_put + one modeled transfer
+    assert len(lanes.engine.measured) == n_meas + 1
+    assert len(lanes.engine.log) == n_log + 1
+    m = lanes.engine.measured[-1]
+    assert m.kind == "migration" and m.n_bytes > 0 and m.seconds > 0
+    assert m.bytes_per_s > 0
+    # per-lane attribution: src sent, dst received, same bytes
+    assert lanes.ex(0).pool.transfer_bytes_out == m.n_bytes
+    assert lanes.ex(1).pool.transfer_bytes_in == m.n_bytes
+    # immediately page-resident on the destination DEVICE
+    assert lanes.ex(1).pool.resident(5)
+    assert device_of(lanes.ex(1).pool.k) == lanes.lane_devices[1]
+    got += gen_chunks(lanes.ex(1), 5, 2)
+    for c, (a, b) in enumerate(zip(ref_chunks_5, got)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"chunk {c} diverged across the device move")
+    lanes.ex(0).pool.ledger.check()
+    lanes.ex(1).pool.ledger.check()
+    return {"migration_bw": m.bytes_per_s, "migration_bytes": m.n_bytes}
+
+
+def check_batch_axis_sp(cfg, ref_params, ref_chunks_0):
+    """Cross-device SP goes batch-axis: guest co-served in the donor's
+    fused call, SP2 == SP1 bit-exactly through expand/append/release."""
+    lanes = LanePool(2, cfg=cfg, params=ref_params, max_streams=3)
+    lanes.admit(0, 0, seed=0)
+    lanes.admit(9, 1, seed=9)             # the donor's own stream
+    got = gen_chunks(lanes.ex(0), 0, 1)
+    assert lanes.sp_expand(0, 1)
+    link = lanes.sp_link(0)
+    assert link is not None and link.mode == "batch", \
+        "cross-device lanes must take batch-axis SP"
+    sp_moves = [m for m in lanes.engine.measured if m.kind == "sp-expand"]
+    assert len(sp_moves) == 1 and sp_moves[0].n_bytes > 0
+    # co-serve: guest 0 + donor stream 9 advance in ONE fused jitted
+    # call on the donor lane — no solo dispatch slot consumed
+    donor_ex = lanes.ex(1)
+    donor_ex.begin_chunk(0, FID, 0.0)
+    donor_ex.begin_chunk(9, FID, 0.0)
+    while 0 in donor_ex.inflight:
+        completed, _ = donor_ex.run_step([0, 9])
+    assert 9 not in donor_ex.inflight, \
+        "same-fidelity co-batch must complete together"
+    got.append(np.asarray(donor_ex.chunks[0][-1]))
+    got += gen_chunks(donor_ex, 0, 1)     # another guest chunk, solo row
+    lanes.sp_release(0)
+    assert lanes.sp_link(0) is None
+    donor_ex.pool.ledger.check()
+    got += gen_chunks(lanes.ex(0), 0, 1)  # home serves again post-release
+    for c, (a, b) in enumerate(zip(ref_chunks_0, got)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"chunk {c}: batch-axis SP diverged from SP1")
+    return {"sp_expand_bytes": sp_moves[0].n_bytes}
+
+
+def check_session_2dev(cfg):
+    """A 2-device session applying a forced re-homing + SP expand stays
+    bit-identical to the single-lane session, with the moves measured."""
+    from repro.core.bmpr import StaticFidelity
+    from repro.core.elastic_sp import SPDecision
+    from repro.core.rehoming import Migration
+    from repro.serve.session import (SessionConfig, StreamingSession,
+                                     uniform_specs)
+    n, chunks = 2, 3
+    ref = StreamingSession(
+        SessionConfig(lanes=1, model_cfg=cfg, pool_streams=n + 1,
+                      verbose=False),
+        fidelity_policy=StaticFidelity(FID))
+    for spec in uniform_specs(n, chunks):
+        ref.submit(spec)
+    ref.run()
+    ref_chunks = {i: [np.asarray(c) for c in ref.handles[i].chunks]
+                  for i in range(n)}
+
+    sess = StreamingSession(
+        SessionConfig(lanes=2, model_cfg=cfg, pool_streams=n + 1,
+                      verbose=False),
+        fidelity_policy=StaticFidelity(FID))
+    for spec in uniform_specs(n, chunks):
+        sess.submit(spec)
+    state = {"mig": False, "sp": False}
+    orig_tick = sess.control.tick
+
+    def tick(view, now):
+        d = orig_tick(view, now)
+        s0, s1 = view.streams.get(0), view.streams.get(1)
+        if (not state["mig"] and s0 is not None and s0.chunks_done >= 1
+                and not s0.done and not sess.lanes.is_inflight(0)):
+            src = sess.lanes.lane_of[0]
+            d.migrations.append(Migration(0, src, 1 - src,
+                                          cross_node=False))
+            state["mig"] = True
+        if (not state["sp"] and s1 is not None and s1.chunks_done >= 1
+                and not s1.done
+                and sess.lanes.ex(sess.lanes.lane_of[1]).pool.resident(1)):
+            d.sp_decisions.append(
+                SPDecision(1, 1 - sess.lanes.lane_of[1], "expand"))
+            state["sp"] = True
+        return d
+
+    sess.control.tick = tick
+    res = sess.run()
+    assert res.n_migrations_applied >= 1
+    assert res.n_sp_expands_applied >= 1
+    kinds = {m.kind for m in res.engine.measured}
+    assert "migration" in kinds, \
+        "the applied re-homing must be a real measured device move"
+    assert "sp-expand" in kinds
+    for i in range(n):
+        got = [np.asarray(c) for c in sess.handles[i].chunks]
+        assert len(got) == chunks
+        for c in range(chunks):
+            np.testing.assert_array_equal(
+                ref_chunks[i][c], got[c],
+                err_msg=f"stream {i} chunk {c} diverged on device lanes")
+    st = res.engine.measured_stats()
+    assert st["count"] >= 2 and st["bytes_per_s"] > 0
+    return {"session_measured": st}
+
+
+def main():
+    assert jax.local_device_count() == N_DEV, \
+        f"forced device count not honored: {jax.local_device_count()}"
+    cfg = tiny_cfg()
+    # references: one single-lane executor per sid (sid seeds the noise)
+    ref_pool = LanePool(1, cfg=cfg, max_streams=3)
+    ref_ex = ref_pool.ex(0)
+    ref_ex.admit(5, seed=0)
+    ref5 = gen_chunks(ref_ex, 5, 4)
+    ref_ex2 = LanePool(1, cfg=cfg, params=ref_ex.params,
+                       max_streams=3).ex(0)
+    ref_ex2.admit(0, seed=0)
+    ref0 = gen_chunks(ref_ex2, 0, 4)
+
+    stats = {"devices": N_DEV}
+    stats.update(check_migration(cfg, ref_ex.params, ref5))
+    stats.update(check_batch_axis_sp(cfg, ref_ex.params, ref0))
+    if N_DEV == 2:
+        stats.update(check_session_2dev(cfg))
+    if N_DEV >= 4:
+        # far-lane move on the wider mesh: lane 0 -> lane 3
+        lanes = LanePool(4, cfg=cfg, params=ref_ex.params, max_streams=3)
+        assert len({str(d) for d in lanes.lane_devices}) == 4
+        lanes.admit(5, 0, seed=0)
+        got = gen_chunks(lanes.ex(0), 5, 2)
+        assert lanes.migrate(5, 0, 3)
+        assert lanes.engine.measured[-1].kind == "migration"
+        got += gen_chunks(lanes.ex(3), 5, 2)
+        for a, b in zip(ref5, got):
+            np.testing.assert_array_equal(a, b)
+    print("DEVICE-LANES-OK", json.dumps(stats))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,405 @@
+"""Device-backed lanes: transfer attribution, measured-move
+calibration, batch-axis SP parity, warm-up hygiene, t_next units, and
+the forced-device-count matrix (subprocess: the XLA device-count flag
+must precede JAX initialization).
+
+In-process tests run on the default single-device runtime — they pin
+the accounting and the batch-axis SP *mechanism* (forced via
+``sp_mode="batch"`` on one device, where solo SP is also available for
+comparison); the subprocess harness re-runs migration/SP parity on
+real forced device meshes (2 fast, 4 slow)."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.fidelity import FidelityConfig
+from repro.core.state_plane import AsyncTransferEngine
+from repro.core.types import Stream
+from repro.serve.lanes import LanePool
+
+FID = FidelityConfig(2, 0.0, 2, "bf16")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def tiny_cfg(window_chunks=2):
+    return dataclasses.replace(
+        get_config("ardit-self-forcing").reduced(),
+        n_layers=2, ardit_window_chunks=window_chunks)
+
+
+def gen_chunks(ex, sid, n=1, fid=FID, sp=False):
+    out = []
+    for _ in range(n):
+        ex.begin_chunk(sid, fid, 0.0)
+        while sid in ex.inflight:
+            ex.run_step([sid], sp_serve=sp)
+        out.append(np.asarray(ex.chunks[sid][-1]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# satellite: SP-expand transfer attribution (fail-pre-fix)
+# ---------------------------------------------------------------------------
+
+def test_sp_expand_bytes_attributed_src_out_dst_in():
+    """Regression: ``sp_expand`` charged the mirror copy's bytes to the
+    HOME pool's aggregate although the pages land in the DONOR pool —
+    per-lane benchmark rows showed the donor receiving nothing.  The
+    bytes must appear as home ``out`` and donor ``in``, once each."""
+    lanes = LanePool(2, cfg=tiny_cfg(), max_streams=3)
+    lanes.admit(0, 0, seed=0)
+    gen_chunks(lanes.ex(0), 0, 1)
+    home_pool, donor_pool = lanes.ex(0).pool, lanes.ex(1).pool
+    assert home_pool.transfer_bytes == 0 == donor_pool.transfer_bytes
+    assert lanes.sp_expand(0, 1)
+    assert home_pool.transfer_bytes_out > 0
+    assert donor_pool.transfer_bytes_in == home_pool.transfer_bytes_out, \
+        "mirror bytes must land on the DONOR lane's inbound counter"
+    assert home_pool.transfer_bytes_in == 0
+    assert donor_pool.transfer_bytes_out == 0
+
+
+def test_spill_restore_split_by_direction():
+    """The back-compat aggregate is the sum of the new directional
+    counters: a spill charges ``out``, its restore charges ``in``."""
+    from repro.core.types import Stream as S
+    lanes = LanePool(1, cfg=tiny_cfg(), max_streams=1)
+    ex = lanes.ex(0)
+    streams = {}
+    for sid in (0, 1):
+        s = S(sid=sid, arrival=0.0, target_chunks=4, chunk_seconds=1.0,
+              home=0, ttfc_slack=1.0)
+        s.credit = float(sid)
+        streams[sid] = s
+        ex.admit(sid, seed=sid, streams=streams)
+    # admitting 1 evicted 0 (pool holds one stream)
+    assert ex.pool.transfer_bytes_out > 0
+    out_before = ex.pool.transfer_bytes_out
+    assert ex.ensure_resident(0, streams)
+    assert ex.pool.transfer_bytes_in > 0
+    assert ex.pool.transfer_bytes == \
+        ex.pool.transfer_bytes_in + ex.pool.transfer_bytes_out
+    assert ex.pool.transfer_bytes_out > out_before    # 1 spilled out
+
+
+# ---------------------------------------------------------------------------
+# satellite: measured transfers calibrate the bandwidth model
+# ---------------------------------------------------------------------------
+
+def test_measured_moves_calibrate_bw_intra():
+    eng = AsyncTransferEngine(bw_intra=200e9, n_layers=2)
+    assert eng.measured_stats()["count"] == 0
+    eng.record_measured(1000, 1e-6, kind="migration")   # 1e9 B/s
+    # first observation replaces the offline constant
+    assert eng.bw_intra == pytest.approx(1e9)
+    assert eng.bw_intra_model == 200e9                  # model kept
+    eng.record_measured(3000, 1e-6, kind="sp-expand")   # 3e9 B/s
+    # EMA blend thereafter
+    assert eng.bw_intra == pytest.approx(0.5 * 1e9 + 0.5 * 3e9)
+    st = eng.measured_stats()
+    assert st["count"] == 2 and st["bytes"] == 4000
+    assert st["bytes_per_s"] == pytest.approx(4000 / 2e-6)
+    # the modeled timeline now uses the calibrated value
+    t = eng.transfer(0.0, 2_000_000, cross_node=False)
+    assert t.total == pytest.approx(eng.overhead + 2_000_000 / eng.bw_intra)
+    # opting out keeps the constants fixed
+    frozen = AsyncTransferEngine(bw_intra=200e9, calibrate=False)
+    frozen.record_measured(1000, 1e-6)
+    assert frozen.bw_intra == 200e9
+    assert len(frozen.measured) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: t_next units audit (fail-pre-fix)
+# ---------------------------------------------------------------------------
+
+def test_t_next_is_a_validated_duration():
+    """Regression: ``Stream.t_next`` silently accepted any float, so a
+    caller storing an absolute completion time (or garbage) flew under
+    the PR 5 ``t_next > 0`` release guard unnoticed.  The property now
+    rejects values that cannot be a latency (negative / non-finite) —
+    both writers (session ``_begin_if_needed`` and the simulator cost
+    path) go through it."""
+    s = Stream(sid=0, arrival=0.0, target_chunks=4, chunk_seconds=1.0,
+               home=0, ttfc_slack=1.0)
+    assert s.t_next == 0.0                 # "no estimate yet" default
+    s.t_next = 0.25                        # a real T_u duration
+    assert s.t_next == 0.25
+    for bogus in (-0.1, float("inf"), float("nan"), -1e9):
+        with pytest.raises(ValueError):
+            s.t_next = bogus
+    assert s.t_next == 0.25                # rejected writes don't stick
+
+
+def test_t_next_guard_semantics_in_release_plan():
+    """The release guard compares two DURATIONS: credit >= 2 * T_u.
+    With t_next validated, an absolute-timestamp-sized value can only
+    enter deliberately — and the guard math stays meaningful."""
+    from repro.core import elastic_sp
+    from repro.core.types import ClusterView, Worker
+    s = Stream(sid=0, arrival=0.0, target_chunks=8, chunk_seconds=1.0,
+               home=0, ttfc_slack=1.0)
+    s.sp_donor = 1
+    view = ClusterView({0: s}, [Worker(0, 0), Worker(1, 0)],
+                       workers_per_node=2)
+    view.workers[1].donated_to = 0
+    s.t_next = 0.0                         # no estimate: guard must hold
+    s.credit = 100.0
+    assert not any(d.kind == "release"
+                   for d in elastic_sp.plan_elastic_sp(view, 0.0))
+    s.t_next = 0.5                         # T_u duration; C_u >= 2*T_u
+    assert any(d.kind == "release"
+               for d in elastic_sp.plan_elastic_sp(view, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# satellite: warm-up calibration stream leaves no residue
+# ---------------------------------------------------------------------------
+
+def test_warmup_calibration_stream_fully_purged():
+    """The sid -1 calibration chunk ran on lane 0 only; after
+    ``retire(-1, drop_history=True)`` no per-stream state may survive
+    and lane 0's priors must equal every other lane's — lane 0 starts
+    bit-identical to its peers."""
+    from repro.core.bmpr import StaticFidelity
+    from repro.serve.session import SessionConfig, StreamingSession
+    sess = StreamingSession(
+        SessionConfig(lanes=2, model_cfg=tiny_cfg(), pool_streams=3,
+                      verbose=False),
+        fidelity_policy=StaticFidelity(FID))
+    ex0, ex1 = sess.lanes.ex(0), sess.lanes.ex(1)
+    for ex in (ex0, ex1):
+        assert -1 not in ex.chunks, "generated chunks leaked"
+        assert -1 not in ex.fidelity_log, "fidelity history leaked"
+        assert -1 not in ex.chunk_seq
+        assert -1 not in ex.inflight
+        assert -1 not in ex._pending_wait
+        assert -1 not in ex.pool.ledger.tables, "page table leaked"
+        assert -1 not in ex.pool.ledger.chunks, "ledger count leaked"
+        assert -1 not in ex.pool.ledger.spilled
+        assert -1 not in ex.pool._dev_tables, "device table leaked"
+        assert -1 not in ex.pool._spill
+        ex.pool.ledger.check()
+    # all pages back in the free list on the calibration lane
+    assert ex0.pool.free_pages == ex0.pool.n_pages
+    # priors symmetric: the one measured warm-up seeds EVERY lane
+    assert ex0.latency_ema == ex1.latency_ema
+    assert ex0.step_ema == ex1.step_ema
+    assert sess.top_latency > 0.0
+
+
+def test_sequential_warmup_purged():
+    from repro.core.bmpr import StaticFidelity
+    from repro.serve.session import SessionConfig, StreamingSession
+    sess = StreamingSession(
+        SessionConfig(executor="sequential", verbose=False),
+        fidelity_policy=StaticFidelity(FID))
+    ex = sess.executor
+    assert -1 not in ex.streams and -1 not in ex.chunks
+    assert -1 not in ex.fidelity_log and -1 not in ex.inflight
+    assert sess.top_latency > 0.0
+
+
+# ---------------------------------------------------------------------------
+# batch-axis SP on one device (forced): parity + co-serve semantics
+# ---------------------------------------------------------------------------
+
+def test_batch_axis_sp_equals_solo_sp_and_sp1():
+    """Forced ``sp_mode="batch"`` on one device: the borrowed stream is
+    co-served as a donor batch row and its chunks are bit-identical to
+    both the solo head-split path and plain SP1 — through expand,
+    appends under SP, and release (home pool stays system of record)."""
+    cfg = tiny_cfg()
+    ref_ex = LanePool(1, cfg=cfg, max_streams=3).ex(0)
+    ref_ex.admit(0, seed=0)
+    ref = gen_chunks(ref_ex, 0, 4)                      # SP1 reference
+
+    solo = LanePool(2, cfg=cfg, params=ref_ex.params, max_streams=3)
+    solo.admit(0, 0, seed=0)
+    got_solo = gen_chunks(solo.ex(0), 0, 1)
+    assert solo.sp_expand(0, 1)
+    assert solo.sp_link(0).mode == "solo"               # default on 1 dev
+    got_solo += gen_chunks(solo.ex(0), 0, 2, sp=True)
+    solo.sp_release(0)
+    got_solo += gen_chunks(solo.ex(0), 0, 1)
+
+    batch = LanePool(2, cfg=cfg, params=ref_ex.params, max_streams=3,
+                     sp_mode="batch")
+    batch.admit(0, 0, seed=0)
+    batch.admit(9, 1, seed=9)                           # donor's own work
+    got_batch = gen_chunks(batch.ex(0), 0, 1)
+    assert batch.sp_expand(0, 1)
+    link = batch.sp_link(0)
+    assert link is not None and link.mode == "batch"
+    assert 0 in batch.ex(1).sp_guests
+    assert batch.serving_ex(0) is batch.ex(1)           # guest routed
+    donor_ex = batch.ex(1)
+    # ONE fused call co-serves the guest and the donor's own stream
+    donor_ex.begin_chunk(0, FID, 0.0)
+    donor_ex.begin_chunk(9, FID, 0.0)
+    while 0 in donor_ex.inflight:
+        donor_ex.run_step([0, 9])
+    assert 9 not in donor_ex.inflight
+    got_batch.append(np.asarray(donor_ex.chunks[0][-1]))
+    got_batch += gen_chunks(donor_ex, 0, 1)
+    # the home pool tracked every guest append (system of record):
+    # full-head pages identical in both pools
+    rows_h = batch.ex(0).pool.ledger.tables[0]
+    rows_d = donor_ex.pool.ledger.tables[0]
+    np.testing.assert_array_equal(
+        np.asarray(batch.ex(0).pool.k[:, rows_h]),
+        np.asarray(donor_ex.pool.k[:, rows_d]))
+    batch.sp_release(0)
+    assert 0 not in donor_ex.sp_guests
+    assert 0 not in donor_ex.chunk_seq and 0 not in donor_ex.chunks
+    donor_ex.pool.ledger.check()
+    got_batch += gen_chunks(batch.ex(0), 0, 1)          # home continues
+    for c in range(4):
+        np.testing.assert_array_equal(
+            ref[c], got_solo[c],
+            err_msg=f"chunk {c}: solo SP2 diverged from SP1")
+        np.testing.assert_array_equal(
+            ref[c], got_batch[c],
+            err_msg=f"chunk {c}: batch-axis SP diverged from SP1")
+
+
+def test_batch_linked_stream_must_not_run_at_home():
+    """The home lane stepping a batch-linked stream would desync the two
+    page sets — the executor refuses."""
+    cfg = tiny_cfg()
+    lanes = LanePool(2, cfg=cfg, max_streams=3, sp_mode="batch")
+    lanes.admit(0, 0, seed=0)
+    gen_chunks(lanes.ex(0), 0, 1)
+    assert lanes.sp_expand(0, 1)
+    ex0 = lanes.ex(0)
+    ex0.begin_chunk(0, FID, 0.0)
+    with pytest.raises(AssertionError, match="donor lane"):
+        ex0.run_step([0])
+    ex0.abort_chunk(0)
+    lanes.sp_release(0)
+
+
+def test_batch_guest_protected_from_donor_eviction():
+    """A batch-axis guest's donor pages (and the linked stream's home
+    pages) are not eviction victims mid-borrow."""
+    from repro.core.types import Stream as S
+    cfg = tiny_cfg()
+    lanes = LanePool(2, cfg=cfg, max_streams=2, sp_mode="batch")
+    streams = {}
+    for sid, lane, credit in ((0, 0, 9.0), (10, 1, 5.0), (11, 1, 4.0)):
+        lanes.admit(sid, lane, seed=sid)
+        s = S(sid=sid, arrival=0.0, target_chunks=8, chunk_seconds=1.0,
+              home=lane, ttfc_slack=1.0)
+        s.credit = credit
+        streams[sid] = s
+    gen_chunks(lanes.ex(0), 0, 1)
+    assert lanes.sp_expand(0, 1, streams)
+    assert lanes.ex(1).pool.resident(0)
+    lanes.ex(1).admit(12, seed=12, streams=streams)
+    streams[12] = streams[11]
+    assert lanes.ex(1).pool.resident(0), \
+        "batch-axis guest evicted from the donor pool mid-borrow"
+    assert lanes.ex(0).pool.resident(0), \
+        "linked stream's home pages evicted mid-borrow"
+    gen_chunks(lanes.ex(1), 0, 1)                  # guest still serves
+    lanes.sp_release(0)
+
+
+def test_multi_lane_session_batch_mode_bit_identical():
+    """End-to-end: a 2-lane session with ``sp_mode="batch"`` (guests
+    rerouted through ``_dispatch_round`` onto the donor's micro-batch)
+    completes bit-identical to the single-lane session under a forced
+    expand."""
+    from repro.core.bmpr import StaticFidelity
+    from repro.core.elastic_sp import SPDecision
+    from repro.serve.session import (SessionConfig, StreamingSession,
+                                     uniform_specs)
+    cfg = tiny_cfg()
+    n, chunks = 2, 3
+    ref = StreamingSession(
+        SessionConfig(lanes=1, model_cfg=cfg, pool_streams=n + 1,
+                      verbose=False),
+        fidelity_policy=StaticFidelity(FID))
+    for spec in uniform_specs(n, chunks):
+        ref.submit(spec)
+    ref.run()
+    ref_chunks = {i: [np.asarray(c) for c in ref.handles[i].chunks]
+                  for i in range(n)}
+
+    sess = StreamingSession(
+        SessionConfig(lanes=2, model_cfg=cfg, pool_streams=n + 1,
+                      verbose=False),
+        fidelity_policy=StaticFidelity(FID))
+    sess.lanes.sp_mode = "batch"
+    for spec in uniform_specs(n, chunks):
+        sess.submit(spec)
+    state = {"sp": False}
+    orig_tick = sess.control.tick
+
+    def tick(view, now):
+        d = orig_tick(view, now)
+        s1 = view.streams.get(1)
+        if (not state["sp"] and s1 is not None and s1.chunks_done >= 1
+                and not s1.done
+                and sess.lanes.ex(sess.lanes.lane_of[1]).pool.resident(1)):
+            d.sp_decisions.append(
+                SPDecision(1, 1 - sess.lanes.lane_of[1], "expand"))
+            state["sp"] = True
+        return d
+
+    sess.control.tick = tick
+    res = sess.run()
+    assert res.n_sp_expands_applied >= 1
+    for i in range(n):
+        got = [np.asarray(c) for c in sess.handles[i].chunks]
+        assert len(got) == chunks
+        for c in range(chunks):
+            np.testing.assert_array_equal(
+                ref_chunks[i][c], got[c],
+                err_msg=f"stream {i} chunk {c} diverged under "
+                        f"batch-axis SP serving")
+    for ex in sess.lanes.executors:
+        ex.pool.ledger.check()
+        assert not ex.sp_guests and not ex.sp_links
+
+
+# ---------------------------------------------------------------------------
+# forced-device-count matrix (subprocess: flag precedes JAX init)
+# ---------------------------------------------------------------------------
+
+def _run_harness(n_devices: int) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count="
+                          f"{n_devices}").strip()
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(REPO, "tests", "device_lane_harness.py"),
+         str(n_devices)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO)
+    assert proc.returncode == 0, \
+        f"harness failed:\n{proc.stdout}\n{proc.stderr}"
+    assert "DEVICE-LANES-OK" in proc.stdout, proc.stdout
+    return proc.stdout
+
+
+def test_forced_2_device_parity_matrix():
+    """2 forced host devices: real cross-device migration (measured),
+    batch-axis SP parity, and the full-session acceptance check."""
+    out = _run_harness(2)
+    assert '"devices": 2' in out
+
+
+@pytest.mark.slow
+def test_forced_4_device_parity_matrix():
+    """4 forced host devices: the same matrix plus a far-lane move on
+    the wider mesh."""
+    out = _run_harness(4)
+    assert '"devices": 4' in out

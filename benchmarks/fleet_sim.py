@@ -1,0 +1,173 @@
+"""Fleet-scale front-door benchmark: vectorized tick + admission control.
+
+Three cells over one fleet scenario (flash-crowd, 2000 streams, 64
+workers — the scale the vectorized control tick exists for):
+
+  1. baseline     — the scalar control tick (``vectorized=False``),
+                    ticks/s from the per-tick wall clock
+  2. vectorized   — the numpy-batched tick; reported speedup is the
+                    acceptance gate (>= 5x), and the per-stream result
+                    signature is checked bit-identical to the baseline
+                    (``parity_ok`` — the speed must cost nothing)
+  3. front_door   — vectorized + SLO-aware admission/autoscaling:
+                    admit/queue/reject outcomes, workers added, and
+                    ``hard_failures`` (streams still waiting at drain —
+                    the gate requires ZERO: every arrival is either
+                    served or deliberately shed, never lost)
+
+``--calibrate`` adds a sim-vs-real cell: a small REAL session on this
+host (tiny AR-DiT), ``calibration.fit_session`` of its measured EMAs,
+then the SAME specs replayed through the calibrated simulator; the
+QoE/TTFC agreement (pinned tolerances) lands in the JSON for
+``check_bench.py --fleet`` to gate.
+
+Results go to ``BENCH_fleet_sim.json`` (``--json PATH``) so nightly CI
+tracks ticks/s, admission outcomes and calibration drift as artifacts.
+
+    PYTHONPATH=src python benchmarks/fleet_sim.py \
+        [--streams 2000] [--workers 64] [--rate 20] [--seed 7] \
+        [--calibrate] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sched_sim.frontdoor import FrontDoorConfig
+from repro.sched_sim.metrics import summarize
+from repro.sched_sim.policies import make_policy
+from repro.sched_sim.simulator import SimConfig, Simulator
+from repro.sched_sim.workloads import WORKLOADS
+
+
+def signature(res):
+    """Per-stream result signature for scalar-vs-vectorized parity."""
+    per_stream = sorted(
+        (s.sid, tuple(s.ready_times), tuple(s.deadlines),
+         tuple(s.fidelity_log), s.stall_time)
+        for s in res.streams.values())
+    return (per_stream, res.fidelity_counts, res.worker_tier_samples,
+            res.n_rehomings, res.n_sp_events)
+
+
+def run_cell(specs, n_workers: int, *, vectorized: bool,
+             front_door=None):
+    cfg = SimConfig(n_workers=n_workers, vectorized=vectorized,
+                    front_door=front_door)
+    sim = Simulator(cfg, specs, make_policy("slackserve"))
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    ticks = len(res.tick_wall)
+    tick_time = sum(res.tick_wall)
+    return res, {
+        "wall_s": round(wall, 3),
+        "n_ticks": ticks,
+        "tick_time_s": round(tick_time, 3),
+        "ticks_per_s": round(ticks / tick_time, 1) if tick_time else None,
+        "qoe": round(summarize(res).qoe, 4),
+    }
+
+
+def run_calibration(n_streams: int, chunks: int, seed: int):
+    """Small REAL session -> fitted cost model -> calibrated sim replay
+    of the SAME specs -> pinned-tolerance agreement."""
+    from repro.sched_sim.calibration import agreement, fit_session
+    from repro.serve.session import (SessionConfig, StreamingSession,
+                                     cap_specs)
+    specs = cap_specs(WORKLOADS["steady"](n=n_streams, rate=2.0,
+                                          seed=seed), chunks)
+    session = StreamingSession(SessionConfig(executor="batched",
+                                             verbose=False))
+    for spec in specs:
+        session.submit(spec)
+    real = summarize(session.run())
+    report = fit_session(session)
+    sim_cfg = report.sim_config(n_workers=1, workers_per_node=1)
+    sim_res = Simulator(sim_cfg, specs, make_policy(
+        "slackserve", model=report.model,
+        profile=report.profile())).run()
+    agr = agreement(real, summarize(sim_res))
+    return {
+        "n_streams": n_streams, "chunks": chunks,
+        "scale": round(report.scale, 4),
+        "ratios": {k: round(v, 4) for k, v in report.ratios.items()},
+        "bw_intra": report.bw_intra,
+        "agreement": agr, "ok": agr["ok"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=2000)
+    ap.add_argument("--workers", type=int, default=64)
+    ap.add_argument("--workload", default="flash_crowd")
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--calibrate", action="store_true",
+                    help="add the sim-vs-real calibration cell "
+                         "(runs a small real session on this host)")
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_fleet_sim.json"))
+    args = ap.parse_args()
+
+    specs = WORKLOADS[args.workload](n=args.streams, rate=args.rate,
+                                     seed=args.seed)
+    out = {"scenario": {
+        "workload": args.workload, "streams": args.streams,
+        "workers": args.workers, "rate": args.rate, "seed": args.seed,
+    }}
+
+    print(f"fleet: {args.workload} n={args.streams} rate={args.rate} "
+          f"workers={args.workers}")
+    res_s, out["scalar"] = run_cell(specs, args.workers,
+                                    vectorized=False)
+    print(f"  scalar     : {out['scalar']}")
+    res_v, out["vectorized"] = run_cell(specs, args.workers,
+                                        vectorized=True)
+    print(f"  vectorized : {out['vectorized']}")
+
+    speedup = (out["vectorized"]["ticks_per_s"]
+               / out["scalar"]["ticks_per_s"])
+    parity_ok = signature(res_s) == signature(res_v)
+    out["speedup"] = round(speedup, 2)
+    out["parity_ok"] = parity_ok
+    print(f"  speedup    : {speedup:.2f}x  parity={'OK' if parity_ok else 'BROKEN'}")
+
+    res_f, fd_cell = run_cell(specs, args.workers, vectorized=True,
+                              front_door=FrontDoorConfig())
+    adm = dict(res_f.admission)
+    out["front_door"] = {
+        **fd_cell, **adm,
+        "hard_failures": adm.get("waiting_at_end", 0),
+        "n_workers_final": res_f.n_workers_final,
+    }
+    print(f"  front_door : admitted={adm.get('admitted')} "
+          f"queued={adm.get('queued')} rejected={adm.get('rejected')} "
+          f"scale_outs={adm.get('scale_outs')} "
+          f"workers {args.workers}->{res_f.n_workers_final} "
+          f"hard_failures={out['front_door']['hard_failures']} "
+          f"qoe={fd_cell['qoe']}")
+
+    if args.calibrate:
+        out["calibration"] = run_calibration(n_streams=3, chunks=3,
+                                             seed=args.seed)
+        agr = out["calibration"]["agreement"]
+        print(f"  calibration: qoe {agr['qoe_sim']} vs {agr['qoe_real']}"
+              f" ttfc {agr['ttfc_sim_s']}s vs {agr['ttfc_real_s']}s "
+              f"-> {'OK' if agr['ok'] else 'DISAGREE'}")
+
+    path = os.path.abspath(args.json)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,17 @@ and fail on a >15% streams/s regression in any tracked scenario.
 
     python scripts/check_bench.py NEW.json PREV.json [--threshold 0.15]
 
+``--fleet`` switches to ``BENCH_fleet_sim.json`` gating instead:
+
+    python scripts/check_bench.py --fleet NEW.json PREV.json
+
+Absolute gates (fail even with no history): vectorized-tick speedup
+>= --min-speedup (default 5x), scalar-vs-vectorized ``parity_ok``,
+front-door ``hard_failures == 0`` (every arrival served or shed, never
+lost), and — when the calibration cell ran — sim-vs-real agreement
+``ok`` under the pinned tolerances.  Trajectory gate: vectorized
+ticks/s vs the previous artifact, same threshold rules as streams/s.
+
 Tracked scenarios: ``sequential``, ``batched/<backend>``,
 ``oversubscribed/<backend>`` and ``lanes/<n>`` ``streams_per_s``
 entries; any other fields a scenario row carries (migration/SP counts,
@@ -39,6 +50,68 @@ def _rates(bench: dict) -> dict:
     return out
 
 
+def check_fleet(args) -> int:
+    """Gate ``BENCH_fleet_sim.json``: absolute acceptance criteria
+    first, then the ticks/s trajectory against the previous artifact."""
+    with open(args.new) as f:
+        new = json.load(f)
+    failed = False
+
+    speedup = new.get("speedup") or 0.0
+    flag = "ok" if speedup >= args.min_speedup else "FAIL"
+    print(f"  speedup          {speedup:.2f}x "
+          f"(gate >= {args.min_speedup}x) {flag}")
+    failed |= speedup < args.min_speedup
+
+    parity = bool(new.get("parity_ok"))
+    print("  parity           " +
+          ("ok" if parity else
+           "BROKEN: vectorized tick diverged from the scalar baseline"))
+    failed |= not parity
+
+    fd = new.get("front_door", {})
+    hard = fd.get("hard_failures", None)
+    if hard is None:
+        print("  front_door       missing from benchmark output FAIL")
+        failed = True
+    else:
+        print(f"  hard_failures    {hard} (gate == 0) "
+              f"{'ok' if hard == 0 else 'FAIL'}")
+        failed |= hard != 0
+
+    cal = new.get("calibration")
+    if cal is not None:
+        agr = cal.get("agreement", {})
+        ok = bool(cal.get("ok"))
+        print(f"  calibration      qoe_delta={agr.get('qoe_delta')} "
+              f"(tol {agr.get('qoe_tol')}), "
+              f"ttfc_rel={agr.get('ttfc_rel_err')} "
+              f"(tol {agr.get('ttfc_rel_tol')}) "
+              f"{'ok' if ok else 'DISAGREE'}")
+        failed |= not ok
+
+    new_r = (new.get("vectorized") or {}).get("ticks_per_s")
+    if os.path.exists(args.prev):
+        with open(args.prev) as f:
+            prev_r = (json.load(f).get("vectorized") or {}) \
+                .get("ticks_per_s")
+        if new_r and prev_r:
+            delta = (new_r - prev_r) / prev_r
+            flag = "REGRESSION" if delta < -args.threshold else "ok"
+            print(f"  ticks/s          {prev_r:8.1f} -> {new_r:8.1f} "
+                  f"({delta:+.1%}) {flag}")
+            failed |= delta < -args.threshold
+    else:
+        print(f"  ticks/s          {new_r} (no previous artifact: "
+              f"bootstrapping the trajectory)")
+
+    if failed:
+        print("FAIL: fleet benchmark gate")
+        return 1
+    print("fleet benchmark ok")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="freshly measured benchmark JSON")
@@ -46,7 +119,17 @@ def main() -> int:
                                  "missing on the first run)")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="max tolerated fractional streams/s drop")
+    ap.add_argument("--fleet", action="store_true",
+                    help="gate BENCH_fleet_sim.json (speedup, parity, "
+                         "admission hard-failures, calibration, "
+                         "ticks/s trajectory)")
+    ap.add_argument("--min-speedup", type=float, default=5.0,
+                    help="--fleet: minimum vectorized-over-scalar "
+                         "control-tick speedup")
     args = ap.parse_args()
+
+    if args.fleet:
+        return check_fleet(args)
 
     with open(args.new) as f:
         new = _rates(json.load(f))

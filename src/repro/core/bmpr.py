@@ -56,6 +56,34 @@ class BMPR:
                  frontier: Optional[ParetoFrontier] = None):
         self.profile = profile or get_profile()
         self.frontier = frontier or pareto_frontier(self.profile)
+        # floor-eligible frontier suffix, cached for select_bulk: the
+        # frontier is latency-ascending with STRICTLY increasing quality
+        # (pareto_frontier appends only on quality improvement), so the
+        # Q >= floor points form a suffix and "argmax quality with
+        # L <= B" is simply the LAST suffix point with latency <= B.
+        self._eligible = tuple(p for p in self.frontier.points
+                               if p.quality >= self.frontier.q_floor)
+        self._eligible_lats: Optional[object] = None   # lazy np array
+
+    def eligible_points(self) -> Tuple[ChunkProfile, ...]:
+        """Floor-eligible frontier points, latency ascending."""
+        return self._eligible
+
+    def select_bulk(self, budgets) -> "object":
+        """Vectorized ``select`` over an array of budgets: returns the
+        index into ``eligible_points()`` per budget.  Exactly equivalent
+        to calling ``select`` per budget: ``searchsorted(side='right')-1``
+        is the last eligible point with ``latency <= budget`` (quality
+        mode); a negative index means no point fits, which ``select``
+        resolves as speed-recovery = the min-latency eligible point =
+        index 0."""
+        import numpy as np
+        if self._eligible_lats is None:
+            self._eligible_lats = np.array(
+                [p.latency for p in self._eligible], dtype=np.float64)
+        idx = np.searchsorted(self._eligible_lats, budgets,
+                              side="right") - 1
+        return np.maximum(idx, 0)
 
     def select(self, budget: float) -> BMPRDecision:
         floor = self.frontier.q_floor

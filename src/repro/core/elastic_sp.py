@@ -31,12 +31,69 @@ class SPDecision:
 
 
 def plan_elastic_sp(view: ClusterView, now: float,
-                    exclude: Optional[set] = None) -> List[SPDecision]:
+                    exclude: Optional[set] = None,
+                    counts: Optional[Dict[int, Dict[Tier, int]]] = None,
+                    donor_credits: Optional[Dict[int, float]] = None,
+                    ) -> List[SPDecision]:
     """``exclude``: streams already helped this tick (e.g. just re-homed)
-    — elastic SP is the NEXT line of defense, not a parallel one (SS4)."""
+    — elastic SP is the NEXT line of defense, not a parallel one (SS4).
+    ``counts``: the tick's tier histogram, passed by ``ControlPlane.tick``
+    so both planners share one counting pass.  ``donor_credits``: per-
+    worker min resident credit, precomputed in ONE pass by the vectorized
+    control tick — queue contents don't change while planning, so the
+    hoist is exact (the fallback recomputes per candidate donor)."""
     exclude = exclude or set()
-    counts = queues.tier_counts(view)
+    if counts is None:
+        counts = queues.tier_counts(view)
     decisions: List[SPDecision] = []
+
+    if donor_credits is not None:
+        # vectorized tick: in overload almost every stream is C_u < 0
+        # while almost no worker is RELAXED, so the scan order flips —
+        # ONE pass over the streams collects releases + the borrowed
+        # donor set + the C_u < 0 candidates, then the (few) donor-
+        # eligible workers are bucketed per node.  Exact: releases
+        # don't depend on other streams, each donor serves at most one
+        # stream, the stable sort over the filtered subsequence visits
+        # streams in the same order the full sort would, and the
+        # per-node buckets preserve ``view.workers`` iteration order,
+        # so each stream sees the identical donor list.
+        borrowed: set = set()
+        released: set = set()
+        cands: List[Stream] = []
+        for s in view.streams.values():
+            d = s.sp_donor
+            if d is not None:
+                if (not s.done and s.t_next > 0.0
+                        and s.credit >= RELEASE_FACTOR * s.t_next):
+                    decisions.append(SPDecision(s.sid, d, "release"))
+                    released.add(d)
+                else:
+                    borrowed.add(d)
+            elif (not s.done and s.credit < 0.0
+                    and s.sid not in exclude):
+                cands.append(s)
+        relaxed_by_node: Dict[int, List[Worker]] = {}
+        for w in view.workers:
+            if ((w.donated_to is None or w.wid in released)
+                    and queues.worker_class(counts[w.wid]) == "relaxed"):
+                relaxed_by_node.setdefault(view.node_of(w.wid),
+                                           []).append(w)
+        if not relaxed_by_node:
+            return decisions              # no donor anywhere this tick
+        for s in sorted(cands, key=lambda s: s.credit):
+            donors = [w for w in relaxed_by_node.get(view.node_of(s.home),
+                                                     ())
+                      if w.wid != s.home and w.wid not in borrowed]
+            if not donors:
+                continue
+            donor = max(donors,
+                        key=lambda w: donor_credits.get(w.wid,
+                                                        float("inf")))
+            borrowed.add(donor.wid)
+            decisions.append(SPDecision(s.sid, donor.wid, "expand"))
+        return decisions
+
     borrowed = {s.sp_donor for s in view.streams.values()
                 if s.sp_donor is not None}
 
@@ -47,7 +104,7 @@ def plan_elastic_sp(view: ClusterView, now: float,
     # the very tick it was borrowed, so the check requires a real
     # estimate.  A donor released here rejoins the donor set below —
     # it is free again this tick, not stranded until the next one.
-    released: set = set()
+    released = set()
     for s in view.active_streams():
         if (s.sp_donor is not None and s.t_next > 0.0
                 and s.credit >= RELEASE_FACTOR * s.t_next):
@@ -70,8 +127,8 @@ def plan_elastic_sp(view: ClusterView, now: float,
             continue          # no same-node RELAXED donor: SP not triggered
         # credit-aware donor selection: highest-credit RELAXED worker
         def donor_credit(w: Worker) -> float:
-            sids = list(w.queue) + ([w.running] if w.running is not None
-                                    else [])
+            sids = list(w.queue) + ([w.running] if w.running
+                                    is not None else [])
             if not sids:
                 return float("inf")
             return min(view.streams[x].credit for x in sids)

@@ -77,14 +77,26 @@ def pick_eviction(resident_sids: List[int], streams: Dict[int, Stream],
 def tier_counts(view: ClusterView) -> Dict[int, Dict[Tier, int]]:
     """Per-worker tier histogram over queued + running streams."""
     out: Dict[int, Dict[Tier, int]] = {}
+    streams = view.streams
     for w in view.workers:
-        counts = {t: 0 for t in Tier}
-        sids = list(w.queue)
+        u = nrm = r = 0
+        for sid in w.queue:
+            t = streams[sid].tier
+            if t is Tier.URGENT:
+                u += 1
+            elif t is Tier.NORMAL:
+                nrm += 1
+            else:
+                r += 1
         if w.running is not None:
-            sids.append(w.running)
-        for sid in sids:
-            counts[view.streams[sid].tier] += 1
-        out[w.wid] = counts
+            t = streams[w.running].tier
+            if t is Tier.URGENT:
+                u += 1
+            elif t is Tier.NORMAL:
+                nrm += 1
+            else:
+                r += 1
+        out[w.wid] = {Tier.URGENT: u, Tier.NORMAL: nrm, Tier.RELAXED: r}
     return out
 
 
@@ -95,3 +107,56 @@ def worker_class(counts: Dict[Tier, int]) -> str:
     if counts[Tier.NORMAL] == 0:
         return "relaxed"
     return "mixed"
+
+
+def worker_class_triple(view: ClusterView) -> tuple:
+    """(n_urgent, n_mixed, n_relaxed) worker counts in ONE pass —
+    exactly ``worker_class(tier_counts(view)[wid])`` tallied over all
+    workers, without materializing the per-worker histograms (the fleet
+    tick samples this every 3 simulated seconds)."""
+    n_urgent = n_mixed = n_relaxed = 0
+    streams = view.streams
+    for w in view.workers:
+        urgent = False
+        normal = False
+        for sid in w.queue:
+            t = streams[sid].tier
+            if t == Tier.URGENT:
+                urgent = True
+                break
+            if t == Tier.NORMAL:
+                normal = True
+        else:
+            if w.running is not None:
+                t = streams[w.running].tier
+                if t == Tier.URGENT:
+                    urgent = True
+                elif t == Tier.NORMAL:
+                    normal = True
+        if urgent:
+            n_urgent += 1
+        elif normal:
+            n_mixed += 1
+        else:
+            n_relaxed += 1
+    return (n_urgent, n_mixed, n_relaxed)
+
+
+def min_credits(view: ClusterView) -> Dict[int, float]:
+    """Per-worker minimum credit over queued + running streams (inf for
+    an idle worker) — the elastic-SP donor-quality signal, hoisted to
+    one pass per tick."""
+    out: Dict[int, float] = {}
+    streams = view.streams
+    for w in view.workers:
+        best = float("inf")
+        for sid in w.queue:
+            c = streams[sid].credit
+            if c < best:
+                best = c
+        if w.running is not None:
+            c = streams[w.running].credit
+            if c < best:
+                best = c
+        out[w.wid] = best
+    return out

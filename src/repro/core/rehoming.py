@@ -29,8 +29,25 @@ class Migration:
 def plan_rehoming(view: ClusterView, now: float,
                   cooldown_s: float = COOLDOWN_S,
                   cap_send: int = CAP_SEND,
-                  cap_recv: int = CAP_RECV) -> List[Migration]:
-    counts = queues.tier_counts(view)
+                  cap_recv: int = CAP_RECV,
+                  counts: Optional[Dict[int, Dict[Tier, int]]] = None,
+                  ) -> List[Migration]:
+    # the caller (ControlPlane.tick) may pass the tick's tier histogram
+    # so the two planners share ONE O(streams) counting pass
+    if counts is None:
+        counts = queues.tier_counts(view)
+    # a worker serving someone else's SP2 half is NOT slack headroom:
+    # its donated compute is invisible to its own tier counts (the
+    # borrowed stream is homed elsewhere), so without this filter a
+    # migration could land on a lane that is already busy donating
+    receivers = [w for w in view.workers
+                 if w.donated_to is None
+                 and queues.worker_class(counts[w.wid]) == "relaxed"]
+    if not receivers:
+        # fleet-overload fast exit: with nowhere to re-home to, the
+        # sender scan below is a dead O(streams) pass (no migration —
+        # and no cooldown burn — can happen without a receiver)
+        return []
     # senders are URGENT-HEAVY workers (congested URGENT queues, Alg. 1
     # line 1): at least one urgent stream is WAITING (queued, not being
     # served) — an urgent stream already on the GPU is not congestion
@@ -39,13 +56,6 @@ def plan_rehoming(view: ClusterView, now: float,
                    if view.streams[sid].tier == Tier.URGENT
                    and view.streams[sid].running_on is None)
     senders = [w for w in view.workers if queued_urgent(w) >= 1]
-    # a worker serving someone else's SP2 half is NOT slack headroom:
-    # its donated compute is invisible to its own tier counts (the
-    # borrowed stream is homed elsewhere), so without this filter a
-    # migration could land on a lane that is already busy donating
-    receivers = [w for w in view.workers
-                 if w.donated_to is None
-                 and queues.worker_class(counts[w.wid]) == "relaxed"]
     # most-pressured senders first
     senders.sort(key=lambda w: -counts[w.wid][Tier.URGENT])
 

@@ -90,6 +90,16 @@ def main() -> None:
                          "attention straight from the page pool through "
                          "block tables; 'gather' materializes the "
                          "contiguous context (reference path)")
+    ap.add_argument("--front-door", action="store_true",
+                    help="SLO-aware admission control in front of the "
+                         "scheduler: predicted-TTFC admit/queue/reject "
+                         "(+ autoscaling under --sim) and admission "
+                         "stats in the report")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="after a --real run, fit the sim cost model to "
+                         "the session's measured EMAs, replay the same "
+                         "specs through the calibrated simulator, and "
+                         "print the sim-vs-real QoE/TTFC agreement")
     args = ap.parse_args()
 
     if args.lanes > 1:
@@ -101,6 +111,9 @@ def main() -> None:
         ap.error("--context-backend only applies to --real --batched")
     if args.lanes > 1 and not args.real:
         ap.error("--lanes only applies to --real")
+    if args.calibrate and not args.real:
+        ap.error("--calibrate only applies to --real (the sim IS the "
+                 "model being calibrated)")
     if args.device_count:
         if not args.real:
             ap.error("--device-count only applies to --real")
@@ -139,6 +152,10 @@ def main() -> None:
         from repro.serve.session import scale_specs
         specs = (scale_specs(raw, args.chunks) if args.lanes > 1
                  else cap_specs(raw, args.chunks))
+        fd_cfg = None
+        if args.front_door:
+            from repro.sched_sim.frontdoor import FrontDoorConfig
+            fd_cfg = FrontDoorConfig()        # autoscale forced off live
         session = StreamingSession(SessionConfig(
             executor="batched" if args.batched else "sequential",
             max_batch=args.max_batch
@@ -150,6 +167,7 @@ def main() -> None:
             pool_streams=args.pool_streams or n_streams + 1,
             context_backend=args.context_backend,
             arrival_scale=args.arrival_scale,
+            front_door=fd_cfg,
             verbose=True))   # --seed varies the workload, not the model
         for spec in specs:
             session.submit(spec)
@@ -160,6 +178,28 @@ def main() -> None:
         print(f"{label} on {args.workload}: {s.row()}")
         print(f"  rehomings={s.n_rehomings} elastic_sp={s.n_sp_events} "
               f"transfers={transfer_stats(res)}")
+        if args.front_door:
+            print(f"  admission: {res.admission}")
+        if args.calibrate:
+            from repro.sched_sim.calibration import agreement, fit_session
+            from repro.sched_sim.policies import make_policy
+            from repro.sched_sim.simulator import Simulator
+            report = fit_session(session)
+            sim_cfg = report.sim_config(
+                n_workers=args.lanes,
+                workers_per_node=args.workers_per_node or args.lanes)
+            sim_res = Simulator(sim_cfg, specs, make_policy(
+                "slackserve", model=report.model,
+                profile=report.profile())).run()
+            agr = agreement(s, summarize(sim_res))
+            print(f"  calibration: scale={report.scale:.3f} "
+                  f"ratios={ {k: round(v, 3) for k, v in report.ratios.items()} }")
+            print(f"  sim-vs-real: qoe {agr['qoe_sim']} vs "
+                  f"{agr['qoe_real']} (|d|={agr['qoe_delta']}, "
+                  f"tol {agr['qoe_tol']}), ttfc {agr['ttfc_sim_s']}s vs "
+                  f"{agr['ttfc_real_s']}s (rel={agr['ttfc_rel_err']}, "
+                  f"tol {agr['ttfc_rel_tol']}) -> "
+                  f"{'OK' if agr['ok'] else 'DISAGREE'}")
         if args.lanes > 1:
             print(f"  applied: migrations={res.n_migrations_applied} "
                   f"sp_expands={res.n_sp_expands_applied} "
@@ -188,11 +228,19 @@ def main() -> None:
     policy = make_policy(args.policy, model=args.model)
     sim_cfg = (SDV2Policy.sim_config() if args.policy == "sdv2"
                else SimConfig(model=args.model))
+    if args.front_door:
+        import dataclasses as _dc
+
+        from repro.sched_sim.frontdoor import FrontDoorConfig
+        sim_cfg = _dc.replace(sim_cfg, front_door=FrontDoorConfig())
     res = Simulator(sim_cfg, specs, policy).run()
     s = summarize(res)
     print(f"{args.policy} on {args.workload}: {s.row()}")
     print(f"  rehomings={s.n_rehomings} elastic_sp={s.n_sp_events} "
           f"transfers={transfer_stats(res)}")
+    if args.front_door:
+        print(f"  admission: {res.admission} "
+              f"(final workers: {res.n_workers_final})")
 
 
 if __name__ == "__main__":

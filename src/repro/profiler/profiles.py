@@ -63,9 +63,14 @@ class ChunkProfile:
     quality: float           # VBench points
 
 
+@functools.lru_cache(maxsize=None)
 def chunk_latency(cfg: FidelityConfig, *, sp_degree: int = 1,
                   model: str = "causal-forcing") -> float:
-    """Profiled per-chunk generation time (SS2.1: highly profileable)."""
+    """Profiled per-chunk generation time (SS2.1: highly profileable).
+
+    Cached: the fleet simulator evaluates this for every denoise-step
+    event (hundreds of thousands of calls over a 90-point config space),
+    and the surface is pure in (cfg, sp_degree, model)."""
     vis = min(cfg.window, W_MAX) / W_MAX
     qf = FP8_FACTOR if cfg.quant == "fp8" else 1.0
     step = T_FIXED + T_MLP * qf + T_ATTN * vis * (1.0 - cfg.sparsity) * qf
@@ -113,3 +118,39 @@ def get_profile(model: str = "causal-forcing") -> ModelProfile:
                              chunk_quality(c, model=model))
                 for c in candidate_space())
     return ModelProfile(model, pts)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedProfile(ModelProfile):
+    """Analytic latency surface corrected by MEASURED per-config chunk
+    latencies (sim-vs-real calibration, DESIGN.md SS8: swapping in real
+    measurements is a one-file change — this is that change, done
+    online).
+
+    ``ratios[key]`` multiplies the analytic latency of the fidelity
+    config with that key (measured / analytic at SP1); configs the real
+    run never executed fall back to the uniform ``scale`` (the
+    measured-over-analytic ratio of the top-fidelity config — one global
+    host-speed correction).  SP degrees inherit the same ratio: the
+    calibration measures host compute speed, and the SP communication
+    model stays analytic."""
+    ratios: Dict[str, float] = dataclasses.field(default_factory=dict)
+    scale: float = 1.0
+
+    def latency(self, cfg: FidelityConfig, sp_degree: int = 1) -> float:
+        base = chunk_latency(cfg, sp_degree=sp_degree, model=self.model)
+        return base * self.ratios.get(cfg.key, self.scale)
+
+
+def calibrate_profile(base: ModelProfile, ratios: Dict[str, float],
+                      scale: float = 1.0) -> CalibratedProfile:
+    """Build a ``CalibratedProfile`` whose ``points`` (the BMPR frontier
+    input) carry the corrected latencies, so fidelity selection and the
+    simulator's cost model read ONE calibrated surface."""
+    pts = tuple(ChunkProfile(
+        p.fidelity,
+        chunk_latency(p.fidelity, model=base.model)
+        * ratios.get(p.fidelity.key, scale),
+        p.quality) for p in base.points)
+    return CalibratedProfile(base.model, pts, ratios=dict(ratios),
+                             scale=scale)

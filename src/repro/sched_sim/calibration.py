@@ -1,0 +1,156 @@
+"""Sim-vs-real calibration loop.
+
+The discrete-event simulator prices every mechanism off analytic
+constants (``profiler.profiles`` latency surface, ``cost_model`` batch
+slope, ``state_plane`` bandwidths).  A real ``StreamingSession`` run
+MEASURES the same quantities on this host: per-fidelity chunk-latency
+EMAs in each lane executor, per-step EMAs, and — on device-backed
+lanes — real ``jax.device_put`` bandwidth in
+``engine.measured_stats()``.  This module closes the loop:
+
+    report = fit_session(session)          # after session.run()
+    cfg    = report.sim_config(n_workers=session.lanes.n_lanes)
+    sim    = Simulator(cfg, same_specs, make_policy(
+                 "slackserve", profile=report.profile()))
+
+and the simulator replays the workload on the CALIBRATED surface — the
+latency profile corrected per fidelity, the playout budget and
+transfer constants as the session experienced them — so the sim's
+QoE/TTFC prediction can be held against the real run's inside a pinned
+tolerance (``agreement``; the fleet benchmark + ``check_bench.py
+--fleet`` gate it in CI).
+
+The fit is deliberately simple and robust: per-config ratios where the
+run produced a measurement, one global host-speed scale everywhere
+else.  Calibration corrects compute speed; the SP communication model
+stays analytic (see ``profiles.CalibratedProfile``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Any, Dict, List, Optional
+
+from repro.core.fidelity import HIGHEST_QUALITY
+from repro.profiler.profiles import (CalibratedProfile, ModelProfile,
+                                     calibrate_profile, get_profile)
+from repro.sched_sim import cost_model as cm
+
+# pinned sim-vs-real agreement tolerances (CI gate; loose enough for
+# shared-runner wall-clock noise, tight enough that a unit bug — e.g.
+# uncalibrated latencies off by the host-speed factor — fails hard)
+QOE_ABS_TOL = 0.25          # |QoE_sim - QoE_real|, QoE in [0, 1]
+TTFC_REL_TOL = 1.0          # |TTFC_sim - TTFC_real| / TTFC_real
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationReport:
+    """Fitted cost-model constants of one real run."""
+    model: str
+    ratios: Dict[str, float]        # fidelity key -> measured / analytic
+    scale: float                    # global host-speed correction
+    chunk_seconds: float            # playout budget the session served
+    bw_intra: float                 # B/s (measured-calibrated if moves ran)
+    bw_inter: float
+    batch_alpha: Optional[float] = None   # sdv2_batch_step_factor slope
+
+    def profile(self) -> CalibratedProfile:
+        return calibrate_profile(get_profile(self.model), self.ratios,
+                                 self.scale)
+
+    def sim_config(self, base: Any = None, **overrides: Any) -> Any:
+        """A ``SimConfig`` replaying on the calibrated surface."""
+        from repro.sched_sim.simulator import SimConfig
+        return dataclasses.replace(
+            base or SimConfig(),
+            model=self.model, profile=self.profile(),
+            chunk_seconds=self.chunk_seconds,
+            bw_intra=self.bw_intra, bw_inter=self.bw_inter,
+            batch_alpha=self.batch_alpha, **overrides)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def fit_ratios(measured: Dict[str, float],
+               profile: ModelProfile) -> Dict[str, float]:
+    """Per-config measured/analytic latency ratios (SP1)."""
+    by_key = profile.by_key
+    return {key: m / by_key[key].latency
+            for key, m in measured.items()
+            if key in by_key and m > 0.0 and by_key[key].latency > 0.0}
+
+
+def fit_batch_alpha(batch_step_times: Dict[int, float]) -> Optional[float]:
+    """Fit the lockstep-batch slope of ``sdv2_batch_step_factor``
+    (t_b = t_1 * (1 + alpha * (b - 1))) from measured per-row step
+    times at batch sizes b.  Needs t_1 plus at least one b > 1 point;
+    returns None otherwise.  Alpha is clamped to >= 0 (a measured
+    superlinear speedup is noise, not a schedulable resource)."""
+    t1 = batch_step_times.get(1)
+    if not t1 or t1 <= 0.0:
+        return None
+    pts = [(b, t) for b, t in batch_step_times.items()
+           if b > 1 and t > 0.0]
+    if not pts:
+        return None
+    return max(0.0, statistics.mean(
+        (t / t1 - 1.0) / (b - 1) for b, t in pts))
+
+
+def fit_session(session: Any,
+                batch_step_times: Optional[Dict[int, float]] = None,
+                ) -> CalibrationReport:
+    """Fit a ``CalibrationReport`` from a finished ``StreamingSession``.
+
+    Reads the per-fidelity latency EMAs of every lane executor (mean
+    across lanes: same host, same device class), the session's playout
+    budget, and the transfer engine's measured-calibrated bandwidths
+    (device-backed lanes fold real ``device_put`` observations into
+    ``engine.bw_intra``; host-only runs keep the analytic constant)."""
+    profile = getattr(session, "_profile", None) or get_profile()
+    measured: Dict[str, List[float]] = {}
+    for ex in session.lanes.executors:
+        for key, val in getattr(ex, "latency_ema", {}).items():
+            measured.setdefault(key, []).append(val)
+    flat = {key: statistics.mean(vals) for key, vals in measured.items()}
+    ratios = fit_ratios(flat, profile)
+    top = HIGHEST_QUALITY.key
+    scale = (ratios.get(top) or
+             (statistics.mean(ratios.values()) if ratios else 1.0))
+    engine = session.lanes.engine
+    return CalibrationReport(
+        model=profile.model, ratios=ratios, scale=scale,
+        chunk_seconds=session.chunk_seconds,
+        bw_intra=getattr(engine, "bw_intra", cm.BW_INTRA),
+        bw_inter=getattr(engine, "bw_inter", cm.BW_INTER),
+        batch_alpha=fit_batch_alpha(batch_step_times)
+        if batch_step_times else None)
+
+
+def agreement(real_summary: Any, sim_summary: Any,
+              qoe_tol: float = QOE_ABS_TOL,
+              ttfc_rel_tol: float = TTFC_REL_TOL) -> Dict[str, Any]:
+    """Sim-vs-real QoE/TTFC agreement under the pinned tolerances.
+
+    Returns a dict with the deltas and an overall ``ok`` — the fleet
+    benchmark embeds it in ``BENCH_fleet_sim.json`` and
+    ``check_bench.py --fleet`` fails CI when ``ok`` is false."""
+    qoe_delta = abs(sim_summary.qoe - real_summary.qoe)
+    if real_summary.ttfc > 0 and real_summary.ttfc != float("inf"):
+        ttfc_rel = (abs(sim_summary.ttfc - real_summary.ttfc)
+                    / real_summary.ttfc)
+    else:
+        ttfc_rel = float("inf")
+    return {
+        "qoe_real": round(real_summary.qoe, 4),
+        "qoe_sim": round(sim_summary.qoe, 4),
+        "qoe_delta": round(qoe_delta, 4),
+        "qoe_tol": qoe_tol,
+        "ttfc_real_s": round(real_summary.ttfc, 4),
+        "ttfc_sim_s": round(sim_summary.ttfc, 4),
+        "ttfc_rel_err": (round(ttfc_rel, 4)
+                         if ttfc_rel != float("inf") else None),
+        "ttfc_rel_tol": ttfc_rel_tol,
+        "ok": bool(qoe_delta <= qoe_tol and ttfc_rel <= ttfc_rel_tol),
+    }

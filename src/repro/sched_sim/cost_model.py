@@ -60,16 +60,22 @@ N_LAYERS = 30
 SDV2_BATCH = 4
 
 
-def sdv2_batch_step_factor(b: int) -> float:
+SDV2_BATCH_ALPHA = 0.9   # default marginal per-stream step-cost slope
+
+
+def sdv2_batch_step_factor(b: int, alpha: float = SDV2_BATCH_ALPHA) -> float:
     """Per-step latency multiplier for a lockstep batch of ``b``.
 
     A 1.3B AR-DiT at 480p is compute-bound at batch 1 (2640-token chunks
     saturate the GPU), so batching amortizes little: ~10% per added
-    stream.  Throughput gain at b=4 is b/factor = 1.08x while every
-    member's chunk latency inflates 3.4x — which is exactly SS7.2's
-    observation that SDV2 raises aggregate FPS but not per-stream
-    timeliness, leaving multi-stream workers URGENT (Fig. 15)."""
-    return 1.0 + 0.9 * (b - 1)
+    stream (``alpha = 0.9`` marginal cost).  Throughput gain at b=4 is
+    b/factor = 1.08x while every member's chunk latency inflates 3.4x —
+    which is exactly SS7.2's observation that SDV2 raises aggregate FPS
+    but not per-stream timeliness, leaving multi-stream workers URGENT
+    (Fig. 15).  ``alpha`` is a calibration target: the sim-vs-real
+    fitting loop (``sched_sim.calibration``) re-estimates it from the
+    real batched executor's per-batch-size step EMAs."""
+    return 1.0 + alpha * (b - 1)
 
 
 def stream_pages(chunks_resident: int) -> int:

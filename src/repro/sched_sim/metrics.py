@@ -33,6 +33,7 @@ class Summary:
     n_chunks: int
     n_rehomings: int
     n_sp_events: int
+    n_unserved: int = 0           # admitted streams with zero ready chunks
 
     def row(self) -> str:
         return (f"QoE={self.qoe:.3f} TTFC={self.ttfc:.2f}s "
@@ -43,15 +44,26 @@ class Summary:
 
 def summarize(res: Any) -> Summary:
     """CPR / TTFC / quality / stall summary of a result-like object
-    (``SimResult`` or ``SessionResult`` — see module docstring)."""
+    (``SimResult`` or ``SessionResult`` — see module docstring).
+
+    An admitted stream with NO ready chunks (overload, ``max_time``
+    truncation — exactly the regimes admission control creates) counts
+    as CPR 0 and is reported in ``n_unserved``: it received the worst
+    possible experience, so skipping it would silently inflate QoE and
+    deflate ``n_streams``.  TTFC stays a served-streams mean (an
+    unserved stream has no finite first-chunk time to average)."""
     cprs: List[float] = []
     ttfcs: List[float] = []
     quals: List[float] = []
     stall_counts: List[int] = []
     stall_durs: List[float] = []
     n_chunks = 0
+    n_unserved = 0
     for s in res.streams.values():
         if not s.ready_times:
+            n_unserved += 1
+            cprs.append(0.0)               # admitted, never served: CPR 0
+            stall_counts.append(0)
             continue
         hits = sum(1 for r, d in zip(s.ready_times, s.deadlines) if r <= d)
         cprs.append(hits / max(len(s.ready_times), 1))
@@ -71,7 +83,8 @@ def summarize(res: Any) -> Summary:
         else 0.0,
         n_streams=len(cprs), n_chunks=n_chunks,
         n_rehomings=getattr(res, "n_rehomings", 0),
-        n_sp_events=getattr(res, "n_sp_events", 0))
+        n_sp_events=getattr(res, "n_sp_events", 0),
+        n_unserved=n_unserved)
 
 
 def stall_histogram(res: Any,

@@ -28,9 +28,13 @@ class SlackServePolicy(Policy):
 
     def __init__(self, *, use_bmpr: bool = True, use_rehoming: bool = True,
                  use_elastic_sp: bool = True, fidelity_policy=None,
-                 alpha: float = 2.0, model: str = "causal-forcing"):
+                 alpha: float = 2.0, model: str = "causal-forcing",
+                 profile=None):
         self.name = "slackserve"
-        self.profile = get_profile(model)
+        # an injected profile (e.g. a CalibratedProfile from the
+        # sim-vs-real fitting loop) replaces the analytic surface for
+        # BOTH fidelity selection and latency estimates
+        self.profile = profile or get_profile(model)
         if fidelity_policy is None:
             fidelity_policy = (BMPR(self.profile) if use_bmpr
                                else StaticFidelity(profile=self.profile))
@@ -38,6 +42,13 @@ class SlackServePolicy(Policy):
             ControlConfig(alpha=alpha, use_rehoming=use_rehoming,
                           use_elastic_sp=use_elastic_sp),
             fidelity_policy=fidelity_policy)
+
+    def attach(self, sim: Simulator) -> None:
+        super().attach(sim)
+        # the simulator's vectorization flag drives the control tick's
+        # numpy path (bit-identical; benchmarks flip it off to measure
+        # the scalar baseline)
+        self.control.config.vectorized = sim.cfg.vectorized
 
     # --- admission ---
     def first_chunk_estimate(self) -> float:
@@ -52,6 +63,8 @@ class SlackServePolicy(Policy):
     # --- control tick (Algorithm 2) ---
     def on_tick(self, now: float) -> None:
         decisions = self.control.tick(self.sim.view, now)
+        if decisions.scale_out:
+            self.sim.scale_out(decisions.scale_out)
         for mig in decisions.migrations:
             rehoming.apply_migration(self.sim.view, mig)
             self.sim.migrate(mig.sid, mig.src, mig.dst, mig.cross_node)
@@ -81,9 +94,13 @@ class SlackServePolicy(Policy):
         urgent (> half a chunk of credit), avoiding EDF-style mid-chunk
         thrash while preserving step-boundary preemption (SS4.1)."""
         streams = self.sim.view.streams
-        for sid in worker.queue:
-            slack.update_stream_credit(streams[sid], self.sim.now,
-                                       self.control.config.alpha)
+        if not getattr(self.sim, "_credits_fresh", False):
+            # outside a tick's dispatch fan-out the credits are stale;
+            # inside it the control tick just refreshed every stream at
+            # self.sim.now, so recomputing here would be a no-op scan
+            for sid in worker.queue:
+                slack.update_stream_credit(streams[sid], self.sim.now,
+                                           self.control.config.alpha)
         worker.queue.sort(
             key=lambda sid: streams[sid].credit
             - (0.5 * streams[sid].t_next

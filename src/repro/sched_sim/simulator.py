@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import time as _time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import queues as q_mod
@@ -24,6 +25,7 @@ from repro.core.state_plane import AsyncTransferEngine, PagedKVPool
 from repro.core.types import ClusterView, Stream, Tier, Worker
 from repro.profiler.profiles import ModelProfile, get_profile
 from repro.sched_sim import cost_model as cm
+from repro.sched_sim.frontdoor import FrontDoor, FrontDoorConfig
 from repro.sched_sim.workloads import StreamSpec
 
 
@@ -36,6 +38,19 @@ class SimConfig:
     tick_interval: float = 3.0
     pool_pages: int = cm.POOL_PAGES
     max_time: float = 3.0e4
+    # --- calibration overrides (sched_sim.calibration fits these to a
+    # real --lanes run; defaults are the analytic cost-model constants) ---
+    chunk_seconds: float = cm.CHUNK_SECONDS
+    bw_intra: float = cm.BW_INTRA
+    bw_inter: float = cm.BW_INTER
+    batch_alpha: Optional[float] = None   # sdv2_batch_step_factor slope
+    profile: Optional[ModelProfile] = None   # calibrated latency surface
+    # --- fleet front door (None = legacy unconditional admission) ---
+    front_door: Optional[FrontDoorConfig] = None
+    # numpy-batched control tick + fresh-credit dispatch ordering
+    # (bit-identical to the scalar path; the fleet benchmark flips this
+    # off to measure the pre-vectorization baseline)
+    vectorized: bool = True
 
 
 @dataclasses.dataclass
@@ -47,6 +62,9 @@ class SimResult:
     worker_tier_samples: List[Tuple[int, int, int]]   # (urgent, mixed, relaxed)
     fidelity_counts: Dict[str, int]
     control_tick_times: List[float]
+    admission: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tick_wall: List[float] = dataclasses.field(default_factory=list)
+    n_workers_final: int = 0
 
 
 class Simulator:
@@ -55,10 +73,11 @@ class Simulator:
         self.cfg = config
         self.specs = {s.sid: s for s in specs}
         self.policy = policy
-        self.profile: ModelProfile = get_profile(config.model)
+        self.profile: ModelProfile = (config.profile
+                                      or get_profile(config.model))
         self.engine = AsyncTransferEngine(
-            protocol=config.transfer_protocol, bw_intra=cm.BW_INTRA,
-            bw_inter=cm.BW_INTER, overhead=cm.TRANSFER_OVERHEAD_S,
+            protocol=config.transfer_protocol, bw_intra=config.bw_intra,
+            bw_inter=config.bw_inter, overhead=cm.TRANSFER_OVERHEAD_S,
             n_layers=cm.N_LAYERS)
         workers = [Worker(w, node=w // config.workers_per_node)
                    for w in range(config.n_workers)]
@@ -74,7 +93,31 @@ class Simulator:
         self.fidelity_counts: Dict[str, int] = {}
         # per-worker execution context: list of (sid) running in lockstep
         self.batch: List[List[int]] = [[] for _ in range(config.n_workers)]
+        # batch generation counter per worker: a step_done event carries
+        # the epoch it was scheduled under, so an aborted-then-restarted
+        # batch with the SAME sid list cannot be credited a stale step
+        self.batch_epoch: List[int] = [0] * config.n_workers
+        # O(1) completion tracking (_all_done was an O(streams) scan per
+        # event — the top cost in fleet-scale profiles)
+        self._n_done = 0
+        self._n_rejected = 0
+        # fleet front door (admission + autoscaling)
+        self.front_door: Optional[FrontDoor] = None
+        if config.front_door is not None:
+            self.front_door = FrontDoor(
+                config.front_door,
+                first_chunk_estimate=policy.first_chunk_estimate()
+                if hasattr(policy, "profile") else 1.0)
+        # wall-clock of each _on_tick handler (ticks/s benchmark metric)
+        self.tick_wall: List[float] = []
+        # True only inside a tick's dispatch fan-out, right after the
+        # control tick refreshed every credit at self.now: policies may
+        # then skip per-dispatch credit recomputation (exact: nothing
+        # that feeds Eq. 1 for QUEUED streams mutates inside the loop)
+        self._credits_fresh = False
         policy.attach(self)
+        if self.front_door is not None and hasattr(policy, "control"):
+            policy.control.attach_front_door(self.front_door)
 
     # ------------------------------------------------------------------ events
     def push(self, t: float, kind: str, payload: Any = None) -> None:
@@ -94,29 +137,57 @@ class Simulator:
             if t > self.cfg.max_time:
                 break
             self.now = t
-            getattr(self, f"_on_{kind}")(payload)
-            if kind != "tick" and self._all_done():
-                break
+            if kind == "tick":
+                w0 = _time.perf_counter()
+                self._on_tick(payload)
+                self.tick_wall.append(_time.perf_counter() - w0)
+            else:
+                getattr(self, f"_on_{kind}")(payload)
+                if self._all_done():
+                    break
         return SimResult(self.view.streams, self.engine,
                          getattr(self.policy, "n_rehomings", 0),
                          getattr(self.policy, "n_sp_events", 0),
                          self.worker_tier_samples, self.fidelity_counts,
-                         getattr(self.policy, "tick_times", []))
+                         getattr(self.policy, "tick_times", []),
+                         admission=(self.front_door.stats()
+                                    if self.front_door else {}),
+                         tick_wall=self.tick_wall,
+                         n_workers_final=len(self.view.workers))
 
     def _all_done(self) -> bool:
-        return (len(self.view.streams) == len(self.specs)
-                and all(s.done for s in self.view.streams.values()))
+        # O(1): every spec either finished serving or was shed by the
+        # front door (equivalent to the old all(s.done) scan — a stream
+        # waiting in the admission queue counts as neither)
+        return self._n_done + self._n_rejected == len(self.specs)
 
     # ------------------------------------------------------------------ admission
     def _on_arrival(self, sid: int) -> None:
-        spec = self.specs[sid]
         first_est = self.policy.first_chunk_estimate()
+        if self.front_door is not None:
+            dec = self.front_door.on_arrival(self.view, self.now,
+                                             first_est, sid)
+            if dec.scale_workers:
+                self.scale_out(dec.scale_workers)
+            if dec.action == "reject":
+                self._n_rejected += 1
+                return
+            if dec.action == "queue":
+                return                 # drained at ticks / completions
+        self._admit(sid, self.now, first_est)
+
+    def _admit(self, sid: int, arrival: float, first_est: float) -> None:
+        """Place an admitted stream (``arrival`` is the ORIGINAL arrival
+        time: a front-door queue wait consumes the stream's TTFC slack,
+        so its playout clock starts when the user asked, not when
+        capacity appeared)."""
+        spec = self.specs[sid]
         ttfc_slack = self.policy.initial_slack(first_est)
         home = self.policy.choose_home()
-        s = Stream(sid=sid, arrival=self.now, target_chunks=spec.chunks,
-                   chunk_seconds=cm.CHUNK_SECONDS, home=home,
+        s = Stream(sid=sid, arrival=arrival, target_chunks=spec.chunks,
+                   chunk_seconds=self.cfg.chunk_seconds, home=home,
                    ttfc_slack=ttfc_slack,
-                   next_deadline=self.now + ttfc_slack)
+                   next_deadline=arrival + ttfc_slack)
         s.t_next = first_est
         self.view.streams[sid] = s
         self.policy.on_admit(s)
@@ -125,16 +196,59 @@ class Simulator:
         s.resident_on.add(home)
         self._try_dispatch(home)
 
+    def _drain_front_door(self) -> None:
+        fd = self.front_door
+        admits, rejects = fd.drain(self.view, self.now)
+        self._n_rejected += len(rejects)
+        for sid, t_arr in admits:
+            self._admit(sid, t_arr, self.policy.first_chunk_estimate())
+
+    def scale_out(self, k: int) -> int:
+        """Provision ``k`` workers (front-door autoscale).  Each lands
+        after the cold-start ``provision_delay`` — modeled as a blocked
+        dispatcher with a ``worker_unblock`` at readiness — and extends
+        every per-worker array the event loop owns."""
+        cfg = self.cfg
+        delay = (self.front_door.cfg.provision_delay
+                 if self.front_door else 0.0)
+        for _ in range(k):
+            wid = len(self.view.workers)
+            self.view.workers.append(
+                Worker(wid, node=wid // cfg.workers_per_node))
+            self.pools.append(PagedKVPool(cfg.pool_pages))
+            self.blocked_until.append(self.now + delay)
+            self.batch.append([])
+            self.batch_epoch.append(0)
+            self.push(self.now + delay, "worker_unblock", wid)
+        return k
+
     # ------------------------------------------------------------------ control
     def _on_tick(self, _: None) -> None:
+        if self.front_door is not None:
+            self._drain_front_door()
         self.policy.on_tick(self.now)
-        # sample worker classes (Fig. 15)
-        counts = q_mod.tier_counts(self.view)
-        cls = [q_mod.worker_class(counts[w.wid]) for w in self.view.workers]
-        self.worker_tier_samples.append(
-            (cls.count("urgent"), cls.count("mixed"), cls.count("relaxed")))
-        for w in self.view.workers:
-            self._try_dispatch(w.wid)
+        # the control tick refreshed every credit at self.now; nothing
+        # in the dispatch fan-out mutates a QUEUED stream's Eq. 1 inputs
+        # (batch starts only remove streams from their own queue), so
+        # order() may reuse them verbatim
+        if self.cfg.vectorized:
+            self._credits_fresh = True
+        try:
+            # sample worker classes (Fig. 15)
+            if self.cfg.vectorized:
+                self.worker_tier_samples.append(
+                    q_mod.worker_class_triple(self.view))
+            else:
+                counts = q_mod.tier_counts(self.view)
+                cls = [q_mod.worker_class(counts[w.wid])
+                       for w in self.view.workers]
+                self.worker_tier_samples.append(
+                    (cls.count("urgent"), cls.count("mixed"),
+                     cls.count("relaxed")))
+            for w in self.view.workers:
+                self._try_dispatch(w.wid)
+        finally:
+            self._credits_fresh = False
         if not self._all_done():
             self.push(self.now + self.cfg.tick_interval, "tick", None)
 
@@ -147,6 +261,33 @@ class Simulator:
         s.next_deadline = self.now + s.ttfc_slack
         s.step_done = 0                        # abort in-flight chunk work
         s.remaining = 0.0
+        s.chunk_started = None                 # fresh chunk, fresh fidelity
+        # cancel the in-flight batch: without this the pending step_done
+        # event still matches batch[wid] and credits the ABORTED chunk a
+        # step, resuming the stale-condition chunk instead of restarting
+        # it (the real executor's reset_condition drops the flight) —
+        # batchmates lose only their current partial step and requeue at
+        # the front with their progress intact
+        run_wids = [w for w in range(len(self.batch))
+                    if sid in self.batch[w]]
+        if run_wids:
+            members = list(self.batch[run_wids[0]])
+            freed = set()
+            for w2 in range(len(self.batch)):
+                if self.batch[w2] and self.batch[w2][0] in members:
+                    self.batch[w2] = []
+                    freed.add(w2)
+            for member in members:
+                m = self.view.streams[member]
+                back = (m.running_on[0] if m.running_on
+                        else run_wids[0])
+                m.running_on = None
+                wq = self.view.workers[back].queue
+                if member not in wq and not m.done:
+                    wq.insert(0, member)
+                freed.add(back)
+            for w2 in freed:
+                self._try_dispatch(w2)
 
     def _on_pause(self, payload: Tuple[int, float]) -> None:
         sid, dur = payload
@@ -214,10 +355,12 @@ class Simulator:
             step_t = self._step_time(s, b, sp)
             s.remaining = (s.next_fidelity.steps - s.step_done) * step_t
         self.batch[wid] = list(sids)
+        self.batch_epoch[wid] += 1
         if sp == 2 and self.view.streams[sids[0]].sp_donor is not None:
             self.batch[self.view.streams[sids[0]].sp_donor] = list(sids)
         step_t = self._step_time(self.view.streams[sids[0]], b, sp)
-        self.push(self.now + step_t, "step_done", (wid, list(sids)))
+        self.push(self.now + step_t, "step_done",
+                  (wid, list(sids), self.batch_epoch[wid]))
 
     def _step_time(self, s: Stream, batch: int, sp: int) -> float:
         """Per-step wall time.  A lockstep batch of b shares the unit, so
@@ -227,13 +370,19 @@ class Simulator:
         step = lat / s.next_fidelity.steps
         step /= getattr(self.policy, "pipeline_speedup", 1.0)
         if batch > 1:
-            step *= cm.sdv2_batch_step_factor(batch)
+            alpha = self.cfg.batch_alpha
+            step *= (cm.sdv2_batch_step_factor(batch) if alpha is None
+                     else cm.sdv2_batch_step_factor(batch, alpha))
         return step
 
-    def _on_step_done(self, payload: Tuple[int, List[int]]) -> None:
-        wid, sids = payload
-        if self.batch[wid] != sids:
-            return                              # stale event (preempted)
+    def _on_step_done(self, payload: Tuple[int, List[int], int]) -> None:
+        wid, sids, epoch = payload
+        # stale-event guard: the batch was preempted or aborted since
+        # this event was scheduled.  The epoch check catches an aborted
+        # batch RESTARTED with the same sid list (prompt switch -> fresh
+        # chunk), which list equality alone would mistake for in-flight.
+        if self.batch[wid] != sids or self.batch_epoch[wid] != epoch:
+            return
         done_chunk: List[int] = []
         for sid in sids:
             s = self.view.streams[sid]
@@ -271,6 +420,8 @@ class Simulator:
         s = self.view.streams[sid]
         ready = self.now
         ddl = s.next_deadline
+        if self.front_door is not None and s.chunk_started is not None:
+            self.front_door.observe_chunk(ready - s.chunk_started)
         s.ready_times.append(ready)
         s.deadlines.append(ddl)
         if s.first_chunk_time is None:
@@ -293,12 +444,17 @@ class Simulator:
         self._grow_kv(sid, wid)
         if s.finished:
             s.done = True
+            self._n_done += 1
             for w_res in list(s.resident_on):
                 self.pools[w_res].release(sid)
             s.resident_on.clear()
             if s.sp_donor is not None:
                 self.view.workers[s.sp_donor].donated_to = None
                 s.sp_donor = None
+            # freed capacity: promote front-door queued arrivals now
+            # instead of waiting out the tick interval
+            if self.front_door is not None and self.front_door.waiting:
+                self._drain_front_door()
         else:
             self.view.workers[wid].queue.append(sid)
 
@@ -348,6 +504,10 @@ class Simulator:
         self.push(timing.first_layer_ready, "stream_ready", (sid, wid))
         if self.engine.blocks_dispatcher():
             self.blocked_until[wid] = timing.complete
+            # wake the dispatcher when the blocking restore finishes
+            # (mirrors migrate(): without the event the worker idled
+            # until the next 3 s control tick)
+            self.push(timing.complete, "worker_unblock", wid)
 
     def _on_stream_ready(self, payload: Tuple[int, int]) -> None:
         sid, wid = payload

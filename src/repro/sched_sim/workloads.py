@@ -109,25 +109,79 @@ def pause(n: int = N_PROMPTS, rate: float = 1.0,
     return out
 
 
-def trace(n: int = N_PROMPTS, seed: int = 0) -> List[StreamSpec]:
+def trace(n: int = N_PROMPTS, rate: float = 1.0,
+          seed: int = 0) -> List[StreamSpec]:
     """Enterprise-trace-shaped arrivals: alternating steady segments
-    (rates 0.6-1.6/s), flash bursts, and idle gaps (App. B)."""
+    (rates 0.6-1.6/s), flash bursts, and idle gaps (App. B).
+
+    ``rate`` scales the whole trace's arrival intensity: segment rates
+    are multiplied and idle gaps divided by it, so ``rate=2`` compresses
+    the trace ~2x in time without changing its shape (at ``rate=1`` the
+    rng consumption is unchanged, so pre-existing seeds reproduce)."""
+    if rate <= 0.0:
+        raise ValueError(f"trace rate must be positive, got {rate}")
     rng = random.Random(seed)
     arrivals: List[float] = []
     t = 0.0
     while len(arrivals) < n:
         kind = rng.random()
         if kind < 0.6:                       # steady segment
-            rate = rng.uniform(0.6, 1.6)
+            seg_rate = rng.uniform(0.6, 1.6) * rate
             for _ in range(min(rng.randint(30, 120), n - len(arrivals))):
-                t += rng.expovariate(rate)
+                t += rng.expovariate(seg_rate)
                 arrivals.append(t)
         elif kind < 0.8:                     # flash burst
             k = min(rng.randint(5, 25), n - len(arrivals))
             arrivals.extend([t] * k)
         else:                                # idle gap
-            t += rng.uniform(10.0, 40.0)
+            t += rng.uniform(10.0, 40.0) / rate
     arrivals = arrivals[:n]
+    rng2 = random.Random(seed + 1)
+    return [StreamSpec(i, arrivals[i], rng2.choice(cm.STREAM_FRAMES))
+            for i in range(n)]
+
+
+def diurnal(n: int = N_PROMPTS, rate: float = 1.0, seed: int = 0,
+            period: float = 1200.0,
+            trough: float = 0.2) -> List[StreamSpec]:
+    """Diurnal arrivals: a nonhomogeneous Poisson process whose rate
+    follows one sinusoidal day-cycle, peak ``rate`` at mid-period and
+    ``trough * rate`` at the edges (the fleet-scale sizing workload:
+    autoscaling must track the swell, admission must absorb the crest).
+
+    Sampled by thinning against the peak rate, so per-seed streams are
+    deterministic and the instantaneous rate never exceeds ``rate``."""
+    rng = random.Random(seed)
+    arrivals: List[float] = []
+    t = 0.0
+    while len(arrivals) < n:
+        t += rng.expovariate(rate)
+        # lambda(t)/rate in [trough, 1]: sin half-wave over the period
+        phase = (t % period) / period
+        lam = trough + (1.0 - trough) * math.sin(math.pi * phase) ** 2
+        if rng.random() < lam:
+            arrivals.append(t)
+    rng2 = random.Random(seed + 1)
+    return [StreamSpec(i, arrivals[i], rng2.choice(cm.STREAM_FRAMES))
+            for i in range(n)]
+
+
+def flash_crowd(n: int = N_PROMPTS, rate: float = 1.0, seed: int = 0,
+                spike_frac: float = 0.3,
+                spike_width: float = 2.0) -> List[StreamSpec]:
+    """Flash-crowd arrivals: a steady Poisson baseline carrying
+    ``1 - spike_frac`` of the streams, with the remaining ``spike_frac``
+    slammed into a ``spike_width``-second window at mid-trace (a viral
+    event: the admission-control stress test — the spike exceeds any
+    statically provisioned capacity, so the front door must queue,
+    shed, or scale out)."""
+    rng = random.Random(seed)
+    n_spike = int(spike_frac * n)
+    base = _poisson_arrivals(n - n_spike, rate, rng)
+    t_spike = base[len(base) // 2] if base else 0.0
+    spike = sorted(t_spike + rng.uniform(0.0, spike_width)
+                   for _ in range(n_spike))
+    arrivals = sorted(base + spike)
     rng2 = random.Random(seed + 1)
     return [StreamSpec(i, arrivals[i], rng2.choice(cm.STREAM_FRAMES))
             for i in range(n)]
@@ -138,5 +192,7 @@ WORKLOADS = {
     "burst": burst,
     "prompt_switch": prompt_switch,
     "pause": pause,
-    "trace": lambda n=N_PROMPTS, rate=1.0, seed=0: trace(n, seed),
+    "trace": trace,
+    "diurnal": diurnal,
+    "flash_crowd": flash_crowd,
 }

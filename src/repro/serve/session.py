@@ -68,6 +68,7 @@ from repro.core.state_plane import AsyncTransferEngine
 from repro.core.types import ClusterView, Stream, Worker
 from repro.profiler.profiles import get_profile
 from repro.sched_sim import cost_model as cm
+from repro.sched_sim.frontdoor import FrontDoor, FrontDoorConfig
 from repro.sched_sim.workloads import StreamSpec
 from repro.serve.executor import ServedStream
 from repro.serve.lanes import LanePool
@@ -108,6 +109,11 @@ class SessionConfig:
     arrival_scale: float = 1.0
     seed: int = 0
     verbose: bool = True
+    # SLO-aware admission control (sched_sim.frontdoor).  None = legacy
+    # unconditional admission.  Autoscaling is forced OFF in a real
+    # session — this host cannot provision lanes mid-run — so the front
+    # door only admits, queues, or sheds.
+    front_door: Optional[FrontDoorConfig] = None
 
 
 @dataclasses.dataclass
@@ -127,6 +133,7 @@ class SessionResult:
     n_migrations_applied: int = 0
     n_sp_expands_applied: int = 0
     n_sp_releases_applied: int = 0
+    admission: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class StreamHandle:
@@ -318,6 +325,15 @@ class StreamingSession:
             # SP2 expansion must never compile on the critical path
             self.lanes.prejit_sp()
 
+        # ---- front door (admission control; autoscale forced off) -------
+        self.front_door: Optional[FrontDoor] = None
+        self._n_rejected = 0
+        if self.cfg.front_door is not None:
+            self.front_door = FrontDoor(
+                dataclasses.replace(self.cfg.front_door, autoscale=False),
+                first_chunk_estimate=self.top_latency)
+            self.control.attach_front_door(self.front_door)
+
         # ---- cluster view: one Worker per lane --------------------------
         wpn = self.cfg.workers_per_node or self.lanes.n_lanes
         self.workers = [Worker(i, node=i // wpn)
@@ -366,13 +382,27 @@ class StreamingSession:
 
     # ---- event handlers (mirroring sched_sim.Simulator) --------------------
     def _on_arrival(self, sid: int, t_arr: float) -> None:
-        spec = self.handles[sid].spec
         self._pending_arrivals -= 1
+        first_est = self.lanes.latency_ema_get(HIGHEST_QUALITY.key,
+                                               self.top_latency)
+        if self.front_door is not None:
+            dec = self.front_door.on_arrival(self.view, t_arr,
+                                             first_est, sid)
+            if dec.action == "reject":
+                self._n_rejected += 1
+                return
+            if dec.action == "queue":
+                return         # promoted by _drain_front_door (or shed)
+        self._admit_stream(sid, t_arr, first_est)
+
+    def _admit_stream(self, sid: int, t_arr: float,
+                      first_est: float) -> None:
+        """Place an admitted stream (``t_arr`` is the ORIGINAL arrival:
+        a front-door queue wait consumes the stream's TTFC slack)."""
+        spec = self.handles[sid].spec
         # SS3.3 steps 1-2: initial playout slack from the first-chunk
         # estimate (measured top-fidelity latency on THIS host), home
         # from the control plane (least-loaded non-donating lane)
-        first_est = self.lanes.latency_ema_get(HIGHEST_QUALITY.key,
-                                               self.top_latency)
         ttfc_slack = self.control.initial_slack(first_est)
         home = self.control.choose_home(self.view)
         s = Stream(sid=sid, arrival=t_arr, target_chunks=spec.chunks,
@@ -436,9 +466,19 @@ class StreamingSession:
             elif kind == "pause":
                 self._on_pause(payload)
 
+    def _drain_front_door(self, now: float) -> None:
+        admits, rejects = self.front_door.drain(self.view, now)
+        self._n_rejected += len(rejects)
+        first_est = self.lanes.latency_ema_get(HIGHEST_QUALITY.key,
+                                               self.top_latency)
+        for sid, t_arr in admits:
+            self._admit_stream(sid, t_arr, first_est)
+
     # ---- the session loop --------------------------------------------------
     def _all_done(self) -> bool:
         return (self._pending_arrivals == 0
+                and (self.front_door is None
+                     or not self.front_door.waiting)
                 and all(s.done for s in self.view.streams.values()))
 
     def _sample_tiers(self) -> None:
@@ -453,6 +493,8 @@ class StreamingSession:
         while not self._all_done():
             now = self._now()
             self._drain_events(now)
+            if self.front_door is not None and self.front_door.waiting:
+                self._drain_front_door(now)
 
             # Algorithm 2 control tick: BMPR fidelity -> Eq. 1 credit ->
             # three-tier queue ordering -> re-homing plan -> elastic-SP
@@ -496,6 +538,12 @@ class StreamingSession:
                 continue
             if self._events:
                 self._wait_for(self._events[0][0])
+                continue
+            if self.front_door is not None and self.front_door.waiting:
+                # admission queue holds streams but no event is pending:
+                # let wall-clock advance so the next drain can promote
+                # (worker freed between checks) or time the entry out
+                time.sleep(0.005)
                 continue
             break                                # nothing left to serve
         return self.result()
@@ -684,6 +732,8 @@ class StreamingSession:
         s.fidelity_log.append(fid.key)
         self.fidelity_counts[fid.key] = \
             self.fidelity_counts.get(fid.key, 0) + 1
+        if self.front_door is not None:
+            self.front_door.observe_chunk(now - started)
         donor = self._pending_sp_release.pop(sid, None)
         if donor is not None and not s.finished:
             # the promised safe boundary: drop the borrow now
@@ -724,7 +774,8 @@ class StreamingSession:
             control_tick_times=list(self.control.tick_times),
             n_migrations_applied=self.lanes.n_migrations,
             n_sp_expands_applied=self.lanes.n_sp_expands,
-            n_sp_releases_applied=self.lanes.n_sp_releases)
+            n_sp_releases_applied=self.lanes.n_sp_releases,
+            admission=self.front_door.stats() if self.front_door else {})
 
     def _served_stream(self, sid: int) -> ServedStream:
         """Back-compat view assembled FROM the per-stream record — the

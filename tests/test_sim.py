@@ -1,12 +1,18 @@
 """Cluster simulator end-to-end: workloads, policies, metrics."""
+import types
+
 import pytest
 
+from repro.core.types import ClusterView, Stream, Worker
+from repro.profiler.profiles import get_profile
 from repro.sched_sim import cost_model as cm
+from repro.sched_sim.frontdoor import FrontDoor, FrontDoorConfig
 from repro.sched_sim.metrics import (stall_histogram, summarize,
                                      transfer_stats)
 from repro.sched_sim.policies import SDV2Policy, make_policy
 from repro.sched_sim.simulator import SimConfig, Simulator
-from repro.sched_sim.workloads import (WORKLOADS, burst, pause,
+from repro.sched_sim.workloads import (WORKLOADS, StreamSpec, burst,
+                                       diurnal, flash_crowd, pause,
                                        prompt_switch, steady, trace)
 
 
@@ -120,3 +126,199 @@ class TestEndToEnd:
         for s in res.streams.values():
             if s.done:
                 assert s.sp_donor is None
+
+
+class TestSimulatorBugfixes:
+    """Fail-pre-fix regressions for the simulator/metrics bug sweep."""
+
+    def test_restore_schedules_worker_unblock(self):
+        """A sync-protocol restore blocks the worker until
+        ``timing.complete``; without a ``worker_unblock`` event the
+        dispatcher idled until the next 3 s control tick (migrate()
+        always scheduled the wake-up, _restore forgot to)."""
+        sim = Simulator(SimConfig(n_workers=1,
+                                  transfer_protocol="sync"),
+                        [StreamSpec(0, 0.0, 81)],
+                        make_policy("slackserve"))
+        s = Stream(sid=0, arrival=0.0, target_chunks=7,
+                   chunk_seconds=0.75, home=0, ttfc_slack=4.0)
+        s.chunks_done = 2                  # evicted mid-serve, has state
+        sim.view.streams[0] = s
+        sim._restore(0, 0)
+        assert sim.blocked_until[0] > 0.0  # the restore DID block w0
+        wakeups = [(t, p) for (t, _, k, p) in sim._heap
+                   if k == "worker_unblock"]
+        assert (sim.blocked_until[0], 0) in wakeups
+
+    def test_prompt_switch_aborts_inflight_batch(self):
+        """A prompt switch must invalidate the in-flight batch: the
+        pending step_done event still matched ``batch[wid]``, so the
+        aborted chunk was credited a stale denoise step and finished
+        one step EARLY under the new prompt."""
+        profile = get_profile()
+        specs = [StreamSpec(0, 0.0, 81, switches=(0.3,))]
+        res = Simulator(SimConfig(n_workers=1), specs,
+                        make_policy("slackserve")).run()
+        s = res.streams[0]
+        # full restart at t=0.3: the first chunk under the new prompt
+        # costs the complete top-fidelity latency again (pre-fix it
+        # landed one step early at 0.3 + lat - lat/steps)
+        lat = profile.by_key[s.fidelity_log[0]].latency
+        assert s.ready_times[0] == pytest.approx(0.3 + lat)
+
+    def test_trace_rate_scales_intensity(self):
+        """``trace`` accepted a ``rate`` argument and silently ignored
+        it; now it compresses the whole trace without reshaping it."""
+        t1 = trace(n=300, rate=1.0, seed=0)[-1].arrival
+        t2 = trace(n=300, rate=2.0, seed=0)[-1].arrival
+        assert t2 < 0.7 * t1
+        # shape preserved: same stream count, same length sampling
+        assert ([s.frames for s in trace(n=100, rate=3.0, seed=5)]
+                == [s.frames for s in trace(n=100, rate=1.0, seed=5)])
+        with pytest.raises(ValueError):
+            trace(n=10, rate=0.0)
+
+    def test_summarize_counts_unserved_streams(self):
+        """An admitted stream with zero ready chunks (overload /
+        max_time truncation) was silently skipped, inflating QoE;
+        it must count as CPR 0 and appear in ``n_unserved``."""
+        served = Stream(sid=0, arrival=0.0, target_chunks=1,
+                        chunk_seconds=0.75, home=0, ttfc_slack=1.0)
+        served.ready_times = [0.5]
+        served.deadlines = [1.0]
+        served.first_chunk_time = 0.5
+        served.qualities = [80.0]
+        unserved = Stream(sid=1, arrival=0.0, target_chunks=1,
+                          chunk_seconds=0.75, home=0, ttfc_slack=1.0)
+        res = types.SimpleNamespace(streams={0: served, 1: unserved},
+                                    n_rehomings=0, n_sp_events=0)
+        s = summarize(res)
+        assert s.n_streams == 2
+        assert s.n_unserved == 1
+        assert s.qoe == pytest.approx(0.5)       # (1.0 + 0.0) / 2
+        assert s.ttfc == pytest.approx(0.5)      # served-streams mean
+
+
+class TestVectorizedParity:
+    def test_scalar_vs_vectorized_bit_exact(self):
+        """The numpy-batched control tick must not change a single
+        result bit: same per-stream timelines, same fidelity log, same
+        planner decisions."""
+        specs = WORKLOADS["burst"](n=120, rate=1.0, seed=3)
+
+        def signature(vectorized):
+            res = Simulator(SimConfig(vectorized=vectorized), specs,
+                            make_policy("slackserve")).run()
+            per_stream = sorted(
+                (s.sid, tuple(s.ready_times), tuple(s.deadlines),
+                 tuple(s.fidelity_log), s.stall_time)
+                for s in res.streams.values())
+            return (per_stream, res.fidelity_counts,
+                    res.worker_tier_samples, res.n_rehomings,
+                    res.n_sp_events)
+
+        assert signature(False) == signature(True)
+
+
+class TestFrontDoor:
+    def _view(self, n_workers=2, load=0):
+        workers = [Worker(w, node=0) for w in range(n_workers)]
+        for w in workers:
+            w.queue = list(range(load))      # load() counts queue depth
+        return ClusterView({}, workers, n_workers)
+
+    def test_admits_when_fleet_has_slack(self):
+        fd = FrontDoor(FrontDoorConfig(), first_chunk_estimate=1.0)
+        dec = fd.on_arrival(self._view(load=0), 0.0, 1.0, sid=0)
+        assert dec.action == "admit" and dec.slack >= 0.0
+        assert fd.stats()["admitted"] == 1
+
+    def test_queues_and_scales_under_pressure(self):
+        fd = FrontDoor(FrontDoorConfig(scale_step=4),
+                       first_chunk_estimate=1.0)
+        # predicted = load * ema + first_est = 9 > SLO = 4
+        dec = fd.on_arrival(self._view(load=8), 0.0, 1.0, sid=0)
+        assert dec.action == "queue"
+        assert dec.scale_workers == 4
+        # cooldown: the next arrival queues but does NOT scale again
+        dec2 = fd.on_arrival(self._view(load=8), 1.0, 1.0, sid=1)
+        assert dec2.action == "queue" and dec2.scale_workers == 0
+        st = fd.stats()
+        assert st["queued"] == 2 and st["scale_outs"] == 1
+        assert st["workers_added"] == 4
+
+    def test_scale_respects_max_workers(self):
+        fd = FrontDoor(FrontDoorConfig(max_workers=3, scale_step=4),
+                       first_chunk_estimate=1.0)
+        dec = fd.on_arrival(self._view(n_workers=2, load=8),
+                            0.0, 1.0, sid=0)
+        assert dec.scale_workers == 1          # clamped to the headroom
+
+    def test_rejects_when_queue_full(self):
+        fd = FrontDoor(FrontDoorConfig(queue_limit=1, autoscale=False),
+                       first_chunk_estimate=1.0)
+        v = self._view(load=8)
+        assert fd.on_arrival(v, 0.0, 1.0, sid=0).action == "queue"
+        assert fd.on_arrival(v, 0.1, 1.0, sid=1).action == "reject"
+        assert fd.stats()["rejected"] == 1
+
+    def test_fifo_no_queue_jumping(self):
+        fd = FrontDoor(FrontDoorConfig(autoscale=False),
+                       first_chunk_estimate=1.0)
+        fd.on_arrival(self._view(load=8), 0.0, 1.0, sid=0)
+        # fleet now idle, but sid=1 may not jump the waiting sid=0
+        dec = fd.on_arrival(self._view(load=0), 1.0, 1.0, sid=1)
+        assert dec.action == "queue"
+        admits, rejects = fd.drain(self._view(load=0), 1.0)
+        assert [sid for sid, _ in admits] == [0, 1] and not rejects
+
+    def test_drain_promotes_with_original_arrival(self):
+        fd = FrontDoor(FrontDoorConfig(autoscale=False),
+                       first_chunk_estimate=1.0)
+        fd.on_arrival(self._view(load=8), 0.0, 1.0, sid=7)
+        admits, rejects = fd.drain(self._view(load=0), 2.0)
+        assert admits == [(7, 0.0)] and not rejects
+        assert fd.stats()["waiting_at_end"] == 0
+
+    def test_drain_sheds_on_queue_timeout(self):
+        fd = FrontDoor(FrontDoorConfig(autoscale=False,
+                                       max_queue_wait=5.0),
+                       first_chunk_estimate=1.0)
+        fd.on_arrival(self._view(load=8), 0.0, 1.0, sid=0)
+        # fleet still overloaded past the wait bound: shed, don't stall
+        admits, rejects = fd.drain(self._view(load=8), 6.0)
+        assert not admits and rejects == [0]
+        st = fd.stats()
+        assert st["queue_timeouts"] == 1 and st["rejected"] == 1
+
+    def test_tick_autoscale_needs_backlog(self):
+        fd = FrontDoor(FrontDoorConfig(), first_chunk_estimate=1.0)
+        assert fd.autoscale(self._view(load=8), 0.0) == 0   # no backlog
+        fd.on_arrival(self._view(load=8), 0.0, 1.0, sid=0)  # queues+scales
+        assert fd.autoscale(self._view(load=8), 1.0) == 0   # cooldown
+        assert fd.autoscale(self._view(load=8), 20.0) == 4  # backlog+cool
+
+    def test_flash_crowd_end_to_end(self):
+        """Fleet-level acceptance: a flash crowd through the front door
+        finishes with ZERO arrivals lost — every stream is either served
+        to completion or deliberately shed — and the fleet scaled out."""
+        specs = flash_crowd(n=400, rate=8.0, seed=7)
+        cfg = SimConfig(n_workers=16, front_door=FrontDoorConfig())
+        res = Simulator(cfg, specs, make_policy("slackserve")).run()
+        adm = res.admission
+        assert adm["waiting_at_end"] == 0
+        assert adm["admitted"] + adm["rejected"] == len(specs)
+        assert len(res.streams) == adm["admitted"]
+        assert all(s.done for s in res.streams.values())
+        assert res.n_workers_final > 16 and adm["scale_outs"] > 0
+
+    def test_front_door_improves_overloaded_qoe(self):
+        """Shedding + scale-out must beat admitting every arrival into
+        a drowning fleet."""
+        specs = flash_crowd(n=400, rate=8.0, seed=7)
+        base = summarize(Simulator(SimConfig(n_workers=16), specs,
+                                   make_policy("slackserve")).run())
+        fd = summarize(Simulator(
+            SimConfig(n_workers=16, front_door=FrontDoorConfig()),
+            specs, make_policy("slackserve")).run())
+        assert fd.qoe >= base.qoe

@@ -58,6 +58,16 @@ from repro.serve.executor import ChunkExecutor
 
 FIDELITY = FidelityConfig(4, 0.0, 7, "bf16")
 
+# mixed-fidelity population: four keys spanning steps x sparsity x
+# window, all one KV dtype so fused dispatch collapses them into a
+# single launch per step (the dtype split is the only hard boundary)
+MIXED_FIDELITIES = [
+    FidelityConfig(4, 0.0, 7, "bf16"),
+    FidelityConfig(2, 0.5, 5, "bf16"),
+    FidelityConfig(2, 0.9, 3, "bf16"),
+    FidelityConfig(1, 0.9, 2, "bf16"),
+]
+
 
 def run_sequential(ex: ChunkExecutor, n_streams: int, chunks: int,
                    base_sid: int) -> float:
@@ -142,6 +152,40 @@ def run_oversubscribed(ex: BatchedChunkExecutor, n_streams: int,
     return dt
 
 
+def run_mixed_fidelity(ex: BatchedChunkExecutor, n_streams: int,
+                       chunks: int, max_batch: int, base_sid: int,
+                       fuse: bool) -> tuple:
+    """Serve a mixed-fidelity population (``MIXED_FIDELITIES`` round-
+    robin) and measure elapsed time plus the number of jitted step
+    launches.  ``fuse=False`` is the legacy per-fidelity-key split,
+    ``fuse=True`` the per-dtype fused dispatch — same streams, same
+    schedule, strictly fewer launches fused."""
+    sids = [base_sid + i for i in range(n_streams)]
+    fid_of = {sid: MIXED_FIDELITIES[i % len(MIXED_FIDELITIES)]
+              for i, sid in enumerate(sids)}
+    for i, sid in enumerate(sids):
+        ex.admit(sid, seed=i)
+    d0 = ex.dispatch_count
+    t0 = time.perf_counter()
+    while any(len(ex.chunks[sid]) < chunks for sid in sids):
+        runnable = [sid for sid in sids if len(ex.chunks[sid]) < chunks]
+        runnable.sort(key=lambda sid: (len(ex.chunks[sid]),
+                                       ex.inflight[sid].step
+                                       if sid in ex.inflight else 0))
+        for sid in runnable[:max_batch]:
+            if sid not in ex.inflight:
+                ex.begin_chunk(sid, fid_of[sid], 0.0)
+        for grp in compose_batch(runnable[:max_batch],
+                                 lambda s: ex.inflight[s].fidelity,
+                                 max_batch, fuse=fuse):
+            ex.run_step(grp)
+    dt = time.perf_counter() - t0
+    dispatches = ex.dispatch_count - d0
+    for sid in sids:
+        ex.retire(sid)
+    return dt, dispatches
+
+
 def run_lanes_session(n_lanes: int, n_streams: int, chunks: int,
                       seed: int = 0) -> dict:
     """Multi-lane session scenario: a burst workload served through
@@ -216,6 +260,10 @@ def main() -> None:
     ap.add_argument("--context-backend", choices=("gather", "paged"),
                     default=None,
                     help="measure only one backend (default: both)")
+    ap.add_argument("--mixed-streams", type=int, default=8,
+                    help="stream count of the mixed-fidelity fused-vs-"
+                         "split scenario (0 disables; spans "
+                         f"{len(MIXED_FIDELITIES)} fidelity keys)")
     ap.add_argument("--lanes", type=int, default=0,
                     help="also run the multi-lane session scenario "
                          "with this many lanes (0 disables)")
@@ -307,6 +355,38 @@ def main() -> None:
               f"total={tr['total_s']:.4f}s "
               f"dispatcher_wait={tr['dispatcher_wait_s']:.4f}s "
               f"(async-stream)")
+
+    # mixed-fidelity: split (one launch per fidelity key) vs fused (one
+    # launch per KV dtype) over the same population and schedule
+    if args.mixed_streams:
+        mn = args.mixed_streams
+        results["mixed_fidelity"] = {
+            "streams": mn, "chunks": chunks,
+            "fidelity_keys": [f.key for f in MIXED_FIDELITIES],
+        }
+        print(f"\nmixed_fidelity: {mn} streams over "
+              f"{len(MIXED_FIDELITIES)} fidelity keys")
+        for mode, fuse in (("split", False), ("fused", True)):
+            mex = BatchedChunkExecutor(cfg=seq_ex.cfg,
+                                       params=seq_ex.params,
+                                       max_streams=mn)
+            cold, disp = run_mixed_fidelity(mex, mn, chunks, mn,
+                                            base_sid=400, fuse=fuse)
+            warm, disp_w = run_mixed_fidelity(mex, mn, chunks, mn,
+                                              base_sid=500, fuse=fuse)
+            results["mixed_fidelity"][mode] = {
+                "cold_s": round(cold, 4), "warm_s": round(warm, 4),
+                "streams_per_s": round(mn / warm, 4),
+                "dispatch_count": disp_w,
+            }
+            print(f"  {mode:6s} cold={cold:6.2f}s warm={warm:6.2f}s "
+                  f"-> {mn / warm:5.2f} streams/s, "
+                  f"{disp_w} launches/pass")
+        sp = results["mixed_fidelity"]
+        print(f"  fused vs split: "
+              f"{sp['fused']['streams_per_s'] / sp['split']['streams_per_s']:.2f}x "
+              f"streams/s, {sp['split']['dispatch_count']} -> "
+              f"{sp['fused']['dispatch_count']} launches")
 
     if args.lanes:
         row = run_lanes_session(args.lanes, args.lane_streams,

@@ -17,8 +17,8 @@ lost), and — when the calibration cell ran — sim-vs-real agreement
 ticks/s vs the previous artifact, same threshold rules as streams/s.
 
 Tracked scenarios: ``sequential``, ``batched/<backend>``,
-``oversubscribed/<backend>`` and ``lanes/<n>`` ``streams_per_s``
-entries; any other fields a scenario row carries (migration/SP counts,
+``oversubscribed/<backend>``, ``mixed_fidelity/<mode>`` and
+``lanes/<n>`` ``streams_per_s`` entries; any other fields a scenario row carries (migration/SP counts,
 QoE, transfer reports, the device-lane ``transfer_measured`` stats and
 ``lane_transfer_bytes`` in/out attribution, ...) are ignored, so the
 compare tolerates new JSON fields without breaking.  Measured transfer
@@ -43,11 +43,56 @@ def _rates(bench: dict) -> dict:
     seq = bench.get("sequential", {})
     if "streams_per_s" in seq:
         out["sequential"] = seq["streams_per_s"]
-    for section in ("batched", "oversubscribed", "lanes"):
+    for section in ("batched", "oversubscribed", "mixed_fidelity",
+                    "lanes"):
         for key, row in bench.get(section, {}).items():
             if isinstance(row, dict) and "streams_per_s" in row:
                 out[f"{section}/{key}"] = row["streams_per_s"]
     return out
+
+
+def _load_prev(path: str):
+    """Previous nightly artifact, or None with a warning: a missing,
+    truncated, or corrupt history must never fail the gate — the
+    trajectory simply bootstraps from this run's output."""
+    if not os.path.exists(path):
+        print(f"no previous artifact at {path}: nothing to compare "
+              f"(bootstrapping the bench trajectory)")
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"WARNING: previous artifact {path} unreadable ({e}): "
+              f"bootstrapping the bench trajectory")
+        return None
+
+
+def check_mixed_fidelity(bench: dict, threshold: float) -> bool:
+    """Absolute fused-dispatch gate on the NEW output (no history
+    needed): the fused mode must issue strictly fewer jitted launches
+    than split AND hold streams/s at least to within the regression
+    threshold.  Returns True when the gate FAILS; silently passes when
+    the scenario was not run (e.g. --mixed-streams 0)."""
+    mf = bench.get("mixed_fidelity") or {}
+    split, fused = mf.get("split"), mf.get("fused")
+    if not (isinstance(split, dict) and isinstance(fused, dict)):
+        return False
+    failed = False
+    sd, fdp = split.get("dispatch_count"), fused.get("dispatch_count")
+    if sd is not None and fdp is not None:
+        flag = "ok" if fdp < sd else "FAIL"
+        print(f"  mixed_fidelity dispatches    {sd} -> {fdp} "
+              f"(gate: fused < split) {flag}")
+        failed |= not fdp < sd
+    sr, fr = split.get("streams_per_s"), fused.get("streams_per_s")
+    if sr and fr:
+        floor = sr * (1.0 - threshold)
+        flag = "ok" if fr >= floor else "FAIL"
+        print(f"  mixed_fidelity streams/s     split={sr:.3f} "
+              f"fused={fr:.3f} (gate >= {floor:.3f}) {flag}")
+        failed |= fr < floor
+    return failed
 
 
 def check_fleet(args) -> int:
@@ -91,19 +136,15 @@ def check_fleet(args) -> int:
         failed |= not ok
 
     new_r = (new.get("vectorized") or {}).get("ticks_per_s")
-    if os.path.exists(args.prev):
-        with open(args.prev) as f:
-            prev_r = (json.load(f).get("vectorized") or {}) \
-                .get("ticks_per_s")
+    prev = _load_prev(args.prev)
+    if prev is not None:
+        prev_r = (prev.get("vectorized") or {}).get("ticks_per_s")
         if new_r and prev_r:
             delta = (new_r - prev_r) / prev_r
             flag = "REGRESSION" if delta < -args.threshold else "ok"
             print(f"  ticks/s          {prev_r:8.1f} -> {new_r:8.1f} "
                   f"({delta:+.1%}) {flag}")
             failed |= delta < -args.threshold
-    else:
-        print(f"  ticks/s          {new_r} (no previous artifact: "
-              f"bootstrapping the trajectory)")
 
     if failed:
         print("FAIL: fleet benchmark gate")
@@ -132,15 +173,19 @@ def main() -> int:
         return check_fleet(args)
 
     with open(args.new) as f:
-        new = _rates(json.load(f))
-    if not os.path.exists(args.prev):
-        print(f"no previous artifact at {args.prev}: nothing to compare "
-              f"(bootstrapping the bench trajectory)")
-        return 0
-    with open(args.prev) as f:
-        prev = _rates(json.load(f))
+        new_bench = json.load(f)
+    new = _rates(new_bench)
+    # absolute gate first: fused dispatch must beat split on the NEW
+    # output regardless of history
+    failed = check_mixed_fidelity(new_bench, args.threshold)
 
-    failed = False
+    prev_bench = _load_prev(args.prev)
+    if prev_bench is None:
+        if failed:
+            print("FAIL: mixed-fidelity fused-dispatch gate")
+            return 1
+        return 0
+    prev = _rates(prev_bench)
     for scenario in sorted(set(new) | set(prev)):
         if scenario not in prev:
             print(f"  {scenario:28s} new scenario "
@@ -160,8 +205,8 @@ def main() -> int:
         if delta < -args.threshold:
             failed = True
     if failed:
-        print(f"FAIL: streams/s regressed more than "
-              f"{args.threshold:.0%} vs the previous nightly run")
+        print(f"FAIL: fused-dispatch gate or streams/s regression "
+              f"beyond {args.threshold:.0%} vs the previous nightly run")
         return 1
     print("bench trajectory ok")
     return 0

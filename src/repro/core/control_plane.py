@@ -47,6 +47,7 @@ class TickDecisions:
     sp_decisions: List[elastic_sp.SPDecision]
     control_time_s: float              # wall-clock cost of this tick
     scale_out: int = 0                 # front-door autoscale: workers to add
+    scale_in: int = 0                  # front-door scale-in: workers to retire
 
 
 class ControlPlane:
@@ -81,8 +82,10 @@ class ControlPlane:
         someone else's SP2 half has no headroom its own queue shows
         (``Worker.load`` also counts the donation, but an admitted
         stream would still contend with the borrowed one, so donors are
-        skipped outright while any non-donating worker exists)."""
-        free = [w for w in view.workers if w.donated_to is None]
+        skipped outright while any non-donating worker exists).
+        Retired workers (front-door scale-in) never take admissions."""
+        free = [w for w in view.workers
+                if w.donated_to is None and not w.retired]
         return min(free or view.workers, key=lambda w: w.load()).wid
 
     def initial_slack(self, first_chunk_estimate: float) -> float:
@@ -128,12 +131,17 @@ class ControlPlane:
                                     if d.kind == "expand")
 
         scale_out = 0
+        scale_in = 0
         if self.front_door is not None:
             scale_out = self.front_door.autoscale(view, now)
+            if scale_out == 0:
+                # never shed and add capacity in the same tick
+                scale_in = self.front_door.maybe_scale_in(view, now)
 
         dt = _time.perf_counter() - t0
         self.tick_times.append(dt)
-        return TickDecisions(migrations, sp_decisions, dt, scale_out)
+        return TickDecisions(migrations, sp_decisions, dt, scale_out,
+                             scale_in)
 
     def _update_streams_scalar(self, view: ClusterView, now: float) -> None:
         cfg = self.config

@@ -75,7 +75,8 @@ def plan_elastic_sp(view: ClusterView, now: float,
                 cands.append(s)
         relaxed_by_node: Dict[int, List[Worker]] = {}
         for w in view.workers:
-            if ((w.donated_to is None or w.wid in released)
+            if (not w.retired
+                    and (w.donated_to is None or w.wid in released)
                     and queues.worker_class(counts[w.wid]) == "relaxed"):
                 relaxed_by_node.setdefault(view.node_of(w.wid),
                                            []).append(w)
@@ -120,6 +121,7 @@ def plan_elastic_sp(view: ClusterView, now: float,
         node = view.node_of(s.home)
         donors = [w for w in view.workers
                   if view.node_of(w.wid) == node and w.wid != s.home
+                  and not w.retired
                   and (w.donated_to is None or w.wid in released)
                   and w.wid not in borrowed
                   and queues.worker_class(counts[w.wid]) == "relaxed"]

@@ -74,6 +74,29 @@ def pick_eviction(resident_sids: List[int], streams: Dict[int, Stream],
     return max(candidates, key=lambda sid: (streams[sid].credit, -sid))
 
 
+def pick_page_eviction(resident_sids: List[int], streams: Dict[int, Stream],
+                       protect: Union[int, Iterable[int], None] = None,
+                       has_evictable=None) -> Optional[int]:
+    """Page-granular eviction victim: the highest-credit resident that
+    still has an evictable ring page (``has_evictable(sid)``, supplied
+    by the pool — a stream degraded down to its floor drops out of the
+    candidate set).  Same protections and deterministic tie-break as
+    ``pick_eviction``; this is the FIRST rung of the degradation ladder
+    (trade one stream's window W down by a page) before whole-stream
+    spill."""
+    if protect is None:
+        shield = frozenset()
+    elif isinstance(protect, Iterable):
+        shield = frozenset(protect)
+    else:
+        shield = frozenset((protect,))
+    candidates = [sid for sid in resident_sids if sid not in shield
+                  and (has_evictable is None or has_evictable(sid))]
+    if not candidates:
+        return None
+    return max(candidates, key=lambda sid: (streams[sid].credit, -sid))
+
+
 def tier_counts(view: ClusterView) -> Dict[int, Dict[Tier, int]]:
     """Per-worker tier histogram over queued + running streams."""
     out: Dict[int, Dict[Tier, int]] = {}

@@ -41,7 +41,7 @@ def plan_rehoming(view: ClusterView, now: float,
     # borrowed stream is homed elsewhere), so without this filter a
     # migration could land on a lane that is already busy donating
     receivers = [w for w in view.workers
-                 if w.donated_to is None
+                 if w.donated_to is None and not w.retired
                  and queues.worker_class(counts[w.wid]) == "relaxed"]
     if not receivers:
         # fleet-overload fast exit: with nowhere to re-home to, the

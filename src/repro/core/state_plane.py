@@ -60,6 +60,16 @@ class PagedKVPool:
         self.free += n
         return n
 
+    def release_pages(self, sid: int, n: int) -> None:
+        """Give back ``n`` of ``sid``'s pages without releasing the
+        stream (page-granular partial-window eviction: the stream stays
+        resident with a smaller effective window)."""
+        held = self.tables.get(sid, 0)
+        assert held >= n, \
+            f"stream {sid} holds {held} pages, cannot release {n}"
+        self.tables[sid] = held - n
+        self.free += n
+
     def resident_sids(self) -> List[int]:
         return list(self.tables)
 

@@ -97,6 +97,10 @@ class Worker:
     donated_to: Optional[int] = None       # stream borrowing this worker
     sent_this_tick: int = 0
     recv_this_tick: int = 0
+    # front-door scale-in: a retired worker keeps its wid slot (wids
+    # index per-worker arrays everywhere) but receives no dispatches,
+    # re-homings, SP donations, or admissions until revived
+    retired: bool = False
 
     def load(self) -> int:
         """Queued + running + donated: a worker lending itself as an

@@ -36,7 +36,14 @@ def paged_chunk_attention(q, k_pages, v_pages, block_table, page_mask,
     sink page / ring pages so the jnp oracle can skip always-masked page
     tails (the Pallas kernel stays page-aligned — pages are its DMA
     granule); ``page_mask=None`` (hint required) is the all-visible fast
-    path that skips per-score masking.  Returns fp32 online-softmax
+    path that skips per-score masking.  ``page_mask`` is per-ROW, so a
+    single launch serves rows with different fidelity windows and
+    sparsities (fused heterogeneous-fidelity dispatch) as well as rows
+    degraded by partial-window page eviction: the caller maps a dropped
+    ring page's hole entry to some valid page row (the stream's own
+    sink) with its whole mask slice false, so whatever K/V the hole
+    stand-in holds contributes only -inf scores and never reaches the
+    softmax.  Returns fp32 online-softmax
     partials (m, l [B,Hkv,G,Sq]; acc [B,Hkv,G,Sq,D] unnormalized) for
     ``attention.paged_mha`` to merge with the chunk's own fresh KV
     segment."""

@@ -581,13 +581,33 @@ def batched_context_mask(cfg: ModelConfig, chunks: np.ndarray, window: int,
     the exact token set ``visible_context`` + ``cache_sparse_index`` give
     the sequential path, mapped through the ring permutation.
     """
+    n = len(np.asarray(chunks, np.int64))
+    return batched_context_mask_multi(
+        cfg, chunks, np.full(n, window, np.int64),
+        np.full(n, sparsity, np.float64))
+
+
+def batched_context_mask_multi(cfg: ModelConfig, chunks: np.ndarray,
+                               windows: np.ndarray,
+                               sparsities: np.ndarray) -> np.ndarray:
+    """``batched_context_mask`` with PER-ROW window/sparsity knobs.
+
+    The fused heterogeneous-fidelity dispatch stacks streams of
+    different fidelities into one sub-batch; since window and sparsity
+    only ever enter the step as mask *data*, each row simply gets the
+    mask its own fidelity would have produced — row i here is
+    bit-identical to row i of a per-fidelity ``batched_context_mask``
+    call (the uniform builder above delegates to this one).
+    """
     tc = chunk_tokens(cfg)
     w_max = cfg.ardit_window_chunks
     mask = np.zeros((len(chunks), cache_capacity(cfg)), bool)
+    windows = np.asarray(windows, np.int64)
+    sparsities = np.asarray(sparsities, np.float64)
     for i, n in enumerate(np.asarray(chunks, np.int64)):
-        w = min(window, int(n), w_max)
+        w = min(int(windows[i]), int(n), w_max)
         ctx_len = COND_TOKENS + w * tc
-        keep = cache_sparse_index(cfg, ctx_len, sparsity)
+        keep = cache_sparse_index(cfg, ctx_len, float(sparsities[i]))
         idx = np.arange(ctx_len) if keep is None else keep
         mask[i, idx[idx < COND_TOKENS]] = True
         body = idx[idx >= COND_TOKENS] - COND_TOKENS

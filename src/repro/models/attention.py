@@ -126,6 +126,11 @@ def mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``kv_mask``: optional [B,Skv] per-batch KV validity (non-causal/direct
     path only) — the batched serving executor masks ring-cache slots that
     are unfilled, outside a stream's fidelity window, or sparsity-dropped.
+    Because the mask is per-ROW data, one launch can serve rows with
+    DIFFERENT fidelity windows/sparsities (fused heterogeneous-fidelity
+    dispatch) and rows whose ring pages were partially evicted — the
+    caller zeroes the dropped chunks' token slices and this function
+    never reads them.
     """
     b, sq, hq, d = q.shape
     skv = k.shape[1]
@@ -257,7 +262,10 @@ def paged_mha(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     [n_pages, page, Hkv, D] through per-stream ``block_table`` [B, n]
     with ``page_mask`` [B, n*page] marking the visible context tokens in
     table order (ring residency + fidelity window + sparsity + page-tail
-    validity baked in by the caller), and (b) the chunk's own fresh KV
+    validity + partial-window page drops baked in by the caller — all
+    per-row, so one fused launch serves heterogeneous fidelities, and a
+    degraded stream's dropped ring page (hole remapped to its sink row,
+    mask slice false) is simply never attended), and (b) the chunk's own fresh KV
     ``chunk_k``/``chunk_v`` [B,Sq,Hkv,D] (bidirectional, fully visible).
 
     The paged segment contributes online-softmax partials — the

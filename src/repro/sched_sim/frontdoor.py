@@ -49,7 +49,15 @@ class FrontDoorConfig:
     arrival may sit in it before it is shed (timeout reject).
     Autoscaling adds ``scale_step`` workers per decision (cold-start
     ``provision_delay`` seconds before they serve), at most every
-    ``scale_cooldown`` seconds, never past ``max_workers``."""
+    ``scale_cooldown`` seconds, never past ``max_workers``.
+
+    Scale-IN retires ``scale_in_step`` idle workers per decision, at
+    most every ``scale_in_cooldown`` seconds, only while the admission
+    queue is empty and the surviving fleet's predicted TTFC would stay
+    comfortably inside the SLO (``scale_in_slack_factor`` x predicted
+    TTFC <= SLO), never below ``min_workers``.  The longer cooldown is
+    deliberate hysteresis: provisioning is expensive, so capacity is
+    shed far more slowly than it is added."""
     slo_ttfc_factor: float = SLO_TTFC_FACTOR
     queue_limit: int = 512
     max_queue_wait: float = 60.0
@@ -60,6 +68,11 @@ class FrontDoorConfig:
     provision_delay: float = 6.0
     # chunk-service EMA blend (new observation weight)
     ema_decay: float = 0.2
+    # scale-in (worker retirement) knobs
+    min_workers: int = 1
+    scale_in_step: int = 1
+    scale_in_cooldown: float = 30.0
+    scale_in_slack_factor: float = 2.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +100,7 @@ class FrontDoor:
         # FIFO admission queue: (sid, arrival_time, enqueue_time)
         self.waiting: List[Tuple[int, float, float]] = []
         self._cooldown_until = -1e18
+        self._in_cooldown_until = -1e18
         self.outcomes: Dict[int, str] = {}       # sid -> final outcome
         self.n_admitted = 0
         self.n_queued = 0                        # ever queued
@@ -94,6 +108,8 @@ class FrontDoor:
         self.n_timeouts = 0                      # rejects from queue wait
         self.n_scale_outs = 0
         self.workers_added = 0
+        self.n_scale_ins = 0
+        self.workers_retired = 0
 
     # ------------------------------------------------------------- predict
     def slo_ttfc(self) -> float:
@@ -101,9 +117,11 @@ class FrontDoor:
 
     def predict_ttfc(self, view: Any) -> float:
         """Load-derived TTFC estimate for a stream admitted NOW: homed
-        on the least-loaded worker, it waits ~load chunk services for
-        its first dispatch slot, then generates its own first chunk."""
-        load = min(w.load() for w in view.workers)
+        on the least-loaded ACTIVE worker (retired workers take no
+        admissions), it waits ~load chunk services for its first
+        dispatch slot, then generates its own first chunk."""
+        load = min((w.load() for w in view.workers if not w.retired),
+                   default=min(w.load() for w in view.workers))
         return load * self.chunk_service_ema + self.first_est
 
     def observe_chunk(self, service_seconds: float) -> None:
@@ -176,11 +194,14 @@ class FrontDoor:
         cfg = self.cfg
         if not cfg.autoscale or now < self._cooldown_until:
             return 0
-        n = len(view.workers)
+        n = sum(1 for w in view.workers if not w.retired)
         if n >= cfg.max_workers:
             return 0
         k = min(cfg.scale_step, cfg.max_workers - n)
         self._cooldown_until = now + cfg.scale_cooldown
+        # hysteresis: fresh capacity must not be shed right back
+        self._in_cooldown_until = max(self._in_cooldown_until,
+                                      now + cfg.scale_in_cooldown)
         self.n_scale_outs += 1
         self.workers_added += k
         return k
@@ -194,6 +215,39 @@ class FrontDoor:
             return 0
         return self._maybe_scale(view, now)
 
+    def maybe_scale_in(self, view: Any, now: float) -> int:
+        """Tick-cadence scale-IN decision: retire idle workers when the
+        admission queue is empty and the survivors' predicted TTFC
+        keeps comfortable SLO slack (``scale_in_slack_factor`` margin).
+        Only IDLE workers are candidates — the driver drains a victim's
+        queued streams by re-homing before marking it retired, so a
+        busy fleet simply yields 0 here.  Cooldown-gated with a much
+        longer period than scale-out (hysteresis)."""
+        cfg = self.cfg
+        if (not cfg.autoscale or self.waiting
+                or now < self._in_cooldown_until):
+            return 0
+        active = [w for w in view.workers if not w.retired]
+        idle = [w for w in active
+                if w.load() == 0 and w.donated_to is None]
+        k = min(cfg.scale_in_step, len(idle),
+                len(active) - cfg.min_workers)
+        if k <= 0:
+            return 0
+        # survivors' predicted TTFC must stay comfortably positive:
+        # retiring k idle workers leaves min-load = the best survivor
+        survivors = active[:]
+        for w in idle[:k]:
+            survivors.remove(w)
+        pred = (min(w.load() for w in survivors) * self.chunk_service_ema
+                + self.first_est)
+        if pred * cfg.scale_in_slack_factor > self.slo_ttfc():
+            return 0
+        self._in_cooldown_until = now + cfg.scale_in_cooldown
+        self.n_scale_ins += 1
+        self.workers_retired += k
+        return k
+
     # ------------------------------------------------------------- report
     def stats(self) -> Dict[str, int]:
         return {
@@ -203,5 +257,7 @@ class FrontDoor:
             "queue_timeouts": self.n_timeouts,
             "scale_outs": self.n_scale_outs,
             "workers_added": self.workers_added,
+            "scale_ins": self.n_scale_ins,
+            "workers_retired": self.workers_retired,
             "waiting_at_end": len(self.waiting),
         }

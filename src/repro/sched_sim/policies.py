@@ -65,6 +65,8 @@ class SlackServePolicy(Policy):
         decisions = self.control.tick(self.sim.view, now)
         if decisions.scale_out:
             self.sim.scale_out(decisions.scale_out)
+        if decisions.scale_in:
+            self.sim.scale_in(decisions.scale_in)
         for mig in decisions.migrations:
             rehoming.apply_migration(self.sim.view, mig)
             self.sim.migrate(mig.sid, mig.src, mig.dst, mig.cross_node)

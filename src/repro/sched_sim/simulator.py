@@ -153,7 +153,8 @@ class Simulator:
                          admission=(self.front_door.stats()
                                     if self.front_door else {}),
                          tick_wall=self.tick_wall,
-                         n_workers_final=len(self.view.workers))
+                         n_workers_final=sum(1 for w in self.view.workers
+                                             if not w.retired))
 
     def _all_done(self) -> bool:
         # O(1): every spec either finished serving or was shed by the
@@ -212,6 +213,16 @@ class Simulator:
         delay = (self.front_door.cfg.provision_delay
                  if self.front_door else 0.0)
         for _ in range(k):
+            # revive a retired worker before growing the arrays: its
+            # slot (pool, batch lane, dispatcher) is already there, but
+            # it still pays the same cold-start delay
+            revive = next((w for w in self.view.workers if w.retired),
+                          None)
+            if revive is not None:
+                revive.retired = False
+                self.blocked_until[revive.wid] = self.now + delay
+                self.push(self.now + delay, "worker_unblock", revive.wid)
+                continue
             wid = len(self.view.workers)
             self.view.workers.append(
                 Worker(wid, node=wid // cfg.workers_per_node))
@@ -221,6 +232,44 @@ class Simulator:
             self.batch_epoch.append(0)
             self.push(self.now + delay, "worker_unblock", wid)
         return k
+
+    def scale_in(self, k: int) -> int:
+        """Retire up to ``k`` workers (front-door scale-in).  A retired
+        worker keeps its wid slot — per-worker arrays are indexed by
+        wid everywhere — but takes no dispatches, admissions,
+        re-homings, or SP donations until revived.  Victims are drained
+        first: queued streams re-home to the least-loaded surviving
+        worker through the normal migration path (page-pool and
+        transfer conservation intact); a worker actually RUNNING a
+        chunk is never a victim.  Most-recently-provisioned workers
+        retire first (LIFO, mirroring ``scale_out``)."""
+        from repro.core import rehoming
+        retired = 0
+        for w in sorted(self.view.workers, key=lambda x: -x.wid):
+            if retired >= k:
+                break
+            if (w.retired or w.donated_to is not None
+                    or w.running is not None or self.batch[w.wid]):
+                continue
+            survivors = [x for x in self.view.workers
+                         if not x.retired and x.wid != w.wid
+                         and x.donated_to is None]
+            if not survivors:
+                break
+            for sid in list(w.queue):
+                if not self._runnable(sid):
+                    break
+                dst = min(survivors, key=lambda x: x.load())
+                mig = rehoming.Migration(
+                    sid, w.wid, dst.wid,
+                    self.view.node_of(w.wid) != self.view.node_of(dst.wid))
+                rehoming.apply_migration(self.view, mig)
+                self.migrate(sid, w.wid, dst.wid, mig.cross_node)
+            if w.queue:
+                continue                 # undrainable: keep it serving
+            w.retired = True
+            retired += 1
+        return retired
 
     # ------------------------------------------------------------------ control
     def _on_tick(self, _: None) -> None:
@@ -303,7 +352,7 @@ class Simulator:
 
     def _try_dispatch(self, wid: int) -> None:
         w = self.view.workers[wid]
-        if self.batch[wid] or self.now < self.blocked_until[wid]:
+        if w.retired or self.batch[wid] or self.now < self.blocked_until[wid]:
             return
         if w.donated_to is not None:
             sid = w.donated_to

@@ -46,7 +46,7 @@ from repro.serve.executor import EMA_DECAY, ChunkExecutor, ServedStream
 
 def compose_batch(sids: Sequence[int],
                   fidelity_of: Callable[[int], FidelityConfig],
-                  max_batch: int) -> List[List[int]]:
+                  max_batch: int, fuse: bool = False) -> List[List[int]]:
     """Credit-ordered micro-batch composition.
 
     ``sids`` is the runnable set already ordered by service credit
@@ -54,10 +54,19 @@ def compose_batch(sids: Sequence[int],
     ``max_batch`` streams and splits them into same-fidelity sub-batches
     (``FidelityConfig.key``), preserving credit order within and across
     groups — the first group contains the most urgent stream.
+
+    ``fuse=True`` groups by **quantization dtype only** (the fused
+    heterogeneous-fidelity dispatch): steps, window, and sparsity are
+    per-row data inside ``run_step`` — the padded-steps schedule — so
+    one jitted launch serves every fidelity of a dtype, cutting
+    dispatch count from O(#fidelity keys) to O(#dtypes).  The dtype
+    split stays: KV quantization changes the pool buffer dtype the
+    jitted step is compiled against, which cannot be row data.
     """
     groups: Dict[str, List[int]] = {}
     for sid in list(sids)[:max_batch]:
-        groups.setdefault(fidelity_of(sid).key, []).append(sid)
+        fid = fidelity_of(sid)
+        groups.setdefault(fid.quant if fuse else fid.key, []).append(sid)
     return list(groups.values())
 
 
@@ -79,6 +88,12 @@ class PageLedger:
         self.chunks: Dict[int, int] = {}
         self.spilled: set = set()
         self.accounting = PagedKVPool(n_pages)
+        # partial-window residency: absolute chunk indices whose ring
+        # page was individually evicted (table entry -1, KV DISCARDED —
+        # a degradation, not a spill).  The set survives whole-stream
+        # spill/restore (the restored page holds zeros, not the lost
+        # KV) and is pruned as chunks age out of the ring.
+        self.dropped: Dict[int, set] = {}
 
     @property
     def free_pages(self) -> int:
@@ -114,24 +129,124 @@ class PageLedger:
             if not spill:
                 self.spilled.discard(sid)
                 self.chunks.pop(sid, None)
+                self.dropped.pop(sid, None)
             return None
-        self._free.extend(int(p) for p in table)
+        # hole entries (-1: individually evicted ring pages) own nothing
+        self._free.extend(int(p) for p in table if int(p) >= 0)
         self.accounting.release(sid)
         if spill:
             self.spilled.add(sid)
         else:
             self.chunks.pop(sid, None)
+            self.dropped.pop(sid, None)
         return table
 
+    # ---- partial-window residency (page-granular eviction) -----------------
+    def _ring_contents(self, sid: int) -> Dict[int, Optional[int]]:
+        """Table ring entry (1..W) -> absolute chunk it currently holds,
+        or None for an entry no chunk has reached yet."""
+        w = self.pages_per_stream - 1
+        n = self.chunks.get(sid, 0)
+        held: Dict[int, Optional[int]] = {
+            e: None for e in range(1, self.pages_per_stream)}
+        for c in range(max(0, n - w), n):
+            held[kvcache.page_of_chunk(c, w)] = c
+        return held
+
+    def page_eviction_entry(self, sid: int) -> Optional[int]:
+        """Ring entry the partial-window ladder would free next for
+        ``sid``, or None when the stream is at its residency floor.
+        Preference order: an entry no chunk has reached yet (zero
+        quality cost), else the entry holding the OLDEST retained chunk
+        — never the newest chunk (always visible, most valuable) and
+        never the last allocated ring entry (so an append into a hole
+        can always self-heal by stealing a sibling page)."""
+        table = self.tables.get(sid)
+        if table is None:
+            return None
+        alloc = [e for e in range(1, len(table)) if int(table[e]) >= 0]
+        if len(alloc) <= 1:
+            return None
+        held = self._ring_contents(sid)
+        unwritten = [e for e in alloc if held[e] is None]
+        if unwritten:
+            return unwritten[-1]
+        newest = self.chunks.get(sid, 0) - 1
+        olds = sorted((held[e], e) for e in alloc if held[e] != newest)
+        return olds[0][1] if olds else None
+
+    def evict_page(self, sid: int) -> Optional[int]:
+        """Free ONE of ``sid``'s ring pages (partial-window residency:
+        the stream stays resident with its effective window reduced by
+        one chunk).  The page's KV is DISCARDED, not spilled — the
+        chunk it held joins ``dropped`` and the masks stop attending to
+        it.  Returns the dropped absolute chunk index (or -1 for an
+        unwritten entry), None when the stream is at its floor."""
+        entry = self.page_eviction_entry(sid)
+        if entry is None:
+            return None
+        held = self._ring_contents(sid)
+        table = self.tables[sid]
+        self._free.append(int(table[entry]))
+        table[entry] = -1
+        self.accounting.release_pages(sid, 1)
+        c = held[entry]
+        if c is not None:
+            self.dropped.setdefault(sid, set()).add(c)
+        return c if c is not None else -1
+
+    def prune_dropped(self, sid: int) -> None:
+        """Forget dropped chunks that aged out of the ring — they are
+        no longer addressable, degraded window or not."""
+        d = self.dropped.get(sid)
+        if d:
+            floor = self.chunks.get(sid, 0) - (self.pages_per_stream - 1)
+            d.difference_update({c for c in d if c < floor})
+            if not d:
+                self.dropped.pop(sid, None)
+
     def append_page(self, sid: int) -> int:
-        """Destination page of ``sid``'s next chunk (ring entry)."""
-        return int(self.tables[sid][kvcache.page_of_chunk(
-            self.chunks[sid], self.pages_per_stream - 1)])
+        """Destination page of ``sid``'s next chunk (ring entry).  When
+        the entry is a hole (its page was individually evicted), the
+        append HEALS it: a free page if one exists, else the stream
+        steals its own least-valuable sibling ring page (whose chunk
+        joins ``dropped`` — degradation stays page-granular and
+        self-contained)."""
+        table = self.tables[sid]
+        entry = kvcache.page_of_chunk(self.chunks[sid],
+                                      self.pages_per_stream - 1)
+        if int(table[entry]) < 0:
+            if self._free:
+                table[entry] = self._free.pop()
+                ok = self.accounting.alloc(sid, 1)
+                assert ok
+            else:
+                donor = self._steal_entry(sid, entry)
+                table[entry] = int(table[donor])
+                table[donor] = -1
+        return int(table[entry])
+
+    def _steal_entry(self, sid: int, target: int) -> int:
+        """Sibling ring entry whose page a hole-append steals under a
+        dry free list: an unreached entry first, else the oldest
+        retained chunk's entry (which joins ``dropped``)."""
+        table = self.tables[sid]
+        alloc = [e for e in range(1, len(table))
+                 if e != target and int(table[e]) >= 0]
+        assert alloc, f"stream {sid} has no ring page left to steal"
+        held = self._ring_contents(sid)
+        unwritten = [e for e in alloc if held[e] is None]
+        if unwritten:
+            return unwritten[-1]
+        donor = min(alloc, key=lambda e: held[e])
+        self.dropped.setdefault(sid, set()).add(held[donor])
+        return donor
 
     def check(self) -> None:
         """Pool invariants: page conservation, unique ownership, and
         agreement with the mirrored state-plane accounting."""
-        allocated = [int(p) for t in self.tables.values() for p in t]
+        allocated = [int(p) for t in self.tables.values()
+                     for p in t if int(p) >= 0]
         assert len(set(allocated)) == len(allocated), \
             "page owned by two streams"
         assert len(set(self._free)) == len(self._free), \
@@ -142,6 +257,10 @@ class PageLedger:
             "page leak: used + free != n_pages"
         assert not self.spilled & set(self.tables), \
             "stream both spilled and resident"
+        for sid, t in self.tables.items():
+            assert int(t[0]) >= 0, f"stream {sid} lost its sink page"
+            assert len(t) == 1 or any(int(p) >= 0 for p in t[1:]), \
+                f"stream {sid} degraded below the one-ring-page floor"
         assert self.accounting.used == len(allocated)
         self.accounting.check()
 
@@ -264,14 +383,23 @@ class KVPool:
         return (sub["k"][:, :, :A.COND_TOKENS],
                 sub["v"][:, :, :A.COND_TOKENS])
 
+    def table_rows(self, sid: int) -> np.ndarray:
+        """Physical page rows of ``sid``'s table with holes (-1:
+        individually evicted ring pages) mapped to the stream's own
+        sink page — a valid, fully-masked stand-in: the visibility
+        masks never attend to a dropped chunk's tokens, so the gather /
+        kernel may read anything there."""
+        t = self.ledger.tables[sid]
+        return np.where(t < 0, t[0], t)
+
     def device_table(self, sid: int) -> jax.Array:
         """This stream's page table as a device int32 [1 + W] array,
         cached for the residency epoch (the table only changes on
-        admit/evict/restore/retire, so re-uploading it per boundary —
-        let alone per step — is pure waste)."""
+        admit/evict/restore/retire/page-evict, so re-uploading it per
+        boundary — let alone per step — is pure waste)."""
         t = self._dev_tables.get(sid)
         if t is None:
-            t = jnp.asarray(self.ledger.tables[sid], jnp.int32)
+            t = jnp.asarray(self.table_rows(sid), jnp.int32)
             if self.device is not None:
                 t = jax.device_put(t, self.device)
             self._dev_tables[sid] = t
@@ -332,17 +460,51 @@ class KVPool:
     def evict(self, sid: int) -> int:
         """Spill a resident stream's pages to host memory and free them.
         Returns the number of pages released (credit-aware victim
-        selection is the caller's job — ``queues.pick_eviction``)."""
+        selection is the caller's job — ``queues.pick_eviction``).  A
+        partially-degraded stream spills with its hole slices zeroed
+        (their KV is already gone; ``ledger.dropped`` keeps masking the
+        lost chunks after restore)."""
         table = self.ledger.tables[sid]
-        rows = jnp.asarray(table, jnp.int32)
+        holes = np.flatnonzero(np.asarray(table) < 0)
+        rows = jnp.asarray(self.table_rows(sid), jnp.int32)
         # materialize on host BEFORE the pages are reused
-        self._spill[sid] = {"k": np.asarray(self.k[:, rows]),
-                            "v": np.asarray(self.v[:, rows])}
+        spill_k = np.asarray(self.k[:, rows])
+        spill_v = np.asarray(self.v[:, rows])
+        if holes.size:
+            # np.asarray of a device buffer is a read-only view
+            spill_k = spill_k.copy()
+            spill_v = spill_v.copy()
+            spill_k[:, holes] = 0
+            spill_v[:, holes] = 0
+        self._spill[sid] = {"k": spill_k, "v": spill_v}
         self.ledger.drop(sid, spill=True)
         self._dev_tables.pop(sid, None)
-        self._charge_transfer(self._spill[sid]["k"].nbytes
-                              + self._spill[sid]["v"].nbytes, "out")
+        self._charge_transfer(spill_k.nbytes + spill_v.nbytes, "out")
         return self.pages_per_stream
+
+    def evict_page(self, sid: int) -> bool:
+        """Free ONE ring page of ``sid`` (partial-window residency: the
+        degradation ladder's first rung).  The page's KV is discarded —
+        no host spill and NO transfer charge: nothing moved anywhere,
+        the stream simply trades its effective window down by a chunk.
+        False when the stream is at its residency floor."""
+        if self.ledger.evict_page(sid) is None:
+            return False
+        self._dev_tables.pop(sid, None)
+        return True
+
+    def has_evictable_page(self, sid: int) -> bool:
+        return self.ledger.page_eviction_entry(sid) is not None
+
+    def effective_window(self, sid: int, window: int) -> int:
+        """Chunks of context actually visible to ``sid``'s next chunk:
+        the fidelity window clipped by fill and ring size, minus
+        visible chunks lost to page-granular eviction."""
+        n = self.ledger.chunks.get(sid, 0)
+        w_vis = min(int(window), n, self._w)
+        dropped = self.ledger.dropped.get(sid, ())
+        lost = sum(1 for c in dropped if n - w_vis <= c < n)
+        return w_vis - lost
 
     def restore(self, sid: int, *, charge: bool = True) -> bool:
         """Bring a spilled stream back resident (bit-exact: its pages
@@ -375,11 +537,21 @@ class KVPool:
         transfer is accounted)."""
         n_chunks = self.ledger.chunks.get(sid, 0)
         if self.ledger.resident(sid):
-            rows = jnp.asarray(self.ledger.tables[sid], jnp.int32)
+            holes = np.flatnonzero(
+                np.asarray(self.ledger.tables[sid]) < 0)
+            rows = jnp.asarray(self.table_rows(sid), jnp.int32)
             if to_host:
                 pages = {"k": np.asarray(self.k[:, rows]),
                          "v": np.asarray(self.v[:, rows])}
+                if holes.size:
+                    # np.asarray of a device buffer is a read-only view
+                    pages = {n: a.copy() for n, a in pages.items()}
+                    pages["k"][:, holes] = 0
+                    pages["v"][:, holes] = 0
             else:
+                # hole rows read the sink page: garbage, but the
+                # dropped-chunk masks travel with the stream and keep
+                # those slices invisible on the destination lane
                 pages = {"k": self.k[:, rows], "v": self.v[:, rows]}
             self.ledger.drop(sid, spill=False)
         else:
@@ -430,10 +602,16 @@ class KVPool:
         if quant == "fp8":
             new_kv = {k: v.astype(jnp.float8_e4m3fn)
                       for k, v in new_kv.items()}
+        for sid in sids:
+            # an append into a hole heals the table (free page or a
+            # stolen sibling): the cached device table goes stale
+            if np.any(np.asarray(self.ledger.tables[sid]) < 0):
+                self._dev_tables.pop(sid, None)
         pages = np.asarray([self.ledger.append_page(sid) for sid in sids])
         self._write(pages, new_kv["k"], new_kv["v"])
         for sid in sids:
             self.ledger.chunks[sid] += 1
+            self.ledger.prune_dropped(sid)
 
 
 @dataclasses.dataclass
@@ -511,10 +689,17 @@ class BatchedChunkExecutor(ChunkExecutor):
                  max_streams: int = 16,
                  context_backend: str = "paged",
                  engine: Optional[AsyncTransferEngine] = None,
-                 device: Optional[Any] = None):
+                 device: Optional[Any] = None,
+                 page_evict: bool = False):
         super().__init__(cfg=cfg, params=params, seed=seed)
         assert context_backend in ("gather", "paged"), context_backend
         self.context_backend = context_backend
+        # partial-window residency: under pool pressure, evict single
+        # ring pages from high-credit residents (effective window trades
+        # down smoothly) before whole-stream spill.  Opt-in: page
+        # eviction DISCARDS the page's KV, so numerical parity with an
+        # unconstrained run no longer holds once it fires.
+        self.page_evict = page_evict
         # a device-backed lane commits its params replica and pool
         # buffers to its own device, so every jitted step runs there and
         # cross-lane state movement is a real device-to-device copy
@@ -548,6 +733,12 @@ class BatchedChunkExecutor(ChunkExecutor):
         self.evictions = 0
         self.restores = 0
         self.deferrals = 0      # residency requests that had to wait
+        self.page_evictions = 0   # single ring pages freed (ladder rung 1)
+        self.dispatch_count = 0   # jitted step launches issued
+        # per-stream effective-window history: one entry per completed
+        # chunk = chunks of context its generation actually attended to
+        # (fidelity window clipped by fill, minus page-evicted chunks)
+        self.effective_window_log: Dict[int, List[int]] = {}
         # peak bytes of per-sub-batch context state staged for the
         # jitted step: gathered [L,b,ctx,...] copies for "gather",
         # tables + masks for "paged" (the acceptance metric)
@@ -577,6 +768,7 @@ class BatchedChunkExecutor(ChunkExecutor):
             key, (1, A.COND_TOKENS, self.cfg.d_model)) * 0.02
         self.chunks[sid] = []
         self.fidelity_log[sid] = []
+        self.effective_window_log[sid] = []
         self.chunk_seq[sid] = 0
         # boundary keys are (sids, fills, fid) and would collide with a
         # previous stream of the same id at the same fill — drop them
@@ -620,6 +812,19 @@ class BatchedChunkExecutor(ChunkExecutor):
         victims = [s for s in self.pool.resident_sids()
                    if s not in self.inflight and s not in self.sp_mirrors
                    and s not in self.sp_links and s not in self.sp_guests]
+        if self.page_evict:
+            # degradation ladder rung 1: free ONE ring page from the
+            # highest-credit resident that still has one to give —
+            # its effective window shrinks by a chunk, nothing spills
+            victim = queues.pick_page_eviction(
+                victims, streams, protect=protect,
+                has_evictable=self.pool.has_evictable_page)
+            if victim is not None:
+                self.pool.evict_page(victim)
+                self.page_evictions += 1
+                self._boundary_cache.clear()
+                return True
+        # rung 2: whole-stream spill (host round trip, bit-exact)
         victim = queues.pick_eviction(victims, streams, protect=protect)
         if victim is None:
             return False
@@ -676,6 +881,7 @@ class BatchedChunkExecutor(ChunkExecutor):
         if drop_history:
             self.chunks.pop(sid, None)
             self.fidelity_log.pop(sid, None)
+            self.effective_window_log.pop(sid, None)
         self._boundary_cache.clear()
 
     def reset_condition(self, sid: int, seed: int) -> bool:
@@ -713,13 +919,15 @@ class BatchedChunkExecutor(ChunkExecutor):
         src->dst move."""
         assert sid not in self.inflight, f"stream {sid} is mid-chunk"
         assert sid not in self.sp_links, f"stream {sid} has a live SP link"
+        dropped = sorted(self.pool.ledger.dropped.get(sid, ()))
         pages, n_chunks = self.pool.export_spill(sid, to_host=to_host)
         self._boundary_cache.clear()
         return {"pages": pages, "chunk_count": n_chunks,
                 "chunks": self.chunks.pop(sid),
                 "fidelity_log": self.fidelity_log.pop(sid),
                 "chunk_seq": self.chunk_seq.pop(sid, 0),
-                "pending_wait": self._pending_wait.pop(sid, 0.0)}
+                "pending_wait": self._pending_wait.pop(sid, 0.0),
+                "dropped": dropped}
 
     def import_stream(self, sid: int, state: Dict[str, Any], *,
                       cross_node: bool = False,
@@ -736,6 +944,10 @@ class BatchedChunkExecutor(ChunkExecutor):
         self.chunks[sid] = state["chunks"]
         self.fidelity_log[sid] = state["fidelity_log"]
         self.chunk_seq[sid] = state["chunk_seq"]
+        if state.get("dropped"):
+            # degradation history travels with the stream: the lost
+            # chunks' slices (zeros / garbage) stay masked here too
+            self.pool.ledger.dropped[sid] = set(state["dropped"])
         if direct:
             self.pool.import_pages(sid, state["pages"],
                                    state["chunk_count"])
@@ -768,17 +980,21 @@ class BatchedChunkExecutor(ChunkExecutor):
 
     # ---- the batched step --------------------------------------------------
     def _boundary(self, sids: Sequence[int], chunk_idx: np.ndarray,
-                  fid: FidelityConfig,
+                  fids: Sequence[FidelityConfig],
                   sp: Optional[SPLink] = None) -> Dict[str, Any]:
         """Per-chunk-boundary state of a sub-batch (constant across the
         chunk's steps): positions, denoise/clean visibility, and the
         backend's context handle — a gathered [L, b, extent, ...] copy
         for ``gather``, or the block tables + page-coordinate masks the
         paged step reads the pool through (both sliced to the group's
-        resident extent, so compute scales with fill either way).  An
+        resident extent, so compute scales with fill either way).
+        ``fids`` is per-row: a fused heterogeneous-fidelity group hands
+        each row the window/sparsity mask its own fidelity dictates —
+        bit-identical per row to a split same-fidelity dispatch.  An
         active SP2 link adds the donor pool's block table — the
         head-split step reads its upper half heads through it."""
-        key = (tuple(sids), tuple(chunk_idx.tolist()), fid.key,
+        key = (tuple(sids), tuple(chunk_idx.tolist()),
+               tuple(f.key for f in fids),
                sp.donor if sp is not None else None)
         bnd = self._boundary_cache.get(key)
         if bnd is not None:
@@ -789,10 +1005,14 @@ class BatchedChunkExecutor(ChunkExecutor):
         extent = A.COND_TOKENS + n_ring * tc
         # sparsity applies to denoise steps only; the clean-context pass
         # sees the full fidelity window.
-        dn = A.batched_context_mask(self.cfg, chunk_idx, fid.window,
-                                    fid.sparsity)[:, :extent]
-        cl = A.batched_context_mask(self.cfg, chunk_idx,
-                                    fid.window)[:, :extent]
+        windows = np.asarray([f.window for f in fids], np.int64)
+        dn = A.batched_context_mask_multi(
+            self.cfg, chunk_idx, windows,
+            np.asarray([f.sparsity for f in fids]))[:, :extent]
+        cl = A.batched_context_mask_multi(
+            self.cfg, chunk_idx, windows,
+            np.zeros(len(fids)))[:, :extent]
+        self._mask_dropped(sids, chunk_idx, dn, cl)
         bnd = {
             "q_offset": jnp.asarray(A.COND_TOKENS + chunk_idx * tc,
                                     jnp.int32),
@@ -840,20 +1060,45 @@ class BatchedChunkExecutor(ChunkExecutor):
         self._boundary_cache[key] = bnd
         return bnd
 
-    def _staging(self, fid: FidelityConfig, steps: Tuple[int, ...],
-                 denoising: Tuple[bool, ...]):
+    def _mask_dropped(self, sids: Sequence[int], chunk_idx: np.ndarray,
+                      dn: np.ndarray, cl: np.ndarray) -> None:
+        """Zero the token slices of page-evicted chunks in BOTH
+        visibility masks (partial-window residency: the KV is gone, so
+        no phase may attend to it).  Runs before the all-true fast-path
+        check, forcing a degraded row onto the explicit-mask path —
+        which is what keeps the sink-page stand-in rows of
+        ``table_rows`` unread."""
+        tc = A.chunk_tokens(self.cfg)
+        w_max = self.cfg.ardit_window_chunks
+        for i, sid in enumerate(sids):
+            dropped = self.pool.ledger.dropped.get(sid)
+            if not dropped:
+                continue
+            n = int(chunk_idx[i])
+            for c in dropped:
+                if n - w_max <= c < n:
+                    lo = A.COND_TOKENS + (c % w_max) * tc
+                    dn[i, lo:lo + tc] = False
+                    cl[i, lo:lo + tc] = False
+
+    def _staging(self, fids: Sequence[FidelityConfig],
+                 steps: Tuple[int, ...], denoising: Tuple[bool, ...]):
         """Cached per-step staging arrays (t, dt, is_denoise): these
-        repeat identically for every chunk of a given fidelity, so the
-        tiny host->device uploads happen once, not every step."""
-        key = (fid.key, steps, denoising)
+        repeat identically for every chunk of a given fidelity mix, so
+        the tiny host->device uploads happen once, not every step.
+        Per-row fidelity: each row walks its OWN sigma grid — a fused
+        group's rows advance exactly as they would in split dispatch
+        (rows whose chunk already completed simply leave the batch at
+        the step boundary, so no padding rows are ever launched)."""
+        key = (tuple(f.key for f in fids), steps, denoising)
         st = self._staging_cache.get(key)
         if st is None:
-            grid = A.sigma_schedule(fid.steps)
-            t = jnp.asarray([float(grid[s]) if d else 0.0
-                             for s, d in zip(steps, denoising)],
+            grids = [A.sigma_schedule(f.steps) for f in fids]
+            t = jnp.asarray([float(g[s]) if d else 0.0
+                             for g, s, d in zip(grids, steps, denoising)],
                             jnp.float32)
-            dt = jnp.asarray([float(grid[s] - grid[s + 1]) if d else 0.0
-                              for s, d in zip(steps, denoising)],
+            dt = jnp.asarray([float(g[s] - g[s + 1]) if d else 0.0
+                              for g, s, d in zip(grids, steps, denoising)],
                              jnp.float32)
             st = (t, dt, jnp.asarray(denoising))
             if len(self._staging_cache) >= 64:
@@ -863,7 +1108,11 @@ class BatchedChunkExecutor(ChunkExecutor):
 
     def run_step(self, sids: Sequence[int],
                  sp_serve: bool = False) -> Tuple[List[int], float]:
-        """Advance a same-fidelity sub-batch by one step.
+        """Advance one sub-batch by one step — same-fidelity (split
+        dispatch) or mixed-fidelity sharing one KV quantization dtype
+        (fused dispatch): window, sparsity, sigma grid, and phase are
+        all per-row data, so each row computes exactly what its own
+        fidelity's split launch would.
 
         ``sp_serve=True`` marks a dispatch that RESERVED the linked
         stream's donor step slot (the scheduler's solo SP2 dispatch):
@@ -885,9 +1134,14 @@ class BatchedChunkExecutor(ChunkExecutor):
         of this call).
         """
         flights = [self.inflight[sid] for sid in sids]
-        fid = flights[0].fidelity
-        assert all(f.fidelity.key == fid.key for f in flights), \
-            "sub-batch must share one fidelity configuration"
+        fids = [f.fidelity for f in flights]
+        quant = fids[0].quant
+        # fused heterogeneous-fidelity dispatch: steps/window/sparsity
+        # are per-row data (masks, sigma grids), but the KV quantization
+        # dtype is a property of the append path shared by the whole
+        # launch — groups must not mix dtypes
+        assert all(f.quant == quant for f in fids), \
+            "sub-batch must share one KV quantization dtype"
         assert all(self.pool.resident(sid) for sid in sids), \
             "sub-batch contains a non-resident (spilled) stream"
         chunk_idx = np.asarray([self.pool.chunks[sid] for sid in sids],
@@ -912,12 +1166,13 @@ class BatchedChunkExecutor(ChunkExecutor):
             sp = None
 
         t0 = time.perf_counter()
-        bnd = self._boundary(sids, chunk_idx, fid, sp=sp)
+        bnd = self._boundary(sids, chunk_idx, fids, sp=sp)
         x = (flights[0].x if len(flights) == 1
              else jnp.concatenate([f.x for f in flights], axis=0))
         denoising = tuple(f.phase == "denoise" for f in flights)
         t, dt_sig, is_dn = self._staging(
-            fid, tuple(f.step for f in flights), denoising)
+            fids, tuple(f.step for f in flights), denoising)
+        self.dispatch_count += 1
         if sp is not None:
             x_new, new_kv = A.denoise_step_paged_sp(
                 self.cfg, self.params, x, t, dt_sig, self.pool.k,
@@ -949,10 +1204,14 @@ class BatchedChunkExecutor(ChunkExecutor):
                 clean_rows.append(i)
                 completed.append(sid)
         if clean_rows:
+            # effective window BEFORE the append advances chunk counts:
+            # the context this chunk's generation actually attended to
+            eff_w = {sids[i]: self.pool.effective_window(
+                sids[i], fids[i].window) for i in clean_rows}
             rows = np.asarray(clean_rows)
             self.pool.append([sids[i] for i in clean_rows],
                              {"k": new_kv["k"][:, rows],
-                              "v": new_kv["v"][:, rows]}, fid.quant)
+                              "v": new_kv["v"][:, rows]}, quant)
             for i in clean_rows:
                 row = {"k": new_kv["k"][:, i:i + 1],
                        "v": new_kv["v"][:, i:i + 1]}
@@ -963,30 +1222,38 @@ class BatchedChunkExecutor(ChunkExecutor):
                     # donor page set so the next SP2 boundary sees
                     # consistent halves (solo mode only — the assertion
                     # above keeps batch-linked streams off this lane)
-                    self._append_sp_half(link, sids[i], row, fid.quant)
+                    self._append_sp_half(link, sids[i], row, quant)
                 guest = self.sp_guests.get(sids[i])
                 if guest is not None:
                     # batch-axis SP shipback: the guest's home pool is
                     # the system of record — append the full-head chunk
                     # there too (a real cross-device put when the lanes
                     # are device-backed), so release never moves state
-                    guest.pool.append([sids[i]], row, fid.quant)
+                    guest.pool.append([sids[i]], row, quant)
             now_wall = None
             for i in clean_rows:
                 sid = sids[i]
+                fid = fids[i]
                 f = self.inflight.pop(sid)
                 self.chunks[sid].append(f.x)
                 self.fidelity_log[sid].append(fid.key)
+                self.effective_window_log.setdefault(sid, []).append(
+                    eff_w[sid])
                 self.chunk_seq[sid] = self.chunk_seq.get(sid, 0) + 1
                 if now_wall is None:        # one sync per completion step
                     f.x.block_until_ready()
                     now_wall = time.perf_counter()
-                # measured chunk wall -> timing priors; only time spent
-                # IN the batch counts (a stream held out of the batch
-                # mid-chunk accrues no active time, so preemption does
-                # not inflate the per-fidelity EMAs).  Spill/restore
-                # dispatcher waits charged by the transfer engine ride
-                # on the chunk they delayed.
+                # measured chunk wall -> timing priors, attributed to
+                # each completing row's OWN fidelity key: under fused
+                # dispatch ``active_s`` accrued per launch the row was
+                # live in, so a fused launch's latency lands on member
+                # keys weighted by the steps each member actually rode
+                # — BMPR budgets and routing see the same per-fidelity
+                # costs as under split dispatch.  Only time spent IN
+                # the batch counts (a stream held out mid-chunk accrues
+                # no active time).  Spill/restore dispatcher waits
+                # charged by the transfer engine ride on the chunk they
+                # delayed.
                 lat = (f.active_s + (now_wall - t0)
                        + self._pending_wait.pop(sid, 0.0))
                 self.latency_ema[fid.key] = (

@@ -85,7 +85,7 @@ class LanePool:
                  seed: int = 0, max_streams: int = 16,
                  context_backend: str = "paged",
                  engine: Optional[AsyncTransferEngine] = None,
-                 sp_mode: str = "auto"):
+                 sp_mode: str = "auto", page_evict: bool = False):
         assert n_lanes >= 1
         assert sp_mode in ("auto", "solo", "batch"), sp_mode
         # lanes round-robin over the runtime's real devices (forced host
@@ -101,14 +101,16 @@ class LanePool:
                                      max_streams=max_streams,
                                      context_backend=context_backend,
                                      engine=engine,
-                                     device=self.lane_devices[0])
+                                     device=self.lane_devices[0],
+                                     page_evict=page_evict)
         self.engine = first.pool.engine
         self.executors: List[Any] = [first]
         for lane in range(1, n_lanes):
             self.executors.append(BatchedChunkExecutor(
                 cfg=first.cfg, params=first.params,
                 max_streams=max_streams, context_backend=context_backend,
-                engine=self.engine, device=self.lane_devices[lane]))
+                engine=self.engine, device=self.lane_devices[lane],
+                page_evict=page_evict))
         self.lane_of: Dict[int, int] = {}
         self.n_migrations = 0
         self.n_sp_expands = 0
@@ -329,6 +331,11 @@ class LanePool:
             donor_ex.chunk_seq[sid] = ex.chunk_seq.get(sid, 0)
             donor_ex.chunks[sid] = ex.chunks[sid]
             donor_ex.fidelity_log[sid] = ex.fidelity_log[sid]
+            # guest rows build their masks on the DONOR executor: any
+            # page-evicted chunks must stay masked there too
+            dropped = ex.pool.ledger.dropped.get(sid)
+            if dropped:
+                dpool.ledger.dropped[sid] = set(dropped)
         else:
             n_bytes = self._copy_sp_half(ex.pool, dpool, sid)
         t = self.engine.transfer(time.perf_counter(), n_bytes,
@@ -358,7 +365,10 @@ class LanePool:
         donor shard then reads bit-identical values, which is what
         makes SP2 == SP1 numerically."""
         h2 = home.cfg.n_kv_heads // 2
-        rows = jnp.asarray(home.ledger.tables[sid], jnp.int32)
+        # holes (page-evicted ring entries) map to the sink page: the
+        # mirrored rows are garbage there, but the dropped-chunk masks
+        # keep them unread on both pools
+        rows = jnp.asarray(home.table_rows(sid), jnp.int32)
         drows = jnp.asarray(dpool.ledger.tables[sid], jnp.int32)
         kh = home.k[:, rows][..., h2:, :]       # [L, pps, P, H/2, Dh]
         vh = home.v[:, rows][..., h2:, :]
@@ -373,7 +383,7 @@ class LanePool:
         pools live on different devices.  Verbatim copy — the donor
         then serves the stream with the ordinary SP1 step over
         bit-identical values."""
-        rows = jnp.asarray(home.ledger.tables[sid], jnp.int32)
+        rows = jnp.asarray(home.table_rows(sid), jnp.int32)
         pages = {"k": home.k[:, rows], "v": home.v[:, rows]}
         if dpool.device is not None and dpool.device != home.device:
             pages = self._measured_put(pages, dpool.device,

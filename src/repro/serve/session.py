@@ -102,6 +102,16 @@ class SessionConfig:
     workers_per_node: int = 0
     pool_streams: Optional[int] = None
     context_backend: str = "paged"
+    # fused heterogeneous-fidelity dispatch: micro-batches group by KV
+    # quantization dtype only (steps/window/sparsity ride as per-row
+    # data), one jitted launch per dtype instead of per fidelity key.
+    # False restores the legacy per-key split dispatch.
+    fuse_fidelity: bool = True
+    # partial-window residency: under pool pressure evict single ring
+    # pages (effective window degrades smoothly) before whole-stream
+    # spill.  Off by default: page eviction discards KV, so bit-exact
+    # spill/restore parity no longer holds once it fires.
+    page_evict: bool = False
     model_cfg: Optional[Any] = None    # None -> the reduced default model
     realtime_budget: Optional[float] = None
     budget_factor: float = 4.0     # chunk_seconds = factor x top latency
@@ -279,7 +289,8 @@ class StreamingSession:
             self.lanes = LanePool(
                 n_lanes, cfg=self.cfg.model_cfg, seed=self.cfg.seed,
                 max_streams=self.cfg.pool_streams or 16,
-                context_backend=self.cfg.context_backend)
+                context_backend=self.cfg.context_backend,
+                page_evict=self.cfg.page_evict)
         self.executor = self.lanes.ex(0)      # back-compat accessor
 
         policy = fidelity_policy or BMPR(get_profile())
@@ -648,7 +659,7 @@ class StreamingSession:
                 self._begin_if_needed(ex, sid, now)
             groups = compose_batch(
                 sids, lambda sid: ex.inflight[sid].fidelity,
-                max_batch + len(glist))
+                max_batch + len(glist), fuse=self.cfg.fuse_fidelity)
             for grp in groups:
                 flights = {sid: ex.inflight[sid] for sid in grp}
                 completed, _ = ex.run_step(grp)

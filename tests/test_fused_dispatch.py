@@ -1,0 +1,337 @@
+"""Fused heterogeneous-fidelity dispatch + partial-window residency.
+
+Fused dispatch (``compose_batch(..., fuse=True)``) groups micro-batches
+by KV quantization dtype only and serves mixed fidelities in one jitted
+launch per dtype — these tests pin that every stream's chunks stay
+BIT-IDENTICAL to the legacy per-fidelity-key split dispatch across the
+fidelity matrix (steps x sparsity x window, both dtypes, join/leave),
+that per-fidelity EMA attribution survives fusion, and that the
+dispatch count really drops.
+
+Partial-window residency (``page_evict=True``) trades single ring pages
+away under pool pressure before whole-stream spill; the oversubscription
+test pins smooth degradation (effective window reduced, run completes,
+ledger conservation and directional transfer accounting intact).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.fidelity import FidelityConfig
+from repro.core.types import Stream
+from repro.models import ardit as A
+from repro.serve.batcher import BatchedChunkExecutor, compose_batch
+
+KEY = jax.random.PRNGKey(0)
+
+# the fidelity matrix: steps x sparsity x window, both KV dtypes
+MATRIX = [
+    FidelityConfig(3, 0.0, 3, "bf16"),
+    FidelityConfig(2, 0.0, 1, "bf16"),
+    FidelityConfig(2, 0.9, 2, "bf16"),
+    FidelityConfig(1, 0.5, 3, "bf16"),
+    FidelityConfig(3, 0.0, 2, "fp8"),
+    FidelityConfig(2, 0.9, 1, "fp8"),
+]
+
+
+def tiny_cfg(window_chunks=3):
+    return dataclasses.replace(
+        get_config("ardit-self-forcing").reduced(),
+        n_layers=2, ardit_window_chunks=window_chunks)
+
+
+def nondegenerate_params(cfg, key):
+    """Open the adaLN-zero gates so attention over the cache matters
+    (fresh params would make any parity test pass vacuously)."""
+    p = A.init_params(cfg, key)
+    ks = jax.random.split(jax.random.PRNGKey(1234), 3)
+    p["layers"]["mod"] = 0.2 * jax.random.normal(
+        ks[0], p["layers"]["mod"].shape, p["layers"]["mod"].dtype)
+    p["layers"]["mod_b"] = 0.5 + 0.2 * jax.random.normal(
+        ks[1], p["layers"]["mod_b"].shape, p["layers"]["mod_b"].dtype)
+    p["final_mod"] = 0.2 * jax.random.normal(
+        ks[2], p["final_mod"].shape, p["final_mod"].dtype)
+    return p
+
+
+def _drive(ex, fid_of, targets, *, fuse, max_batch=8, delay_join=()):
+    """Serve every stream to its target chunk count, recomposing the
+    micro-batch at every step boundary exactly like the session loop.
+    Streams in ``delay_join`` sit out until stream ``min(targets)`` has
+    a completed chunk (join mid-run); streams with smaller targets
+    leave the batch early."""
+    sids = sorted(targets)
+    while any(len(ex.chunks[s]) < targets[s] for s in sids):
+        runnable = []
+        for s in sids:
+            if len(ex.chunks[s]) >= targets[s]:
+                continue
+            if s in delay_join and not ex.chunks[min(sids)]:
+                continue
+            runnable.append(s)
+        for s in runnable:
+            if s not in ex.inflight:
+                ex.begin_chunk(s, fid_of(s), 0.0)
+        for grp in compose_batch(runnable,
+                                 lambda s: ex.inflight[s].fidelity,
+                                 max_batch, fuse=fuse):
+            ex.run_step(grp)
+
+
+def _make_ex(cfg, params, n, **kw):
+    ex = BatchedChunkExecutor(cfg=cfg, params=params,
+                              max_streams=n + 1, **kw)
+    for sid in range(n):
+        assert ex.admit(sid, seed=sid)
+    return ex
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["paged", "gather"])
+def test_fused_matches_split_across_matrix(backend):
+    """Every stream of a mixed-fidelity population generates the same
+    chunks under fused (per-dtype) and split (per-key) dispatch across
+    the full matrix, including heterogeneous fills (different step
+    counts de-sync the chunk boundaries) and ring wrap-around.
+
+    Tolerance note: fusing changes the LAUNCH SHAPE (batch 4 instead of
+    4x batch 1), and XLA tiles a different batch dimension differently,
+    so per-row bits drift by ~1 ULP — the exact slack the repo's
+    batched-vs-sequential parity tests already carry (rtol 1e-5,
+    ``test_batcher.py``).  Bit-identity proper is pinned by
+    ``test_fused_bit_identical_when_grouping_unchanged`` below, where
+    fusion leaves the launch shape alone."""
+    cfg = tiny_cfg()
+    params = nondegenerate_params(cfg, KEY)
+    n = len(MATRIX)
+    fid_of = lambda s: MATRIX[s]
+    targets = {s: 3 for s in range(n)}
+
+    split = _make_ex(cfg, params, n, context_backend=backend)
+    _drive(split, fid_of, targets, fuse=False)
+    fused = _make_ex(cfg, params, n, context_backend=backend)
+    _drive(fused, fid_of, targets, fuse=True)
+
+    assert fused.dispatch_count < split.dispatch_count
+    for s in range(n):
+        assert len(fused.chunks[s]) == len(split.chunks[s]) == 3
+        for c, (a, b) in enumerate(zip(fused.chunks[s], split.chunks[s])):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5,
+                err_msg=f"stream {s} ({MATRIX[s].key}) chunk {c} "
+                        f"diverged under fused dispatch")
+
+
+@pytest.mark.slow
+def test_fused_bit_identical_when_grouping_unchanged():
+    """When every stream shares one fidelity key, fuse=True composes
+    the exact same groups as fuse=False — and the per-row mask /
+    per-row sigma-grid machinery of the fused path must then be
+    BIT-IDENTICAL to the split path (same launches, same bits)."""
+    cfg = tiny_cfg()
+    params = nondegenerate_params(cfg, KEY)
+    fid = FidelityConfig(2, 0.5, 2, "bf16")
+    targets = {s: 3 for s in range(3)}
+    split = _make_ex(cfg, params, 3)
+    _drive(split, lambda s: fid, targets, fuse=False)
+    fused = _make_ex(cfg, params, 3)
+    _drive(fused, lambda s: fid, targets, fuse=True)
+    assert fused.dispatch_count == split.dispatch_count
+    for s in targets:
+        for a, b in zip(fused.chunks[s], split.chunks[s]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_fused_matches_split_with_join_leave():
+    """Join/leave mid-run: a late joiner and early leavers recompose
+    the fused groups between steps without perturbing anyone's chunks."""
+    cfg = tiny_cfg()
+    params = nondegenerate_params(cfg, KEY)
+    fids = [FidelityConfig(2, 0.0, 3, "bf16"),
+            FidelityConfig(3, 0.5, 2, "bf16"),
+            FidelityConfig(1, 0.0, 1, "bf16")]
+    fid_of = lambda s: fids[s]
+    targets = {0: 3, 1: 2, 2: 1}        # early leavers
+    split = _make_ex(cfg, params, 3)
+    _drive(split, fid_of, targets, fuse=False, delay_join=(2,))
+    fused = _make_ex(cfg, params, 3)
+    _drive(fused, fid_of, targets, fuse=True, delay_join=(2,))
+    for s in targets:
+        assert len(fused.chunks[s]) == len(split.chunks[s]) == targets[s]
+        for a, b in zip(fused.chunks[s], split.chunks[s]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_fused_ema_attribution_per_fidelity_key():
+    """Satellite: a fused launch's measured latency lands on each
+    member's OWN fidelity key (weighted by the steps it was live for),
+    so BMPR budgets keyed per fidelity don't drift when groups merge."""
+    cfg = tiny_cfg()
+    params = nondegenerate_params(cfg, KEY)
+    fids = [FidelityConfig(3, 0.0, 3, "bf16"),
+            FidelityConfig(1, 0.9, 1, "bf16")]
+    fid_of = lambda s: fids[s]
+    ex = _make_ex(cfg, params, 2)
+    _drive(ex, fid_of, {0: 2, 1: 2}, fuse=True)
+    assert set(ex.latency_ema) == {f.key for f in fids}
+    assert set(ex.step_ema) == {f.key for f in fids}
+    # the cheap fidelity (fewer live steps) must not inherit the
+    # expensive one's whole-launch latency: its per-chunk EMA is
+    # bounded by its own share of the fused launches
+    assert ex.latency_ema[fids[1].key] <= ex.latency_ema[fids[0].key]
+
+
+def test_compose_batch_fuse_groups_by_dtype():
+    hi = FidelityConfig(4, 0.0, 7, "bf16")
+    mid = FidelityConfig(2, 0.5, 3, "bf16")
+    lo = FidelityConfig(2, 0.9, 1, "fp8")
+    fid_of = {0: hi, 1: mid, 2: lo, 3: hi}.get
+    # split: three fidelity keys -> three groups
+    assert compose_batch([0, 1, 2, 3], fid_of, 4) == [[0, 3], [1], [2]]
+    # fused: two dtypes -> two groups, credit order preserved
+    assert compose_batch([0, 1, 2, 3], fid_of, 4, fuse=True) == \
+        [[0, 1, 3], [2]]
+
+
+def test_run_step_rejects_mixed_dtype_group():
+    cfg = tiny_cfg()
+    params = nondegenerate_params(cfg, KEY)
+    ex = _make_ex(cfg, params, 2)
+    ex.begin_chunk(0, FidelityConfig(2, 0.0, 2, "bf16"), 0.0)
+    ex.begin_chunk(1, FidelityConfig(2, 0.9, 1, "fp8"), 0.0)
+    with pytest.raises(AssertionError):
+        ex.run_step([0, 1])
+
+
+# ---------------------------------------------------------------------------
+# partial-window residency (page-granular eviction)
+# ---------------------------------------------------------------------------
+
+def _credit_view(ex, sids):
+    streams = {}
+    for sid in sids:
+        streams[sid] = Stream(sid=sid, arrival=0.0, target_chunks=3,
+                              chunk_seconds=1.0, home=0, ttfc_slack=1e9)
+        streams[sid].credit = float(len(ex.chunks.get(sid, ())))
+    return streams
+
+
+@pytest.mark.slow
+def test_oversubscribed_page_eviction_degrades_smoothly():
+    """2x oversubscription under ``page_evict=True``: the run completes
+    with zero admission hard-failures, at least one stream trades its
+    effective window down page-wise instead of spilling whole, the
+    ledger conserves pages throughout, and the directional transfer
+    counters only record genuine whole-stream movement (page eviction
+    discards KV locally — it never touches the wire)."""
+    cfg = tiny_cfg(window_chunks=3)
+    params = nondegenerate_params(cfg, KEY)
+    fid = FidelityConfig(2, 0.0, 3, "bf16")
+    n, chunks = 4, 3
+    ex = BatchedChunkExecutor(cfg=cfg, params=params, max_streams=2,
+                              page_evict=True)
+    streams = _credit_view(ex, range(n))
+    for sid in range(n):
+        ex.admit(sid, seed=sid, streams=streams)
+        ex.pool.ledger.check()
+    assert ex.page_evictions >= 1, \
+        "pool pressure should engage the page-eviction rung first"
+
+    while any(len(ex.chunks[s]) < chunks for s in range(n)):
+        for sid in range(n):
+            streams[sid].credit = float(len(ex.chunks[sid]))
+        runnable = sorted(
+            (s for s in range(n) if len(ex.chunks[s]) < chunks),
+            key=lambda s: (streams[s].credit, s))   # scheduler order
+        batch = []
+        for sid in runnable:
+            if ex.ensure_resident(sid, streams, protect=batch + [sid]):
+                batch.append(sid)
+            if len(batch) >= 2:
+                break
+        assert batch, "oversubscribed batch starved (admission failure)"
+        for sid in batch:
+            if sid not in ex.inflight:
+                ex.begin_chunk(sid, fid, 0.0)
+        ex.run_step(batch)
+        ex.pool.ledger.check()
+
+    # zero hard failures: every stream served every chunk
+    assert all(len(ex.chunks[s]) == chunks for s in range(n))
+    # at least one stream degraded page-wise: its recorded effective
+    # window dips below the nominal min(fidelity window, fill)
+    degraded = [
+        s for s in range(n)
+        if any(eff < min(fid.window, c)
+               for c, eff in enumerate(ex.effective_window_log[s]))]
+    assert degraded, "no stream recorded a page-wise degraded window"
+    # per-stream effective-window history has one entry per chunk
+    assert all(len(ex.effective_window_log[s]) == chunks
+               for s in range(n))
+    # directional accounting intact: only whole-stream spill/restore
+    # bytes on the wire, page evictions charged nothing
+    pool = ex.pool
+    assert pool.transfer_bytes == (pool.transfer_bytes_in
+                                   + pool.transfer_bytes_out)
+    wire = sum(t.bytes for t in pool.engine.log)
+    assert wire == pool.transfer_bytes
+    ex.pool.ledger.check()
+
+
+def test_page_ledger_evict_heal_cycle():
+    """Ledger-level invariants of the evict -> hole -> append-heal
+    cycle: victim preference, the one-ring-page floor, free-list heal,
+    and pruning of dropped chunks that age out of the ring."""
+    from repro.serve.batcher import PageLedger
+    led = PageLedger(n_pages=8, pages_per_stream=4)       # W=3
+    led.take(0)
+    led.take(1)
+    led.chunks[0] = 3          # ring full: entries hold chunks 0,1,2
+    # evict one page: the oldest retained chunk (0) is dropped; the
+    # newest (always visible) is never the victim
+    assert led.evict_page(0) == 0
+    assert led.dropped[0] == {0}
+    assert led.free_pages == 1
+    led.check()
+    # stream 1 (fill 0): unwritten entries evict at zero quality cost,
+    # down to the one-ring-page floor
+    assert led.evict_page(1) == -1
+    assert led.evict_page(1) == -1
+    assert led.page_eviction_entry(1) is None     # at floor
+    assert led.evict_page(1) is None
+    led.check()
+    # append into the hole heals from the free list
+    assert led.append_page(0) >= 0
+    assert (np.asarray(led.tables[0]) >= 0).sum() == 4
+    led.chunks[0] += 1
+    # ...and the healed chunk ages the dropped one out of the ring
+    led.prune_dropped(0)
+    assert 0 not in led.dropped
+    led.check()
+
+
+def test_page_ledger_steal_when_free_list_dry():
+    """A hole-append under a dry free list steals the stream's own
+    least-valuable sibling page (its chunk joins ``dropped``) — the
+    floor guarantees a donor always exists."""
+    from repro.serve.batcher import PageLedger
+    led = PageLedger(n_pages=4, pages_per_stream=4)       # one stream
+    led.take(0)
+    led.chunks[0] = 3
+    assert led.evict_page(0) == 0         # hole at chunk 0's entry
+    # another consumer takes the freed page (simulated admission)
+    led._free.pop()
+    led.accounting.alloc(99, 1)
+    # chunk 3 lands on chunk 0's old entry (3 % 3 == 0): the hole is
+    # its own target, heal steals the oldest sibling (chunk 1)
+    assert led.append_page(0) >= 0
+    assert led.dropped[0] == {0, 1}
+    assert (np.asarray(led.tables[0]) >= 0).sum() == 3
+    led.chunks[0] += 1

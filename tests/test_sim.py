@@ -322,3 +322,95 @@ class TestFrontDoor:
             SimConfig(n_workers=16, front_door=FrontDoorConfig()),
             specs, make_policy("slackserve")).run())
         assert fd.qoe >= base.qoe
+
+
+class TestScaleIn:
+    def _view(self, loads, retired=()):
+        workers = [Worker(w, node=0) for w in range(len(loads))]
+        for w, n in zip(workers, loads):
+            w.queue = list(range(n))
+        for w in retired:
+            workers[w].retired = True
+        return ClusterView({}, workers, len(workers))
+
+    def test_scale_in_retires_idle_with_slack(self):
+        fd = FrontDoor(FrontDoorConfig(scale_in_step=2, min_workers=1),
+                       first_chunk_estimate=1.0)
+        # two idle workers, one busy survivor with load 1: predicted
+        # TTFC for survivors is still 0*ema+1 (an idle survivor stays)
+        assert fd.maybe_scale_in(self._view([0, 0, 0, 1]), 0.0) == 2
+        st = fd.stats()
+        assert st["scale_ins"] == 1 and st["workers_retired"] == 2
+
+    def test_scale_in_cooldown_and_floor(self):
+        fd = FrontDoor(FrontDoorConfig(scale_in_step=1, min_workers=2),
+                       first_chunk_estimate=1.0)
+        assert fd.maybe_scale_in(self._view([0, 0, 0]), 0.0) == 1
+        # cooldown gates the next decision
+        assert fd.maybe_scale_in(self._view([0, 0, 0]), 1.0) == 0
+        # min_workers floor: 2 active left, may not drop below 2
+        later = fd.cfg.scale_in_cooldown + 1.0
+        assert fd.maybe_scale_in(
+            self._view([0, 0, 0], retired=(0,)), later) == 0
+
+    def test_scale_in_needs_empty_queue_and_slack(self):
+        fd = FrontDoor(FrontDoorConfig(), first_chunk_estimate=1.0)
+        fd.on_arrival(self._view([8, 8]), 0.0, 1.0, sid=0)   # queues
+        assert fd.waiting
+        assert fd.maybe_scale_in(self._view([0, 0]), 100.0) == 0
+        fd.waiting.clear()
+        # survivors too loaded: predicted * factor exceeds the SLO
+        assert fd.maybe_scale_in(self._view([0, 8, 8]), 100.0) == 0
+
+    def test_scale_out_sets_scale_in_hysteresis(self):
+        fd = FrontDoor(FrontDoorConfig(), first_chunk_estimate=1.0)
+        fd.on_arrival(self._view([8, 8]), 0.0, 1.0, sid=0)   # scales out
+        fd.waiting.clear()
+        # scale-in is cooldown-gated by the scale-out that just fired
+        assert fd.maybe_scale_in(self._view([0, 0]), 1.0) == 0
+
+    def test_predict_ttfc_ignores_retired_workers(self):
+        fd = FrontDoor(FrontDoorConfig(), first_chunk_estimate=1.0)
+        # the idle worker is retired: prediction must use the busy one
+        v = self._view([0, 5], retired=(0,))
+        assert fd.predict_ttfc(v) == 5 * fd.chunk_service_ema + 1.0
+
+    def test_simulator_scale_in_drains_and_retires(self):
+        specs = steady(n=6, rate=50.0, seed=3)
+        cfg = SimConfig(n_workers=4, front_door=FrontDoorConfig())
+        sim = Simulator(cfg, specs, make_policy("slackserve"))
+        res = sim.run()
+        assert all(s.done for s in res.streams.values())
+        # direct scale-in on the finished fleet: everyone idle now
+        retired = sim.scale_in(2)
+        assert retired == 2
+        assert sum(1 for w in sim.view.workers if w.retired) == 2
+        assert all(not w.queue and w.running is None
+                   for w in sim.view.workers if w.retired)
+        # scale_out revives retired slots before growing the arrays
+        n_before = len(sim.view.workers)
+        sim.scale_out(1)
+        assert len(sim.view.workers) == n_before
+        assert sum(1 for w in sim.view.workers if w.retired) == 1
+
+    def test_scale_in_end_to_end_burst_then_drain(self):
+        """A burst scales the fleet out; once the backlog drains, the
+        cooldown-gated scale-in retires surplus workers — with every
+        stream still served (conservation unchanged)."""
+        specs = flash_crowd(n=150, rate=8.0, seed=7)
+        fd_cfg = FrontDoorConfig(scale_in_cooldown=6.0, scale_in_step=4,
+                                 min_workers=4)
+        cfg = SimConfig(n_workers=4, front_door=fd_cfg)
+        sim = Simulator(cfg, specs, make_policy("slackserve"))
+        res = sim.run()
+        adm = res.admission
+        assert adm["admitted"] + adm["rejected"] == len(specs)
+        assert all(s.done for s in res.streams.values())
+        assert adm["scale_outs"] > 0
+        assert adm["scale_ins"] > 0 and adm["workers_retired"] > 0
+        assert res.n_workers_final == sum(
+            1 for w in sim.view.workers if not w.retired)
+        assert res.n_workers_final >= fd_cfg.min_workers
+        # retired workers hold no work
+        assert all(not w.queue and w.running is None
+                   for w in sim.view.workers if w.retired)

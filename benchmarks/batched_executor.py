@@ -186,6 +186,49 @@ def run_mixed_fidelity(ex: BatchedChunkExecutor, n_streams: int,
     return dt, dispatches
 
 
+def run_step_cache(ex: BatchedChunkExecutor, n_streams: int, chunks: int,
+                   max_batch: int, base_sid: int,
+                   fidelity: FidelityConfig) -> dict:
+    """Serve a uniform population at ``fidelity`` and report elapsed
+    time plus the step cache's own accounting (hit rate, launches the
+    cache skipped outright, jitted dispatches actually run)."""
+    sids = [base_sid + i for i in range(n_streams)]
+    for i, sid in enumerate(sids):
+        ex.admit(sid, seed=i)
+    d0 = ex.dispatch_count
+    s0 = ex.cache_skipped_launches
+    h0 = (ex.stepcache.hits, ex.stepcache.misses) \
+        if ex.stepcache is not None else (0, 0)
+    t0 = time.perf_counter()
+    while any(len(ex.chunks[sid]) < chunks for sid in sids):
+        runnable = [sid for sid in sids if len(ex.chunks[sid]) < chunks]
+        runnable.sort(key=lambda sid: (len(ex.chunks[sid]),
+                                       ex.inflight[sid].step
+                                       if sid in ex.inflight else 0))
+        for sid in runnable[:max_batch]:
+            if sid not in ex.inflight:
+                ex.begin_chunk(sid, fidelity, 0.0)
+        for grp in compose_batch(runnable[:max_batch],
+                                 lambda s: ex.inflight[s].fidelity,
+                                 max_batch, fuse=True):
+            ex.run_step(grp)
+    dt = time.perf_counter() - t0
+    hits = misses = 0
+    if ex.stepcache is not None:
+        hits = ex.stepcache.hits - h0[0]
+        misses = ex.stepcache.misses - h0[1]
+    for sid in sids:
+        ex.retire(sid)
+    return {
+        "elapsed_s": round(dt, 4),
+        "streams_per_s": round(n_streams / dt, 4),
+        "hit_rate": round(hits / (hits + misses), 4)
+        if (hits + misses) else 0.0,
+        "skipped_launches": ex.cache_skipped_launches - s0,
+        "dispatch_count": ex.dispatch_count - d0,
+    }
+
+
 def run_lanes_session(n_lanes: int, n_streams: int, chunks: int,
                       seed: int = 0) -> dict:
     """Multi-lane session scenario: a burst workload served through
@@ -264,6 +307,11 @@ def main() -> None:
                     help="stream count of the mixed-fidelity fused-vs-"
                          "split scenario (0 disables; spans "
                          f"{len(MIXED_FIDELITIES)} fidelity keys)")
+    ap.add_argument("--step-cache", action="store_true",
+                    help="also run the step-cache scenario: the same "
+                         "uniform population uncached vs cache="
+                         "aggressive, reporting streams/s, hit rate and "
+                         "launches skipped outright")
     ap.add_argument("--lanes", type=int, default=0,
                     help="also run the multi-lane session scenario "
                          "with this many lanes (0 disables)")
@@ -387,6 +435,33 @@ def main() -> None:
               f"{sp['fused']['streams_per_s'] / sp['split']['streams_per_s']:.2f}x "
               f"streams/s, {sp['split']['dispatch_count']} -> "
               f"{sp['fused']['dispatch_count']} launches")
+
+    # step cache: same uniform population with the residual cache off vs
+    # aggressive — cached must serve at least as many streams/s whenever
+    # it actually hits (check_bench.py gates exactly that)
+    if args.step_cache:
+        cex = BatchedChunkExecutor(cfg=seq_ex.cfg, params=seq_ex.params,
+                                   max_streams=n)
+        results["step_cache"] = {"streams": n, "chunks": chunks}
+        print(f"\nstep_cache: {n} streams x {chunks} chunks, "
+              f"uncached vs cache=aggressive")
+        for mode, fid in (("uncached", FIDELITY),
+                          ("cached", FIDELITY._replace(cache="aggressive"))):
+            run_step_cache(cex, n, chunks, max_batch,      # compile pass
+                           base_sid=600, fidelity=fid)
+            row = run_step_cache(cex, n, chunks, max_batch,
+                                 base_sid=700, fidelity=fid)
+            row["fidelity"] = fid.key
+            results["step_cache"][mode] = row
+            print(f"  {mode:8s} {row['elapsed_s']:6.2f}s "
+                  f"-> {row['streams_per_s']:5.2f} streams/s "
+                  f"hit_rate={row['hit_rate']:.2f} "
+                  f"skipped={row['skipped_launches']} "
+                  f"launches={row['dispatch_count']}")
+        sc = results["step_cache"]
+        print(f"  cached vs uncached: "
+              f"{sc['cached']['streams_per_s'] / sc['uncached']['streams_per_s']:.2f}x "
+              f"streams/s at hit_rate={sc['cached']['hit_rate']:.2f}")
 
     if args.lanes:
         row = run_lanes_session(args.lanes, args.lane_streams,

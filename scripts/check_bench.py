@@ -17,7 +17,8 @@ lost), and — when the calibration cell ran — sim-vs-real agreement
 ticks/s vs the previous artifact, same threshold rules as streams/s.
 
 Tracked scenarios: ``sequential``, ``batched/<backend>``,
-``oversubscribed/<backend>``, ``mixed_fidelity/<mode>`` and
+``oversubscribed/<backend>``, ``mixed_fidelity/<mode>``,
+``step_cache/<mode>`` and
 ``lanes/<n>`` ``streams_per_s`` entries; any other fields a scenario row carries (migration/SP counts,
 QoE, transfer reports, the device-lane ``transfer_measured`` stats and
 ``lane_transfer_bytes`` in/out attribution, ...) are ignored, so the
@@ -44,7 +45,7 @@ def _rates(bench: dict) -> dict:
     if "streams_per_s" in seq:
         out["sequential"] = seq["streams_per_s"]
     for section in ("batched", "oversubscribed", "mixed_fidelity",
-                    "lanes"):
+                    "lanes", "step_cache"):
         for key, row in bench.get(section, {}).items():
             if isinstance(row, dict) and "streams_per_s" in row:
                 out[f"{section}/{key}"] = row["streams_per_s"]
@@ -92,6 +93,39 @@ def check_mixed_fidelity(bench: dict, threshold: float) -> bool:
         print(f"  mixed_fidelity streams/s     split={sr:.3f} "
               f"fused={fr:.3f} (gate >= {floor:.3f}) {flag}")
         failed |= fr < floor
+    return failed
+
+
+def check_step_cache(bench: dict) -> bool:
+    """Absolute step-cache gate on the NEW output (no history needed):
+    whenever the cached run actually hit (hit_rate > 0) it must have
+    skipped at least one jitted launch outright AND serve at least as
+    many streams/s as the uncached run of the same population.  Returns
+    True when the gate FAILS; silently passes when the scenario was not
+    run (bootstrap: --step-cache absent) or never hit (nothing to
+    gate — the cache fell back to computing every step)."""
+    sc = bench.get("step_cache") or {}
+    un, ca = sc.get("uncached"), sc.get("cached")
+    if not (isinstance(un, dict) and isinstance(ca, dict)):
+        return False
+    hit_rate = ca.get("hit_rate") or 0.0
+    if hit_rate <= 0.0:
+        print("  step_cache       hit_rate=0: nothing to gate (skipped)")
+        return False
+    failed = False
+    skipped = ca.get("skipped_launches")
+    if skipped is not None:
+        flag = "ok" if skipped > 0 else "FAIL"
+        print(f"  step_cache skipped_launches  {skipped} "
+              f"(gate > 0 at hit_rate={hit_rate:.2f}) {flag}")
+        failed |= not skipped > 0
+    ur, cr = un.get("streams_per_s"), ca.get("streams_per_s")
+    if ur and cr:
+        flag = "ok" if cr >= ur else "FAIL"
+        print(f"  step_cache streams/s         uncached={ur:.3f} "
+              f"cached={cr:.3f} (gate: cached >= uncached at "
+              f"hit_rate={hit_rate:.2f}) {flag}")
+        failed |= cr < ur
     return failed
 
 
@@ -178,11 +212,12 @@ def main() -> int:
     # absolute gate first: fused dispatch must beat split on the NEW
     # output regardless of history
     failed = check_mixed_fidelity(new_bench, args.threshold)
+    failed |= check_step_cache(new_bench)
 
     prev_bench = _load_prev(args.prev)
     if prev_bench is None:
         if failed:
-            print("FAIL: mixed-fidelity fused-dispatch gate")
+            print("FAIL: mixed-fidelity or step-cache absolute gate")
             return 1
         return 0
     prev = _rates(prev_bench)
@@ -205,8 +240,9 @@ def main() -> int:
         if delta < -args.threshold:
             failed = True
     if failed:
-        print(f"FAIL: fused-dispatch gate or streams/s regression "
-              f"beyond {args.threshold:.0%} vs the previous nightly run")
+        print(f"FAIL: fused-dispatch/step-cache gate or streams/s "
+              f"regression beyond {args.threshold:.0%} vs the previous "
+              f"nightly run")
         return 1
     print("bench trajectory ok")
     return 0

@@ -29,8 +29,16 @@ class ParetoFrontier:
 
 
 def pareto_frontier(profile: ModelProfile) -> ParetoFrontier:
-    """Non-dominated (L, Q) points + median quality floor (SS5.2)."""
-    pts = sorted(profile.points, key=lambda p: (p.latency, -p.quality))
+    """Non-dominated (L, Q) points + median quality floor (SS5.2).
+
+    The sort key is a TOTAL order: equal-(latency, quality) points tie
+    toward the lexicographically smallest fidelity key, so the frontier
+    is deterministic under any permutation of ``profile.points``
+    (a plain ``(latency, -quality)`` sort is stable in input order and
+    would let the input permutation pick which of two tied configs
+    represents the frontier point)."""
+    pts = sorted(profile.points,
+                 key=lambda p: (p.latency, -p.quality, p.fidelity.key))
     frontier: List[ChunkProfile] = []
     best_q = float("-inf")
     for p in pts:

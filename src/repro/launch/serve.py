@@ -95,6 +95,12 @@ def main() -> None:
                          "scheduler: predicted-TTFC admit/queue/reject "
                          "(+ autoscaling under --sim) and admission "
                          "stats in the report")
+    ap.add_argument("--step-cache", action="store_true",
+                    help="unlock the content-adaptive step cache as a "
+                         "fifth fidelity axis: BMPR routes over the "
+                         "270-point (cache-unlocked) frontier and "
+                         "eligible denoise steps reuse cached residuals "
+                         "(models/stepcache.py)")
     ap.add_argument("--calibrate", action="store_true",
                     help="after a --real run, fit the sim cost model to "
                          "the session's measured EMAs, replay the same "
@@ -111,6 +117,9 @@ def main() -> None:
         ap.error("--context-backend only applies to --real --batched")
     if args.lanes > 1 and not args.real:
         ap.error("--lanes only applies to --real")
+    if args.step_cache and not (args.real and args.batched):
+        ap.error("--step-cache only applies to --real --batched (cache "
+                 "hits ride the fused batched dispatch as no-op rows)")
     if args.calibrate and not args.real:
         ap.error("--calibrate only applies to --real (the sim IS the "
                  "model being calibrated)")
@@ -168,6 +177,7 @@ def main() -> None:
             context_backend=args.context_backend,
             arrival_scale=args.arrival_scale,
             front_door=fd_cfg,
+            step_cache=args.step_cache,
             verbose=True))   # --seed varies the workload, not the model
         for spec in specs:
             session.submit(spec)
@@ -180,6 +190,9 @@ def main() -> None:
               f"transfers={transfer_stats(res)}")
         if args.front_door:
             print(f"  admission: {res.admission}")
+        if args.step_cache:
+            print(f"  step_cache: {res.step_cache} "
+                  f"avg_effective_window={s.avg_effective_window:.2f}")
         if args.calibrate:
             from repro.sched_sim.calibration import agreement, fit_session
             from repro.sched_sim.policies import make_policy

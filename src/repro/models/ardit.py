@@ -41,15 +41,22 @@ COND_TOKENS = 77        # text-conditioning tokens (stub encoder output)
 
 
 class FidelityConfig(NamedTuple):
-    """A concrete assignment of the paper's four fidelity knobs (SS5)."""
+    """A concrete assignment of the paper's four fidelity knobs (SS5),
+    plus the repo's fifth knob: the AdaCache-style step cache
+    (``models/stepcache.py``), reusing a cached velocity when the
+    inter-step residual delta is stable."""
     steps: int = 4              # S in {2,3,4}
     sparsity: float = 0.0       # rho in {0,.6,.7,.8,.9}
     window: int = 7             # W in {1,3,7} chunks
     quant: str = "bf16"         # Q in {bf16,fp8}
+    cache: str = "off"          # step cache in {off,conservative,aggressive}
 
     @property
     def key(self) -> str:
-        return f"S{self.steps}_r{self.sparsity}_W{self.window}_{self.quant}"
+        # cache=off keys are unchanged from the 4-knob era so existing
+        # EMAs, calibration ratios, and parity baselines stay valid
+        base = f"S{self.steps}_r{self.sparsity}_W{self.window}_{self.quant}"
+        return base if self.cache == "off" else f"{base}_c{self.cache[0]}"
 
 
 HIGHEST_QUALITY = FidelityConfig(4, 0.0, 7, "bf16")

@@ -1,0 +1,237 @@
+"""Content-adaptive step cache (AdaCache-style residual reuse).
+
+Video-DiT compute is content-dependent: the residual (velocity) a
+denoise step predicts changes little between adjacent steps on stable
+content, so a step whose *measured* inter-step residual delta fell
+under a threshold can reuse the cached velocity instead of recomputing
+the whole attention+MLP stack — the Euler update collapses to an
+O(tokens) AXPY ``x - dt * v_cached``.  This module is the fifth
+fidelity knob (``FidelityConfig.cache in {off, conservative,
+aggressive}``): BMPR routes over it like steps/sparsity/window/quant,
+so slack-poor streams take cached steps before degrading window or
+resolution.
+
+Three pieces:
+
+* ``ResidualPool`` — a device-resident buffer keyed like the KV pool
+  (slot table + LIFO free list): per slot the cached velocity
+  ``v [tc, C]`` of the last computed step and a per-layer feature
+  signature ``feats [L]`` (mean |k_l| of that step's fresh chunk KV).
+  Both live on the executor's device; per-row updates ride ONE fused
+  donated-buffer dispatch (``_record``) issued asynchronously with the
+  step.
+* ``StepCacheManager`` — host-side per-stream tracker.  After every
+  COMPUTED denoise step it issues (device-side, no sync) the combined
+  residual delta
+
+      delta = max( mean|v - v_prev| / (mean|v_prev| + eps),
+                   mean|f - f_prev| / (mean|f_prev| + eps) )
+
+  read back LAZILY at the next step's hit decision, so the executor's
+  no-mid-chunk-sync pipelining survives (the read blocks only until
+  the previous launch — already enqueued — retires).
+* Motion regularizer — AdaCache's MoReg at chunk granularity: the
+  chunk-to-chunk latent delta of the stream's last two completed
+  chunks scales the threshold down (``base / (1 + MOREG_WEIGHT *
+  motion)``) so high-motion chunks stay conservative.
+
+Hit eligibility (per denoise step): cache level != off, at least two
+computed velocities this chunk (a delta exists), consecutive reuses
+under the level's cap, and delta under the motion-scaled threshold.
+The clean (context) pass NEVER hits — it writes the chunk's KV pages.
+Cache state is per-chunk transient: spill/restore/migration and
+prompt switches drop it safely (the next chunk re-tracks from its
+first computed steps; motion recomputes from the chunk history that
+already travels with the stream).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-6
+
+# Base residual-delta thresholds per cache level.  Conservative only
+# reuses when the velocity field is nearly frozen (5% relative change);
+# aggressive reuses up to a full 100% relative change.  Both scale DOWN
+# with measured motion.
+THRESHOLDS = {"conservative": 0.05, "aggressive": 1.0}
+# Consecutive-reuse caps: how many steps in a row may ride one cached
+# velocity before a recompute is forced.
+MAX_CONSECUTIVE = {"conservative": 1, "aggressive": 2}
+MOREG_WEIGHT = 4.0
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _record(v_pool: jax.Array, f_pool: jax.Array, slot: jax.Array,
+            x_old: jax.Array, x_new: jax.Array, dt: float,
+            k_row: jax.Array):
+    """ONE fused dispatch per computed step: recover the velocity
+    ``v = (x_old - x_new) / dt``, build the per-layer KV signature
+    ``[L, tc, H, Dh] -> [L]`` mean |k|, compute the combined relative
+    residual delta against the slot's previous entry, and write both
+    pool rows in place (buffers donated — no copy).  Returns the
+    updated pools and the device-scalar delta."""
+    v_new = (x_old - x_new) / dt
+    f_new = jnp.mean(jnp.abs(k_row), axis=(1, 2, 3))
+    v_prev = v_pool[slot]
+    f_prev = f_pool[slot]
+    dv = jnp.mean(jnp.abs(v_new - v_prev)) \
+        / (jnp.mean(jnp.abs(v_prev)) + EPS)
+    df = jnp.mean(jnp.abs(f_new - f_prev)) \
+        / (jnp.mean(jnp.abs(f_prev)) + EPS)
+    delta = jnp.maximum(dv, df)
+    return (v_pool.at[slot].set(v_new), f_pool.at[slot].set(f_new),
+            delta)
+
+
+@jax.jit
+def _apply_cached(x: jax.Array, v_pool: jax.Array, slot: jax.Array,
+                  dt: float) -> jax.Array:
+    """The cache-hit Euler step: ``x - dt * v_cached`` (an AXPY — the
+    whole point: no attention, no MLP), slot-sliced in the same
+    dispatch."""
+    return x - dt * v_pool[slot]
+
+
+@dataclasses.dataclass
+class StreamCacheState:
+    """Host-side per-stream, per-chunk tracker state."""
+    slot: int
+    n_computed: int = 0            # computed velocities this chunk
+    consecutive: int = 0           # reuses riding the current velocity
+    motion: float = 0.0            # chunk-to-chunk latent delta
+    delta: Optional[jax.Array] = None   # device scalar, read lazily
+
+
+class ResidualPool:
+    """Device-resident cached-velocity buffer, keyed like the KV pool:
+    a slot per tracked stream, host free list, ``.at[slot]`` writes."""
+
+    def __init__(self, n_slots: int, chunk_tokens: int, latent_ch: int,
+                 n_layers: int, device=None):
+        self.n_slots = n_slots
+        v = jnp.zeros((n_slots, 1, chunk_tokens, latent_ch), jnp.float32)
+        f = jnp.zeros((n_slots, n_layers), jnp.float32)
+        if device is not None:
+            v = jax.device_put(v, device)
+            f = jax.device_put(f, device)
+        self.v = v
+        self.feats = f
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+
+    def alloc(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def free(self, slot: int) -> None:
+        self._free.append(slot)
+
+
+class StepCacheManager:
+    """Per-executor step-cache bookkeeping: slot lifecycle, hit
+    decisions, residual tracking, hit/miss accounting."""
+
+    def __init__(self, n_slots: int, chunk_tokens: int, latent_ch: int,
+                 n_layers: int, device=None):
+        self.pool = ResidualPool(n_slots, chunk_tokens, latent_ch,
+                                 n_layers, device=device)
+        self.states: Dict[int, StreamCacheState] = {}
+        self.hits = 0
+        self.misses = 0
+
+    # ---- lifecycle ---------------------------------------------------------
+    def begin_chunk(self, sid: int,
+                    history: Optional[Sequence[jax.Array]]) -> None:
+        """Reset the per-chunk tracker and measure motion from the last
+        two COMPLETED chunks (host read — they were synced when their
+        chunk finished).  Chunks 0 and 1 get neutral motion 0."""
+        st = self.states.get(sid)
+        if st is None:
+            slot = self.pool.alloc()
+            if slot is None:            # slots exhausted: never hits
+                return
+            st = StreamCacheState(slot=slot)
+            self.states[sid] = st
+        st.n_computed = 0
+        st.consecutive = 0
+        st.delta = None
+        st.motion = 0.0
+        if history is not None and len(history) >= 2:
+            prev = np.asarray(history[-1], np.float32)
+            prev2 = np.asarray(history[-2], np.float32)
+            st.motion = float(np.mean(np.abs(prev - prev2))
+                              / (np.mean(np.abs(prev2)) + EPS))
+
+    def drop(self, sid: int) -> None:
+        """Free the stream's slot and forget its tracker (retire,
+        migration export, spill): cache state is per-chunk transient
+        and is deliberately NOT carried — the next chunk re-tracks."""
+        st = self.states.pop(sid, None)
+        if st is not None:
+            self.pool.free(st.slot)
+
+    def reset_chunk(self, sid: int) -> None:
+        """Invalidate mid-chunk state (abort / prompt switch) but keep
+        the slot for the stream's next chunk."""
+        st = self.states.get(sid)
+        if st is not None:
+            st.n_computed = 0
+            st.consecutive = 0
+            st.delta = None
+
+    # ---- the decision ------------------------------------------------------
+    def effective_threshold(self, level: str, motion: float) -> float:
+        return THRESHOLDS[level] / (1.0 + MOREG_WEIGHT * motion)
+
+    def should_hit(self, sid: int, level: str) -> bool:
+        """Hit decision for the NEXT denoise step of ``sid``.  Reads
+        the lazily issued delta (blocks at most until the previous
+        launch retires).  Counts the decision (hit or miss)."""
+        st = self.states.get(sid)
+        hit = False
+        if (st is not None and level != "off"
+                and st.n_computed >= 2
+                and st.consecutive < MAX_CONSECUTIVE[level]
+                and st.delta is not None):
+            hit = (float(st.delta)
+                   < self.effective_threshold(level, st.motion))
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return hit
+
+    # ---- state updates -----------------------------------------------------
+    def apply_hit(self, sid: int, x: jax.Array, dt: float) -> jax.Array:
+        """The reused Euler step: ``x - dt * v_cached``."""
+        st = self.states[sid]
+        st.consecutive += 1
+        return _apply_cached(x, self.pool.v, st.slot, dt)
+
+    def record_step(self, sid: int, x_old: jax.Array, x_new: jax.Array,
+                    dt: float, k_row: jax.Array) -> None:
+        """After a COMPUTED denoise step: recover the velocity, build
+        the per-layer KV signature, and (from the second computed step
+        on) issue the residual delta — one fused device dispatch, no
+        sync (the delta is read lazily at the next hit decision)."""
+        st = self.states.get(sid)
+        if st is None or dt == 0.0:
+            return
+        self.pool.v, self.pool.feats, delta = _record(
+            self.pool.v, self.pool.feats, st.slot, x_old, x_new, dt,
+            k_row)
+        if st.n_computed >= 1:      # first step has no previous entry
+            st.delta = delta
+        st.n_computed += 1
+        st.consecutive = 0
+
+    # ---- reporting ---------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0}

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.fidelity import FidelityConfig, candidate_space
 
@@ -55,6 +55,31 @@ A_W = 1.1
 A_Q = 0.35
 A_INT = 0.8          # rho x low-S interaction (fewer steps amplify sparsity)
 
+# -- step cache (AdaCache-style residual reuse, models/stepcache.py) ----------
+# Expected fraction of *cacheable* denoise steps (steps 1..S-1 of a
+# chunk; step 0 and the clean pass always compute) that reuse the cached
+# velocity on generic content.  Conservative allows at most one
+# consecutive reuse under a tight residual threshold; aggressive allows
+# two under a loose one.  Calibration (``fit_cache_speedups``) replaces
+# the analytic factor with measured on/off latency ratios once a real
+# session has observed both.  Quality penalties (VBench points) follow
+# AdaCache's report that residual-gated reuse costs little on stable
+# content; aggressive pays visibly more.
+STEP_CACHE_HIT_RATE = {"off": 0.0, "conservative": 0.25, "aggressive": 0.5}
+A_CACHE = {"off": 0.0, "conservative": 0.18, "aggressive": 0.5}
+
+
+def step_cache_latency_factor(level: str, steps: int) -> float:
+    """Expected chunk-latency multiplier of a cache level.
+
+    A chunk runs ``steps`` denoise forwards plus one clean forward;
+    a hit replaces a whole forward with an O(tokens) AXPY (modeled
+    free next to the transformer stack)."""
+    h = STEP_CACHE_HIT_RATE[level]
+    total = steps + 1
+    cacheable = max(steps - 1, 0)
+    return (total - h * cacheable) / total
+
 
 @dataclasses.dataclass(frozen=True)
 class ChunkProfile:
@@ -80,6 +105,9 @@ def chunk_latency(cfg: FidelityConfig, *, sp_degree: int = 1,
         # compute (intra-node NVLink / ICI); fixed overhead not split.
         compute = lat - cfg.steps * T_FIXED
         lat = cfg.steps * T_FIXED + compute / sp_degree * 1.12
+    cache = getattr(cfg, "cache", "off")
+    if cache != "off":
+        lat *= step_cache_latency_factor(cache, cfg.steps)
     return lat
 
 
@@ -92,6 +120,7 @@ def chunk_quality(cfg: FidelityConfig, *,
     q -= A_W * (1.0 - vis) ** 1.4
     q -= A_Q * (1.0 if cfg.quant == "fp8" else 0.0)
     q -= A_INT * cfg.sparsity * (4 - cfg.steps) / 2.0
+    q -= A_CACHE[getattr(cfg, "cache", "off")]
     return q
 
 
@@ -113,10 +142,14 @@ class ModelProfile:
 
 
 @functools.lru_cache(maxsize=None)
-def get_profile(model: str = "causal-forcing") -> ModelProfile:
+def get_profile(model: str = "causal-forcing",
+                step_cache: bool = False) -> ModelProfile:
+    """The App. A profile: 90 points, or 270 with the step-cache knob
+    unlocked (``step_cache=True`` — BMPR then routes over cache levels
+    like any other fidelity axis)."""
     pts = tuple(ChunkProfile(c, chunk_latency(c, model=model),
                              chunk_quality(c, model=model))
-                for c in candidate_space())
+                for c in candidate_space(step_cache=step_cache))
     return ModelProfile(model, pts)
 
 
@@ -133,24 +166,47 @@ class CalibratedProfile(ModelProfile):
     measured-over-analytic ratio of the top-fidelity config — one global
     host-speed correction).  SP degrees inherit the same ratio: the
     calibration measures host compute speed, and the SP communication
-    model stays analytic."""
+    model stays analytic.
+
+    Step-cache fallback chain: a cache-on key the run never executed
+    first tries its cache=off sibling's measured ratio times the fitted
+    per-level speedup (``cache_speedups``, from
+    ``calibration.fit_cache_speedups``) — or, with no fitted speedup,
+    the analytic ``step_cache_latency_factor`` — before the global
+    ``scale``."""
     ratios: Dict[str, float] = dataclasses.field(default_factory=dict)
     scale: float = 1.0
+    cache_speedups: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def latency(self, cfg: FidelityConfig, sp_degree: int = 1) -> float:
+        if cfg.key in self.ratios:
+            return chunk_latency(cfg, sp_degree=sp_degree,
+                                 model=self.model) * self.ratios[cfg.key]
+        cache = getattr(cfg, "cache", "off")
+        if cache != "off":
+            off = cfg._replace(cache="off")
+            if off.key in self.ratios:
+                lat_off = chunk_latency(off, sp_degree=sp_degree,
+                                        model=self.model) \
+                    * self.ratios[off.key]
+                factor = self.cache_speedups.get(
+                    cache, step_cache_latency_factor(cache, cfg.steps))
+                return lat_off * factor
         base = chunk_latency(cfg, sp_degree=sp_degree, model=self.model)
-        return base * self.ratios.get(cfg.key, self.scale)
+        return base * self.scale
 
 
 def calibrate_profile(base: ModelProfile, ratios: Dict[str, float],
-                      scale: float = 1.0) -> CalibratedProfile:
+                      scale: float = 1.0,
+                      cache_speedups: Optional[Dict[str, float]] = None,
+                      ) -> CalibratedProfile:
     """Build a ``CalibratedProfile`` whose ``points`` (the BMPR frontier
     input) carry the corrected latencies, so fidelity selection and the
     simulator's cost model read ONE calibrated surface."""
-    pts = tuple(ChunkProfile(
-        p.fidelity,
-        chunk_latency(p.fidelity, model=base.model)
-        * ratios.get(p.fidelity.key, scale),
-        p.quality) for p in base.points)
-    return CalibratedProfile(base.model, pts, ratios=dict(ratios),
-                             scale=scale)
+    prof = CalibratedProfile(base.model, (), ratios=dict(ratios),
+                             scale=scale,
+                             cache_speedups=dict(cache_speedups or {}))
+    pts = tuple(ChunkProfile(p.fidelity, prof.latency(p.fidelity),
+                             p.quality) for p in base.points)
+    return dataclasses.replace(prof, points=pts)

@@ -53,10 +53,21 @@ class CalibrationReport:
     bw_intra: float                 # B/s (measured-calibrated if moves ran)
     bw_inter: float
     batch_alpha: Optional[float] = None   # sdv2_batch_step_factor slope
+    # step-cache level -> measured on/off latency factor (< 1 = speedup)
+    cache_speedups: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def profile(self) -> CalibratedProfile:
-        return calibrate_profile(get_profile(self.model), self.ratios,
-                                 self.scale)
+        # Replay over the 270-point (cache-unlocked) surface only when
+        # the real run actually exercised the step cache — otherwise the
+        # sim's BMPR would route over cache points the session never
+        # had, breaking apples-to-apples agreement.
+        used_cache = bool(self.cache_speedups) or any(
+            _cache_level_of(k) for k in self.ratios)
+        return calibrate_profile(
+            get_profile(self.model, step_cache=used_cache),
+            self.ratios, self.scale,
+            cache_speedups=self.cache_speedups)
 
     def sim_config(self, base: Any = None, **overrides: Any) -> Any:
         """A ``SimConfig`` replaying on the calibrated surface."""
@@ -70,6 +81,34 @@ class CalibrationReport:
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
+
+
+# FidelityConfig.key appends "_c{level[0]}" only for cache-on configs
+_CACHE_SUFFIX = {"_cc": "conservative", "_ca": "aggressive"}
+
+
+def _cache_level_of(key: str) -> Optional[str]:
+    """Cache level of a fidelity key, or None for cache=off keys."""
+    return _CACHE_SUFFIX.get(key[-3:])
+
+
+def fit_cache_speedups(measured: Dict[str, float]) -> Dict[str, float]:
+    """Measured per-cache-level latency factors (on/off, < 1 = speedup).
+
+    For every cache-on fidelity key whose cache=off SIBLING was also
+    measured in the same run, take the on/off chunk-latency ratio and
+    average per level — the real-content counterpart of the analytic
+    ``step_cache_latency_factor`` prior, which it replaces in
+    ``CalibratedProfile`` fallbacks."""
+    per_level: Dict[str, List[float]] = {}
+    for key, m_on in measured.items():
+        level = _cache_level_of(key)
+        if level is None or m_on <= 0.0:
+            continue
+        m_off = measured.get(key[:-3])
+        if m_off and m_off > 0.0:
+            per_level.setdefault(level, []).append(m_on / m_off)
+    return {lvl: statistics.mean(r) for lvl, r in per_level.items()}
 
 
 def fit_ratios(measured: Dict[str, float],
@@ -125,7 +164,8 @@ def fit_session(session: Any,
         bw_intra=getattr(engine, "bw_intra", cm.BW_INTRA),
         bw_inter=getattr(engine, "bw_inter", cm.BW_INTER),
         batch_alpha=fit_batch_alpha(batch_step_times)
-        if batch_step_times else None)
+        if batch_step_times else None,
+        cache_speedups=fit_cache_speedups(flat))
 
 
 def agreement(real_summary: Any, sim_summary: Any,

@@ -78,6 +78,15 @@ def sdv2_batch_step_factor(b: int, alpha: float = SDV2_BATCH_ALPHA) -> float:
     return 1.0 + alpha * (b - 1)
 
 
+# --- step cache (AdaCache-style residual reuse, models/stepcache.py) ---------
+# The expected-hit-rate latency model lives with the other latency
+# surfaces in the profiler; re-exported here so the simulator's cost
+# constants stay one import away.
+from repro.profiler.profiles import (  # noqa: E402,F401
+    STEP_CACHE_HIT_RATE, step_cache_latency_factor,
+)
+
+
 def stream_pages(chunks_resident: int) -> int:
     """Pages held by a stream with ``chunks_resident`` chunks in window."""
     return SINK_PAGES + min(chunks_resident,

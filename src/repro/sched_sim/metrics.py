@@ -34,6 +34,7 @@ class Summary:
     n_rehomings: int
     n_sp_events: int
     n_unserved: int = 0           # admitted streams with zero ready chunks
+    avg_effective_window: float = 0.0   # mean page-degraded KV window
 
     def row(self) -> str:
         return (f"QoE={self.qoe:.3f} TTFC={self.ttfc:.2f}s "
@@ -84,7 +85,17 @@ def summarize(res: Any) -> Summary:
         n_streams=len(cprs), n_chunks=n_chunks,
         n_rehomings=getattr(res, "n_rehomings", 0),
         n_sp_events=getattr(res, "n_sp_events", 0),
-        n_unserved=n_unserved)
+        n_unserved=n_unserved,
+        avg_effective_window=_avg_effective_window(res))
+
+
+def _avg_effective_window(res: Any) -> float:
+    """Mean of per-stream mean effective (page-degraded) KV windows.
+    Real runs attach ``effective_window`` (sid -> per-launch window
+    history); simulated results lack it and report 0."""
+    logs = getattr(res, "effective_window", None) or {}
+    per_stream = [statistics.mean(log) for log in logs.values() if log]
+    return statistics.mean(per_stream) if per_stream else 0.0
 
 
 def stall_histogram(res: Any,

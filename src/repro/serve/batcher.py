@@ -41,6 +41,7 @@ from repro.core.state_plane import AsyncTransferEngine, PagedKVPool
 from repro.core.types import Stream
 from repro.models import ardit as A
 from repro.models import kvcache
+from repro.models.stepcache import StepCacheManager
 from repro.serve.executor import EMA_DECAY, ChunkExecutor, ServedStream
 
 
@@ -735,6 +736,12 @@ class BatchedChunkExecutor(ChunkExecutor):
         self.deferrals = 0      # residency requests that had to wait
         self.page_evictions = 0   # single ring pages freed (ladder rung 1)
         self.dispatch_count = 0   # jitted step launches issued
+        # content-adaptive step cache (fifth fidelity knob): lazily
+        # built on the first cache-on chunk so cache=off executors pay
+        # ZERO memory or dispatch overhead (the off path is untouched)
+        self.max_streams = max_streams
+        self.stepcache: Optional[StepCacheManager] = None
+        self.cache_skipped_launches = 0   # whole launches never issued
         # per-stream effective-window history: one entry per completed
         # chunk = chunks of context its generation actually attended to
         # (fidelity window clipped by fill, minus page-evicted chunks)
@@ -829,6 +836,10 @@ class BatchedChunkExecutor(ChunkExecutor):
         if victim is None:
             return False
         self.pool.evict(victim)
+        if self.stepcache is not None:
+            # cache state is per-chunk transient: a spilled stream
+            # rejoins at a chunk boundary, where it is stale anyway
+            self.stepcache.drop(victim)
         self.evictions += 1
         self._boundary_cache.clear()
         return True
@@ -865,6 +876,8 @@ class BatchedChunkExecutor(ChunkExecutor):
         pending transfer wait stays charged to the stream's next
         completed chunk (the restore really happened)."""
         self.inflight.pop(sid, None)
+        if self.stepcache is not None:
+            self.stepcache.reset_chunk(sid)
 
     def retire(self, sid: int, drop_history: bool = False) -> None:
         """Retire a stream: free its pages and per-stream counters.
@@ -876,6 +889,8 @@ class BatchedChunkExecutor(ChunkExecutor):
             f"stream {sid} retired with a live SP link (release first)"
         self.pool.release(sid)
         self.inflight.pop(sid, None)
+        if self.stepcache is not None:
+            self.stepcache.drop(sid)
         self._pending_wait.pop(sid, None)
         self.chunk_seq.pop(sid, None)
         if drop_history:
@@ -895,6 +910,8 @@ class BatchedChunkExecutor(ChunkExecutor):
         history.  Returns False when the pool is full and the stream
         parked host-side (it rejoins via ``ensure_resident``)."""
         self.inflight.pop(sid, None)
+        if self.stepcache is not None:
+            self.stepcache.reset_chunk(sid)
         key = jax.random.PRNGKey(1000 + seed)
         cond = jax.random.normal(
             key, (1, A.COND_TOKENS, self.cfg.d_model)) * 0.02
@@ -919,6 +936,11 @@ class BatchedChunkExecutor(ChunkExecutor):
         src->dst move."""
         assert sid not in self.inflight, f"stream {sid} is mid-chunk"
         assert sid not in self.sp_links, f"stream {sid} has a live SP link"
+        if self.stepcache is not None:
+            # step-cache state deliberately does NOT travel: it is
+            # per-chunk transient and a migration lands at a chunk
+            # boundary; motion recomputes from the chunk history below
+            self.stepcache.drop(sid)
         dropped = sorted(self.pool.ledger.dropped.get(sid, ()))
         pages, n_chunks = self.pool.export_spill(sid, to_host=to_host)
         self._boundary_cache.clear()
@@ -927,7 +949,9 @@ class BatchedChunkExecutor(ChunkExecutor):
                 "fidelity_log": self.fidelity_log.pop(sid),
                 "chunk_seq": self.chunk_seq.pop(sid, 0),
                 "pending_wait": self._pending_wait.pop(sid, 0.0),
-                "dropped": dropped}
+                "dropped": dropped,
+                "effective_window_log":
+                    self.effective_window_log.pop(sid, [])}
 
     def import_stream(self, sid: int, state: Dict[str, Any], *,
                       cross_node: bool = False,
@@ -944,6 +968,10 @@ class BatchedChunkExecutor(ChunkExecutor):
         self.chunks[sid] = state["chunks"]
         self.fidelity_log[sid] = state["fidelity_log"]
         self.chunk_seq[sid] = state["chunk_seq"]
+        # degradation history travels too: the per-stream mean
+        # effective window in SessionResult must span lane moves
+        self.effective_window_log[sid] = \
+            list(state.get("effective_window_log", []))
         if state.get("dropped"):
             # degradation history travels with the stream: the lost
             # chunks' slices (zeros / garbage) stay masked here too
@@ -972,6 +1000,17 @@ class BatchedChunkExecutor(ChunkExecutor):
         noise = jax.random.normal(key, (1, tc, A.LATENT_CH))
         self.inflight[sid] = InflightChunk(x=noise, fidelity=fidelity,
                                            started=now)
+        if fidelity.cache != "off":
+            self._stepcache().begin_chunk(sid, self.chunks.get(sid))
+
+    def _stepcache(self) -> StepCacheManager:
+        """Lazy step-cache manager: one residual-pool slot per possible
+        concurrent stream, on this lane's device."""
+        if self.stepcache is None:
+            self.stepcache = StepCacheManager(
+                self.max_streams + 1, A.chunk_tokens(self.cfg),
+                A.LATENT_CH, self.cfg.n_layers, device=self.device)
+        return self.stepcache
 
     def steps_left(self, sid: int) -> int:
         """Remaining forwards for the in-flight chunk (incl. clean pass)."""
@@ -1165,11 +1204,40 @@ class BatchedChunkExecutor(ChunkExecutor):
         if sp is not None and sp.mode != "solo":
             sp = None
 
+        denoising = tuple(f.phase == "denoise" for f in flights)
+        # content-adaptive step cache (fifth fidelity knob): decide
+        # per-row reuse BEFORE staging.  A group whose rows are all
+        # cache=off takes the exact legacy path below — zero tracker
+        # calls, bit-identical launches (the safety rail).
+        sc = self.stepcache
+        cache_hits: Dict[int, float] = {}    # row -> dt of the reuse
+        if any(fid.cache != "off" for fid in fids):
+            sc = self._stepcache()
+            for i, (f, fid) in enumerate(zip(flights, fids)):
+                if fid.cache != "off" and denoising[i] \
+                        and sc.should_hit(sids[i], fid.cache):
+                    # uniform sigma grid (linspace 1 -> 0): dt = 1/S,
+                    # host-side — no device read on the decision path
+                    cache_hits[i] = 1.0 / fid.steps
+
         t0 = time.perf_counter()
+        if cache_hits and len(cache_hits) == len(sids):
+            # every row reuses its cached velocity: skip the jitted
+            # launch entirely — the attention+MLP stack is replaced by
+            # per-row AXPYs (this is the step cache's throughput win;
+            # ``dispatch_count`` does not advance)
+            self.cache_skipped_launches += 1
+            for i, (sid, f) in enumerate(zip(sids, flights)):
+                f.x = sc.apply_hit(sid, f.x, cache_hits[i])
+                f.step += 1
+            dt = time.perf_counter() - t0
+            for f in flights:
+                f.active_s += dt
+            return [], dt
+
         bnd = self._boundary(sids, chunk_idx, fids, sp=sp)
         x = (flights[0].x if len(flights) == 1
              else jnp.concatenate([f.x for f in flights], axis=0))
-        denoising = tuple(f.phase == "denoise" for f in flights)
         t, dt_sig, is_dn = self._staging(
             fids, tuple(f.step for f in flights), denoising)
         self.dispatch_count += 1
@@ -1198,7 +1266,18 @@ class BatchedChunkExecutor(ChunkExecutor):
         clean_rows: List[int] = []
         for i, (sid, f) in enumerate(zip(sids, flights)):
             if denoising[i]:
-                f.x = x_new[i:i + 1]
+                if i in cache_hits:
+                    # masked no-op row of a mixed launch: the row rode
+                    # along for shape stability; its output is the
+                    # cached AXPY — identical to the skipped-launch
+                    # path, so a hit never depends on group composition
+                    f.x = sc.apply_hit(sid, f.x, cache_hits[i])
+                else:
+                    if fids[i].cache != "off":
+                        sc.record_step(sid, f.x, x_new[i:i + 1],
+                                       1.0 / fids[i].steps,
+                                       new_kv["k"][:, i])
+                    f.x = x_new[i:i + 1]
                 f.step += 1
             else:
                 clean_rows.append(i)

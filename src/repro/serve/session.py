@@ -112,6 +112,13 @@ class SessionConfig:
     # spill.  Off by default: page eviction discards KV, so bit-exact
     # spill/restore parity no longer holds once it fires.
     page_evict: bool = False
+    # content-adaptive step cache (fifth fidelity knob,
+    # models/stepcache.py): True unlocks the cache levels in the BMPR
+    # candidate space (270 points), so slack-poor streams take cached
+    # steps before degrading window/resolution.  Off by default until
+    # the nightly bench gate proves the win on this host class; cache
+    # levels still work when a custom ``fidelity_policy`` selects them.
+    step_cache: bool = False
     model_cfg: Optional[Any] = None    # None -> the reduced default model
     realtime_budget: Optional[float] = None
     budget_factor: float = 4.0     # chunk_seconds = factor x top latency
@@ -144,6 +151,15 @@ class SessionResult:
     n_sp_expands_applied: int = 0
     n_sp_releases_applied: int = 0
     admission: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-stream effective-window history (chunks of context each
+    # generated chunk actually attended to — fidelity window clipped by
+    # fill, minus page-evicted chunks), merged across lanes; migrations
+    # carry it, so each stream has one entry per completed chunk
+    effective_window: Dict[int, List[int]] = dataclasses.field(
+        default_factory=dict)
+    # step-cache counters summed across lanes (hits / misses /
+    # hit_rate / skipped_launches); empty when no cache-on chunk ran
+    step_cache: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class StreamHandle:
@@ -293,7 +309,8 @@ class StreamingSession:
                 page_evict=self.cfg.page_evict)
         self.executor = self.lanes.ex(0)      # back-compat accessor
 
-        policy = fidelity_policy or BMPR(get_profile())
+        policy = fidelity_policy or BMPR(
+            get_profile(step_cache=self.cfg.step_cache))
         self._profile = getattr(policy, "profile", None) or get_profile()
 
         # ---- host calibration (one top-fidelity warm-up chunk) ----------
@@ -776,6 +793,25 @@ class StreamingSession:
 
     # ---- results -----------------------------------------------------------
     def result(self) -> SessionResult:
+        # effective-window histories merged across lanes: a stream's
+        # log lives wholly on its current lane (migrations carry it)
+        eff_w: Dict[int, List[int]] = {}
+        hits = misses = skipped = 0
+        for ex in self.lanes.executors:
+            for sid, log in getattr(ex, "effective_window_log",
+                                    {}).items():
+                if sid >= 0 and log:
+                    eff_w.setdefault(sid, []).extend(log)
+            sc = getattr(ex, "stepcache", None)
+            if sc is not None:
+                hits += sc.hits
+                misses += sc.misses
+            skipped += getattr(ex, "cache_skipped_launches", 0)
+        cache_stats: Dict[str, float] = {}
+        if hits or misses:
+            cache_stats = {"hits": hits, "misses": misses,
+                           "hit_rate": hits / (hits + misses),
+                           "skipped_launches": skipped}
         return SessionResult(
             streams=dict(self.view.streams), engine=self.lanes.engine,
             n_rehomings=self.control.n_rehomings,
@@ -786,7 +822,8 @@ class StreamingSession:
             n_migrations_applied=self.lanes.n_migrations,
             n_sp_expands_applied=self.lanes.n_sp_expands,
             n_sp_releases_applied=self.lanes.n_sp_releases,
-            admission=self.front_door.stats() if self.front_door else {})
+            admission=self.front_door.stats() if self.front_door else {},
+            effective_window=eff_w, step_cache=cache_stats)
 
     def _served_stream(self, sid: int) -> ServedStream:
         """Back-compat view assembled FROM the per-stream record — the

@@ -1,0 +1,341 @@
+"""Content-adaptive step cache (``models/stepcache.py``) — the fifth
+fidelity axis.
+
+Fast tier: candidate-space / fidelity-key invariants, the
+permutation-deterministic Pareto frontier, BMPR routing over cache-on
+points under the quality floor, the analytic latency/quality pricing,
+calibration's measured cache-speedup fit, and the ``StepCacheManager``
+threshold / motion-regularizer / consecutive-cap state machine on
+synthetic latents.
+
+Slow tier (JAX-compiling): the real ``BatchedChunkExecutor`` —
+``cache=off`` never constructs the manager, ``cache=aggressive`` hits
+and skips whole jitted launches with bounded output drift, a cache-on
+row sharing a fused group leaves its cache-off neighbors bit-exact, and
+spill/export/retire drop cache state safely mid-run.
+"""
+import dataclasses
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.bmpr import BMPR, pareto_frontier
+from repro.core.fidelity import (CACHE_LEVELS, HIGHEST_QUALITY,
+                                 FidelityConfig, candidate_space)
+from repro.models import ardit as A
+from repro.models.stepcache import (MAX_CONSECUTIVE, THRESHOLDS,
+                                    StepCacheManager)
+from repro.profiler.profiles import (A_CACHE, ModelProfile,
+                                     calibrate_profile, chunk_latency,
+                                     chunk_quality, get_profile,
+                                     step_cache_latency_factor)
+from repro.sched_sim.calibration import fit_cache_speedups
+from repro.serve.batcher import BatchedChunkExecutor, compose_batch
+
+KEY = jax.random.PRNGKey(0)
+
+OFF = FidelityConfig(4, 0.0, 3, "bf16")
+AGG = OFF._replace(cache="aggressive")
+
+
+# ---------------------------------------------------------------------------
+# fidelity axis + profile surfaces
+# ---------------------------------------------------------------------------
+
+def test_candidate_space_sizes_and_keys():
+    base = candidate_space()
+    full = candidate_space(step_cache=True)
+    assert len(base) == 90 and len(full) == 90 * len(CACHE_LEVELS)
+    assert len({c.key for c in full}) == len(full)
+    # every base config is the cache=off member of the full space,
+    # with its key (and therefore every existing EMA/ratio) unchanged
+    assert all(c.cache == "off" for c in base)
+    assert set(base) <= set(full)
+    assert FidelityConfig().key == "S4_r0.0_W7_bf16"
+    assert AGG.key == OFF.key + "_ca"
+    assert OFF._replace(cache="conservative").key == OFF.key + "_cc"
+
+
+def test_cache_pricing_faster_and_lower_quality():
+    for level in ("conservative", "aggressive"):
+        cfg = OFF._replace(cache=level)
+        assert chunk_latency(cfg) < chunk_latency(OFF)
+        assert chunk_latency(cfg) == pytest.approx(
+            chunk_latency(OFF) * step_cache_latency_factor(level, OFF.steps))
+        assert chunk_quality(cfg) == pytest.approx(
+            chunk_quality(OFF) - A_CACHE[level])
+    # aggressive hits more often than conservative: strictly faster
+    assert chunk_latency(AGG) < chunk_latency(
+        OFF._replace(cache="conservative"))
+    # a 1-step chunk has no cacheable step: factor degenerates to 1
+    assert step_cache_latency_factor("aggressive", 1) == 1.0
+
+
+def test_pareto_frontier_deterministic_under_permutation():
+    prof = get_profile(step_cache=True)
+    ref = pareto_frontier(prof)
+    rng = random.Random(0)
+    for _ in range(5):
+        pts = list(prof.points)
+        rng.shuffle(pts)
+        got = pareto_frontier(ModelProfile(prof.model, tuple(pts)))
+        assert [p.fidelity.key for p in got.points] == \
+            [p.fidelity.key for p in ref.points]
+        assert got.q_floor == ref.q_floor
+
+
+def test_bmpr_routes_cache_under_tight_budget_with_floor():
+    router = BMPR(get_profile(step_cache=True))
+    floor = router.frontier.q_floor
+    # slack-rich: the top-quality point is cache=off (cache only costs
+    # quality when latency is no object)
+    assert router.select(10.0).fidelity.cache == "off"
+    # some budget band must be served by a cache-on point at or above
+    # the quality floor — the axis actually participates in routing
+    cache_on = [p for p in router.eligible_points()
+                if p.fidelity.cache != "off"]
+    assert cache_on, "no cache-on point survived the frontier + floor"
+    d = router.select(cache_on[0].latency)
+    assert d.fidelity.cache != "off"
+    assert d.quality >= floor and d.mode == "quality"
+
+
+def test_fit_cache_speedups_and_calibrated_fallback():
+    off_key, ca_key = OFF.key, AGG.key
+    cc = OFF._replace(cache="conservative")
+    measured = {off_key: 0.50, ca_key: 0.35, cc.key: 0.45,
+                "S2_r0.5_W5_bf16": 0.30}        # no cache sibling: ignored
+    sp = fit_cache_speedups(measured)
+    assert sp == {"aggressive": pytest.approx(0.70),
+                  "conservative": pytest.approx(0.90)}
+    # fallback chain: a cache-on config the run never measured prices
+    # as its measured off sibling times the fitted speedup
+    prof = calibrate_profile(get_profile(step_cache=True),
+                             {off_key: 2.0}, scale=2.0, cache_speedups=sp)
+    assert prof.latency(AGG) == pytest.approx(
+        chunk_latency(OFF) * 2.0 * 0.70)
+    # and with no fitted speedup, the analytic factor
+    prof2 = calibrate_profile(get_profile(step_cache=True),
+                              {off_key: 2.0}, scale=2.0)
+    assert prof2.latency(AGG) == pytest.approx(
+        chunk_latency(OFF) * 2.0
+        * step_cache_latency_factor("aggressive", OFF.steps))
+
+
+# ---------------------------------------------------------------------------
+# StepCacheManager state machine (synthetic latents, no model)
+# ---------------------------------------------------------------------------
+
+def _manager(tokens=8, ch=4, layers=2, slots=2):
+    return StepCacheManager(slots, tokens, ch, layers)
+
+
+def _feed(mgr, sid, velocities, dt=0.25):
+    """Record a sequence of computed steps with the given velocities."""
+    x = jax.numpy.zeros((1, 8, 4))
+    k = jax.numpy.ones((2, 8, 1, 2))
+    for v in velocities:
+        x_new = x - dt * v
+        mgr.record_step(sid, x, x_new, dt, k)
+        x = x_new
+
+
+def test_manager_hits_on_stable_misses_on_changing_residuals():
+    ones = jax.numpy.ones((1, 8, 4))
+    # low motion content: identical velocities -> delta 0 -> hit
+    mgr = _manager()
+    mgr.begin_chunk(0, None)
+    assert not mgr.should_hit(0, "aggressive")     # no delta yet
+    _feed(mgr, 0, [ones, ones])
+    assert mgr.should_hit(0, "conservative")
+    # high residual change: delta >> threshold -> miss
+    mgr2 = _manager()
+    mgr2.begin_chunk(1, None)
+    _feed(mgr2, 1, [ones, 3.0 * ones])
+    assert not mgr2.should_hit(1, "aggressive")
+    assert mgr.stats()["hits"] == 1 and mgr.stats()["misses"] == 1
+
+
+def test_manager_consecutive_cap_forces_recompute():
+    ones = jax.numpy.ones((1, 8, 4))
+    mgr = _manager()
+    mgr.begin_chunk(0, None)
+    _feed(mgr, 0, [ones, ones])
+    x = jax.numpy.zeros((1, 8, 4))
+    for _ in range(MAX_CONSECUTIVE["aggressive"]):
+        assert mgr.should_hit(0, "aggressive")
+        x = mgr.apply_hit(0, x, 0.25)
+    assert not mgr.should_hit(0, "aggressive")     # cap reached
+    # the hit step really is the AXPY x - dt * v
+    np.testing.assert_allclose(np.asarray(x),
+                               np.asarray(-0.5 * ones), rtol=1e-6)
+    # a computed step resets the run of reuses
+    _feed(mgr, 0, [ones])
+    assert mgr.should_hit(0, "aggressive")
+
+
+def test_manager_motion_regularizer_scales_threshold_down():
+    mgr = _manager()
+    base = mgr.effective_threshold("aggressive", 0.0)
+    assert base == THRESHOLDS["aggressive"]
+    assert mgr.effective_threshold("aggressive", 1.0) < base / 4
+    # borderline delta: hits on static history, misses on high-motion
+    ones = jax.numpy.ones((1, 8, 4))
+    drift = 1.3 * ones                  # rel delta 0.3 < 0.5 base
+    static = [jax.numpy.zeros((1, 8, 4)), jax.numpy.zeros((1, 8, 4))]
+    moving = [jax.numpy.zeros((1, 8, 4)), 5 * jax.numpy.ones((1, 8, 4))]
+    lo, hi = _manager(), _manager()
+    lo.begin_chunk(0, static)
+    hi.begin_chunk(0, moving)
+    assert lo.states[0].motion == 0.0 and hi.states[0].motion > 1.0
+    _feed(lo, 0, [ones, drift])
+    _feed(hi, 0, [ones, drift])
+    assert lo.should_hit(0, "aggressive")
+    assert not hi.should_hit(0, "aggressive")
+
+
+def test_manager_lifecycle_drop_and_reset():
+    ones = jax.numpy.ones((1, 8, 4))
+    mgr = _manager(slots=1)
+    mgr.begin_chunk(0, None)
+    _feed(mgr, 0, [ones, ones])
+    assert mgr.should_hit(0, "aggressive")
+    # reset (abort / prompt switch) keeps the slot but forgets the chunk
+    mgr.reset_chunk(0)
+    assert not mgr.should_hit(0, "aggressive")
+    # drop frees the slot for another stream; slot exhaustion never hits
+    mgr.drop(0)
+    assert 0 not in mgr.states
+    mgr.begin_chunk(1, None)
+    mgr.begin_chunk(2, None)            # no slot left: silently untracked
+    assert 1 in mgr.states and 2 not in mgr.states
+    _feed(mgr, 2, [ones, ones])         # record on untracked sid: no-op
+    assert not mgr.should_hit(2, "aggressive")
+
+
+# ---------------------------------------------------------------------------
+# executor integration (slow: compiles the reduced AR-DiT)
+# ---------------------------------------------------------------------------
+
+def tiny_cfg(window_chunks=3):
+    return dataclasses.replace(
+        get_config("ardit-self-forcing").reduced(),
+        n_layers=2, ardit_window_chunks=window_chunks)
+
+
+def nondegenerate_params(cfg, key):
+    p = A.init_params(cfg, key)
+    ks = jax.random.split(jax.random.PRNGKey(1234), 3)
+    p["layers"]["mod"] = 0.2 * jax.random.normal(
+        ks[0], p["layers"]["mod"].shape, p["layers"]["mod"].dtype)
+    p["layers"]["mod_b"] = 0.5 + 0.2 * jax.random.normal(
+        ks[1], p["layers"]["mod_b"].shape, p["layers"]["mod_b"].dtype)
+    p["final_mod"] = 0.2 * jax.random.normal(
+        ks[2], p["final_mod"].shape, p["final_mod"].dtype)
+    return p
+
+
+def _drive(ex, fid_of, targets, *, max_batch=8):
+    sids = sorted(targets)
+    while any(len(ex.chunks[s]) < targets[s] for s in sids):
+        runnable = [s for s in sids if len(ex.chunks[s]) < targets[s]]
+        for s in runnable:
+            if s not in ex.inflight:
+                ex.begin_chunk(s, fid_of(s), 0.0)
+        for grp in compose_batch(runnable,
+                                 lambda s: ex.inflight[s].fidelity,
+                                 max_batch, fuse=True):
+            ex.run_step(grp)
+
+
+def _make_ex(cfg, params, n, **kw):
+    ex = BatchedChunkExecutor(cfg=cfg, params=params,
+                              max_streams=n + 1, **kw)
+    for sid in range(n):
+        assert ex.admit(sid, seed=sid)
+    return ex
+
+
+@pytest.mark.slow
+def test_cache_off_never_constructs_manager():
+    """The default path must not even instantiate the cache — off is
+    bit-identical to the pre-cache executor by construction."""
+    cfg = tiny_cfg()
+    params = nondegenerate_params(cfg, KEY)
+    ex = _make_ex(cfg, params, 2)
+    _drive(ex, lambda s: OFF, {0: 2, 1: 2})
+    assert ex.stepcache is None
+    assert ex.cache_skipped_launches == 0
+
+
+@pytest.mark.slow
+def test_cache_aggressive_hits_skips_launches_bounded_drift():
+    cfg = tiny_cfg()
+    params = nondegenerate_params(cfg, KEY)
+    targets = {0: 3}
+    off = _make_ex(cfg, params, 1)
+    _drive(off, lambda s: OFF, targets)
+    agg = _make_ex(cfg, params, 1)
+    _drive(agg, lambda s: AGG, targets)
+
+    sc = agg.stepcache
+    assert sc is not None and sc.hits > 0
+    assert agg.cache_skipped_launches > 0
+    # skipped launches are real: fewer jitted dispatches for the same
+    # number of chunks (the throughput claim the bench gate holds)
+    assert agg.dispatch_count < off.dispatch_count
+    assert 0.0 < sc.stats()["hit_rate"] <= 0.5    # S=4: at most 2 of 4
+    # reused velocities drift the output only boundedly (the modeled
+    # A_CACHE quality cost), never wildly
+    for a, b in zip(agg.chunks[0], off.chunks[0]):
+        assert np.asarray(a).shape == np.asarray(b).shape
+        assert float(np.max(np.abs(np.asarray(a) - np.asarray(b)))) < 0.5
+    # EMAs attribute to the cache-on key, not the off sibling
+    assert AGG.key in agg.latency_ema and OFF.key not in agg.latency_ema
+
+
+@pytest.mark.slow
+def test_cache_row_leaves_off_neighbors_bit_exact():
+    """A cache-on row riding the same fused group must not perturb its
+    cache-off neighbors: same launches, same bits for the off rows."""
+    cfg = tiny_cfg()
+    params = nondegenerate_params(cfg, KEY)
+    targets = {0: 2, 1: 2}
+    ref = _make_ex(cfg, params, 2)
+    _drive(ref, lambda s: OFF, targets)                  # both off
+    mix = _make_ex(cfg, params, 2)
+    _drive(mix, lambda s: AGG if s == 1 else OFF, targets)
+    assert mix.stepcache is not None and mix.stepcache.hits > 0
+    # hit rows ride as shape-stable no-ops: the off row's launches are
+    # unchanged, so its chunks are bit-exact
+    for a, b in zip(mix.chunks[0], ref.chunks[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_export_retire_drop_cache_state_mid_run():
+    cfg = tiny_cfg()
+    params = nondegenerate_params(cfg, KEY)
+    ex = _make_ex(cfg, params, 2)
+    _drive(ex, lambda s: AGG, {0: 1, 1: 1})
+    sc = ex.stepcache
+    assert 0 in sc.states and 1 in sc.states
+    # migration export drops cache state (deliberately not carried) but
+    # carries the effective-window history
+    state = ex.export_stream(0)
+    assert 0 not in sc.states
+    assert "effective_window_log" in state
+    ex.import_stream(0, state)
+    assert 0 not in sc.states            # re-tracks at its next chunk
+    # retire frees the slot too
+    ex.retire(1)
+    assert 1 not in sc.states
+    # the re-imported stream rejoins through the normal (bit-exact)
+    # restore path and keeps serving chunks, cache re-engaging
+    assert ex.ensure_resident(0)
+    _drive(ex, lambda s: AGG, {0: 3})
+    assert len(ex.chunks[0]) == 3
+    assert 0 in sc.states

@@ -277,6 +277,55 @@ def run_lanes_session(n_lanes: int, n_streams: int, chunks: int,
     }
 
 
+def run_co_serve(models: list, n_streams: int, chunks: int,
+                 seed: int = 0) -> dict:
+    """Heterogeneous co-serving scenario: serve a round-robin model mix
+    through ONE lane pool (one paged KV pool + jit cache per bundle),
+    next to per-model SOLO baselines over exactly the streams each
+    model received in the mix.  Reports per-model and aggregate
+    streams/s; ``check_bench.py`` gates the co-served aggregate against
+    the load-weighted serial composition of the solo rates."""
+    import dataclasses as _dc
+
+    from repro.sched_sim.metrics import summarize
+    from repro.sched_sim.workloads import WORKLOADS
+    from repro.serve.session import (SessionConfig, StreamingSession,
+                                     cap_specs)
+
+    def _run(model_list: list, specs: list) -> tuple:
+        session = StreamingSession(SessionConfig(
+            executor="batched", models=model_list, max_batch=4,
+            pool_streams=len(specs) + 1, arrival_scale=0.2,
+            seed=seed, verbose=False))
+        for sp in specs:
+            session.submit(sp)
+        t0 = time.perf_counter()
+        res = session.run()
+        dt = time.perf_counter() - t0
+        return summarize(res), res, dt
+
+    base = cap_specs(WORKLOADS["steady"](n=n_streams, rate=1.0,
+                                         seed=seed), chunks)
+    tagged = [_dc.replace(sp, model=models[i % len(models)])
+              for i, sp in enumerate(base)]
+    solo = {}
+    for m in models:
+        specs_m = [sp for sp in tagged if sp.model == m]
+        _, _, dt = _run([m], specs_m)
+        solo[m] = {"streams": len(specs_m), "elapsed_s": round(dt, 4),
+                   "streams_per_s": round(len(specs_m) / dt, 4)}
+    summ, res, dt = _run(models, tagged)
+    return {
+        "models": models, "streams": n_streams, "chunks": chunks,
+        "solo": solo,
+        "per_model": summ.by_model,
+        "aggregate_streams_per_s": round(n_streams / dt, 4),
+        "elapsed_s": round(dt, 4),
+        "qoe": round(summ.qoe, 4),
+        "n_unserved": summ.n_unserved,
+    }
+
+
 def transfer_report(ex: BatchedChunkExecutor) -> dict:
     log = ex.pool.engine.log
     return {
@@ -312,6 +361,18 @@ def main() -> None:
                          "uniform population uncached vs cache="
                          "aggressive, reporting streams/s, hit rate and "
                          "launches skipped outright")
+    ap.add_argument("--co-serve", action="store_true",
+                    help="also run the heterogeneous co-serving "
+                         "scenario: a 2-model mix through one lane "
+                         "pool vs per-model solo baselines, per-model "
+                         "and aggregate streams/s into the JSON "
+                         "(gated by check_bench.py)")
+    ap.add_argument("--co-serve-models",
+                    default="ardit-self-forcing,ardit-causal-forcing",
+                    help="comma-separated registry configs for "
+                         "--co-serve")
+    ap.add_argument("--co-serve-streams", type=int, default=6,
+                    help="total stream count of the --co-serve mix")
     ap.add_argument("--lanes", type=int, default=0,
                     help="also run the multi-lane session scenario "
                          "with this many lanes (0 disables)")
@@ -462,6 +523,26 @@ def main() -> None:
         print(f"  cached vs uncached: "
               f"{sc['cached']['streams_per_s'] / sc['uncached']['streams_per_s']:.2f}x "
               f"streams/s at hit_rate={sc['cached']['hit_rate']:.2f}")
+
+    if args.co_serve:
+        co_models = [m.strip() for m in args.co_serve_models.split(",")
+                     if m.strip()]
+        row = run_co_serve(co_models, args.co_serve_streams, args.chunks)
+        results["co_serve"] = row
+        print(f"\nco_serve: {row['streams']} streams over "
+              f"{len(co_models)} models through one lane pool")
+        for m, sr in sorted(row["solo"].items()):
+            print(f"  solo {m}: {sr['streams']} streams in "
+                  f"{sr['elapsed_s']:6.2f}s "
+                  f"-> {sr['streams_per_s']:5.2f} streams/s")
+        for m, pr in sorted(row["per_model"].items()):
+            print(f"  co   {m}: CPR={pr['cpr']:.3f} "
+                  f"TTFC={pr['ttfc']:.2f}s "
+                  f"streams/s={pr['streams_per_s']:.3f}")
+        print(f"  aggregate: {row['streams']} streams in "
+              f"{row['elapsed_s']:6.2f}s "
+              f"-> {row['aggregate_streams_per_s']:5.2f} streams/s "
+              f"QoE={row['qoe']:.3f} unserved={row['n_unserved']}")
 
     if args.lanes:
         row = run_lanes_session(args.lanes, args.lane_streams,

@@ -16,6 +16,11 @@ lost), and — when the calibration cell ran — sim-vs-real agreement
 ``ok`` under the pinned tolerances.  Trajectory gate: vectorized
 ticks/s vs the previous artifact, same threshold rules as streams/s.
 
+A ``co_serve`` section (``--co-serve`` on the bench) adds another
+absolute gate: the co-served aggregate streams/s must come within
+``--co-serve-tol`` of the load-weighted composition of the per-model
+solo baselines, with zero unserved streams.
+
 Tracked scenarios: ``sequential``, ``batched/<backend>``,
 ``oversubscribed/<backend>``, ``mixed_fidelity/<mode>``,
 ``step_cache/<mode>`` and
@@ -129,6 +134,47 @@ def check_step_cache(bench: dict) -> bool:
     return failed
 
 
+def check_co_serve(bench: dict, tol: float = 0.40) -> bool:
+    """Absolute co-serving gate on the NEW output (no history needed):
+    the co-served aggregate streams/s must come within ``tol`` of the
+    load-weighted serial composition of the per-model SOLO rates —
+    expected = N_total / sum_m(n_m / solo_rate_m), i.e. the rate of
+    serving each model's share back-to-back at its solo speed.  A
+    co-serving stack that thrashes between bundles (jit churn, pool
+    contention) lands far below that floor.  Also gates n_unserved == 0
+    (co-serving must not silently drop streams).  Returns True when the
+    gate FAILS; silently passes when the scenario was not run.  The
+    default tolerance is generous: shared runners interleave two
+    compile caches and the solo baselines re-pay session warm-up."""
+    cs = bench.get("co_serve") or {}
+    solo, agg = cs.get("solo"), cs.get("aggregate_streams_per_s")
+    if not (isinstance(solo, dict) and solo and agg):
+        return False
+    failed = False
+    unserved = cs.get("n_unserved", 0)
+    flag = "ok" if unserved == 0 else "FAIL"
+    print(f"  co_serve unserved            {unserved} (gate == 0) {flag}")
+    failed |= unserved != 0
+    serial_s = 0.0
+    n_total = 0
+    for m, row in solo.items():
+        rate = row.get("streams_per_s") or 0.0
+        n_m = row.get("streams") or 0
+        if rate <= 0.0 or n_m <= 0:
+            print(f"  co_serve solo/{m}: no usable baseline, skipped")
+            return failed
+        serial_s += n_m / rate
+        n_total += n_m
+    expected = n_total / serial_s if serial_s > 0 else 0.0
+    floor = expected * (1.0 - tol)
+    flag = "ok" if agg >= floor else "FAIL"
+    print(f"  co_serve streams/s           aggregate={agg:.3f} "
+          f"load-weighted-solo={expected:.3f} (gate >= {floor:.3f}) "
+          f"{flag}")
+    failed |= agg < floor
+    return failed
+
+
 def check_fleet(args) -> int:
     """Gate ``BENCH_fleet_sim.json``: absolute acceptance criteria
     first, then the ticks/s trajectory against the previous artifact."""
@@ -201,6 +247,10 @@ def main() -> int:
     ap.add_argument("--min-speedup", type=float, default=5.0,
                     help="--fleet: minimum vectorized-over-scalar "
                          "control-tick speedup")
+    ap.add_argument("--co-serve-tol", type=float, default=0.40,
+                    help="max tolerated fractional shortfall of the "
+                         "co-served aggregate streams/s vs the "
+                         "load-weighted solo composition")
     args = ap.parse_args()
 
     if args.fleet:
@@ -213,11 +263,13 @@ def main() -> int:
     # output regardless of history
     failed = check_mixed_fidelity(new_bench, args.threshold)
     failed |= check_step_cache(new_bench)
+    failed |= check_co_serve(new_bench, args.co_serve_tol)
 
     prev_bench = _load_prev(args.prev)
     if prev_bench is None:
         if failed:
-            print("FAIL: mixed-fidelity or step-cache absolute gate")
+            print("FAIL: mixed-fidelity, step-cache, or co-serve "
+                  "absolute gate")
             return 1
         return 0
     prev = _rates(prev_bench)
@@ -240,9 +292,9 @@ def main() -> int:
         if delta < -args.threshold:
             failed = True
     if failed:
-        print(f"FAIL: fused-dispatch/step-cache gate or streams/s "
-              f"regression beyond {args.threshold:.0%} vs the previous "
-              f"nightly run")
+        print(f"FAIL: fused-dispatch/step-cache/co-serve gate or "
+              f"streams/s regression beyond {args.threshold:.0%} vs "
+              f"the previous nightly run")
         return 1
     print("bench trajectory ok")
     return 0

@@ -83,10 +83,18 @@ class ControlPlane:
         (``Worker.load`` also counts the donation, but an admitted
         stream would still contend with the borrowed one, so donors are
         skipped outright while any non-donating worker exists).
-        Retired workers (front-door scale-in) never take admissions."""
+        Retired workers (front-door scale-in) never take admissions.
+
+        With heterogeneous co-serving the view carries ``stream_weight``
+        (sid -> per-model placement weight) and the argmin runs over
+        weighted load — a worker holding one heavy-model stream is more
+        loaded than one holding one cheap stream.  ``stream_weight`` is
+        None on single-model paths, where ``load(None)`` is the exact
+        integer count."""
         free = [w for w in view.workers
                 if w.donated_to is None and not w.retired]
-        return min(free or view.workers, key=lambda w: w.load()).wid
+        return min(free or view.workers,
+                   key=lambda w: w.load(view.stream_weight)).wid
 
     def initial_slack(self, first_chunk_estimate: float) -> float:
         return self.config.ttfc_factor * first_chunk_estimate
@@ -150,7 +158,15 @@ class ControlPlane:
             if cfg.use_fidelity and not s.finished:
                 budget = max(s.playout_slack(now)
                              - (s.remaining if s.running_on else 0.0), 0.0)
-                dec: BMPRDecision = self.fidelity_policy.select(budget)
+                # co-serving: route through the stream's model bundle
+                # when the policy is model-aware (``select_for``);
+                # single-model streams (model None) take the exact
+                # legacy call
+                sel = getattr(self.fidelity_policy, "select_for", None)
+                dec: BMPRDecision = (
+                    sel(s.model, budget)
+                    if sel is not None and s.model is not None
+                    else self.fidelity_policy.select(budget))
                 s.next_fidelity = dec.fidelity
                 sp = 2 if s.sp_donor is not None else 1
                 s.t_next = self.fidelity_policy.profile.latency(

@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
 
@@ -57,6 +57,10 @@ class Stream:
     resident_on: Set[int] = dataclasses.field(default_factory=set)
     paused_until: float = -1.0
     done: bool = False
+    # heterogeneous co-serving: which model bundle backs this stream
+    # (None on single-model paths — every consumer treats None as the
+    # session's one model, so legacy behavior is untouched)
+    model: Optional[str] = None
 
     @property
     def t_next(self) -> float:
@@ -102,12 +106,25 @@ class Worker:
     # re-homings, SP donations, or admissions until revived
     retired: bool = False
 
-    def load(self) -> int:
+    def load(self, weight: Optional[Callable[[int], float]] = None):
         """Queued + running + donated: a worker lending itself as an
         SP2 half (SS4.3) is occupied even though the borrowed stream
-        never appears in its own queue."""
-        return (len(self.queue) + (1 if self.running is not None else 0)
-                + (1 if self.donated_to is not None else 0))
+        never appears in its own queue.
+
+        With ``weight`` (sid -> per-model placement weight, heterogeneous
+        co-serving) each occupant counts its weight instead of 1 — a
+        cheap SSM stream occupies less of a worker than a heavy MoE
+        stream.  Without it the exact integer count is returned, so
+        single-model argmins are unchanged."""
+        if weight is None:
+            return (len(self.queue) + (1 if self.running is not None else 0)
+                    + (1 if self.donated_to is not None else 0))
+        load = sum(weight(sid) for sid in self.queue)
+        if self.running is not None:
+            load += weight(self.running)
+        if self.donated_to is not None:
+            load += weight(self.donated_to)
+        return load
 
 
 @dataclasses.dataclass
@@ -116,6 +133,9 @@ class ClusterView:
     streams: Dict[int, Stream]
     workers: List[Worker]
     workers_per_node: int = 8
+    # heterogeneous co-serving: sid -> placement weight of the stream's
+    # model bundle; None keeps placement on the integer queue-depth path
+    stream_weight: Optional[Callable[[int], float]] = None
 
     def node_of(self, wid: int) -> int:
         return self.workers[wid].node

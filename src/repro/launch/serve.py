@@ -27,6 +27,9 @@ Two modes, ONE workload spec and ONE metrics surface:
         --streams 4 --pool-streams 2        # oversubscribed page pool
     PYTHONPATH=src python -m repro.launch.serve --real --lanes 2 \
         --workload burst                    # multi-lane: migrations + SP
+    PYTHONPATH=src python -m repro.launch.serve --real \
+        --models ardit-self-forcing,ardit-causal-forcing \
+        --streams 4                # heterogeneous co-serving, one pool
 """
 from __future__ import annotations
 
@@ -67,6 +70,12 @@ def main() -> None:
                          "cross-lane mechanisms engage)")
     ap.add_argument("--rate", type=float, default=1.0)
     ap.add_argument("--model", default="causal-forcing")
+    ap.add_argument("--models", default="",
+                    help="comma-separated registry configs to CO-SERVE "
+                         "on one lane pool (--real; implies --batched). "
+                         "Streams are tagged round-robin; the first "
+                         "model is the primary bundle and the report "
+                         "adds per-model Summary rows")
     ap.add_argument("--chunks", type=int, default=4,
                     help="per-stream chunk cap for --real (the tiny "
                          "model; --sim uses the spec lengths as-is)")
@@ -110,6 +119,11 @@ def main() -> None:
 
     if args.lanes > 1:
         args.batched = True          # lanes ride the batched executor
+    if args.models:
+        if not args.real:
+            ap.error("--models only applies to --real (co-serving rides "
+                     "the live batched executor)")
+        args.batched = True          # co-serving rides the batched path
     if args.pool_streams and not (args.real and args.batched):
         ap.error("--pool-streams only applies to --real --batched")
     if any(a.startswith("--context-backend") for a in sys.argv[1:]) \
@@ -161,12 +175,19 @@ def main() -> None:
         from repro.serve.session import scale_specs
         specs = (scale_specs(raw, args.chunks) if args.lanes > 1
                  else cap_specs(raw, args.chunks))
+        model_list = [m.strip() for m in args.models.split(",")
+                      if m.strip()]
+        if model_list:
+            import dataclasses as _dc
+            specs = [_dc.replace(sp, model=model_list[i % len(model_list)])
+                     for i, sp in enumerate(specs)]
         fd_cfg = None
         if args.front_door:
             from repro.sched_sim.frontdoor import FrontDoorConfig
             fd_cfg = FrontDoorConfig()        # autoscale forced off live
         session = StreamingSession(SessionConfig(
             executor="batched" if args.batched else "sequential",
+            models=model_list or None,
             max_batch=args.max_batch
             or (3 if args.lanes > 1 else 4),
             lanes=args.lanes,
@@ -185,7 +206,11 @@ def main() -> None:
         s = summarize(res)
         label = (f"real-{args.lanes}-lane" if args.lanes > 1 else
                  "real-batched" if args.batched else "real-sequential")
+        if model_list:
+            label += f"-coserve[{','.join(model_list)}]"
         print(f"{label} on {args.workload}: {s.row()}")
+        for line in s.model_rows():
+            print(line)
         print(f"  rehomings={s.n_rehomings} elastic_sp={s.n_sp_events} "
               f"transfers={transfer_stats(res)}")
         if args.front_door:
@@ -249,6 +274,8 @@ def main() -> None:
     res = Simulator(sim_cfg, specs, policy).run()
     s = summarize(res)
     print(f"{args.policy} on {args.workload}: {s.row()}")
+    for line in s.model_rows():          # mixed_models workload
+        print(line)
     print(f"  rehomings={s.n_rehomings} elastic_sp={s.n_sp_events} "
           f"transfers={transfer_stats(res)}")
     if args.front_door:

@@ -68,6 +68,30 @@ A_INT = 0.8          # rho x low-S interaction (fewer steps amplify sparsity)
 STEP_CACHE_HIT_RATE = {"off": 0.0, "conservative": 0.25, "aggressive": 0.5}
 A_CACHE = {"off": 0.0, "conservative": 0.18, "aggressive": 0.5}
 
+# -- per-model step-cost multipliers (heterogeneous co-serving) ---------------
+# Relative per-chunk compute vs the Wan-1.3B AR-DiT reference.  The two
+# paper columns share that backbone (1.0 — multiplying by 1.0 is skipped,
+# keeping single-model latencies bit-identical).  The other registry
+# families carry analytic priors from their arithmetic intensity — a
+# Mamba-2 scan is cheap per token, a top-k MoE activates a parameter
+# slice far larger than a dense 1.3B — consumed by the simulator's
+# per-stream step cost and by placement weighting (``Worker.load``),
+# never by the live jitted path (which measures its own EMAs).
+MODEL_COST: Dict[str, float] = {
+    "causal-forcing": 1.0,
+    "self-forcing": 1.0,
+    "mamba2-780m": 0.35,
+    "minicpm-2b": 0.8,
+    "granite-moe-1b-a400m": 0.6,
+    "minitron-8b": 2.2,
+    "internlm2-20b": 4.5,
+    "jamba-v0.1-52b": 3.0,
+    "internvl2-26b": 5.5,
+    "qwen1.5-32b": 6.5,
+    "qwen3-moe-235b-a22b": 7.5,
+    "whisper-medium": 0.5,
+}
+
 
 def step_cache_latency_factor(level: str, steps: int) -> float:
     """Expected chunk-latency multiplier of a cache level.
@@ -108,6 +132,9 @@ def chunk_latency(cfg: FidelityConfig, *, sp_degree: int = 1,
     cache = getattr(cfg, "cache", "off")
     if cache != "off":
         lat *= step_cache_latency_factor(cache, cfg.steps)
+    cost = MODEL_COST.get(model, 1.0)
+    if cost != 1.0:
+        lat *= cost
     return lat
 
 

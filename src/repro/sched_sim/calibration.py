@@ -139,17 +139,29 @@ def fit_batch_alpha(batch_step_times: Dict[int, float]) -> Optional[float]:
 
 def fit_session(session: Any,
                 batch_step_times: Optional[Dict[int, float]] = None,
-                ) -> CalibrationReport:
+                model: Optional[str] = None) -> CalibrationReport:
     """Fit a ``CalibrationReport`` from a finished ``StreamingSession``.
 
     Reads the per-fidelity latency EMAs of every lane executor (mean
     across lanes: same host, same device class), the session's playout
     budget, and the transfer engine's measured-calibrated bandwidths
     (device-backed lanes fold real ``device_put`` observations into
-    ``engine.bw_intra``; host-only runs keep the analytic constant)."""
+    ``engine.bw_intra``; host-only runs keep the analytic constant).
+
+    Co-serving sessions calibrate per bundle: pass ``model`` (a bundle
+    name) to fit from THAT bundle's lane executors and profile — each
+    co-served model gets its own report, exactly as if it had run
+    solo."""
     profile = getattr(session, "_profile", None) or get_profile()
+    executors = session.lanes.executors
+    if model is not None:
+        bundle_profiles = getattr(session, "_bundle_profiles", {})
+        if model in bundle_profiles:
+            profile = bundle_profiles[model]
+        executors = getattr(session.lanes, "bundle_executors",
+                            {}).get(model, executors)
     measured: Dict[str, List[float]] = {}
-    for ex in session.lanes.executors:
+    for ex in executors:
         for key, val in getattr(ex, "latency_ema", {}).items():
             measured.setdefault(key, []).append(val)
     flat = {key: statistics.mean(vals) for key, vals in measured.items()}

@@ -87,14 +87,50 @@ from repro.profiler.profiles import (  # noqa: E402,F401
 )
 
 
-def stream_pages(chunks_resident: int) -> int:
-    """Pages held by a stream with ``chunks_resident`` chunks in window."""
-    return SINK_PAGES + min(chunks_resident,
-                            MAX_WINDOW_CHUNKS) * FRAMES_PER_CHUNK
+# --- per-model KV footprint (heterogeneous co-serving) -----------------------
+# Bytes-per-page multiplier vs the Wan-1.3B AR-DiT reference (12 KV heads
+# x 128 head dim x 30 layers).  The paper's two AR-DiT columns share that
+# KV geometry (causal-forcing: 16 heads x 96 = same bytes/row).  Other
+# registry families carry analytic priors: an SSM holds O(1) state
+# instead of a KV window, MoE/dense KV scales with layers x kv_heads x
+# head_dim.  Consumed by the simulator's residency/transfer model only.
+MODEL_PAGE_FACTOR = {
+    "causal-forcing": 1.0,
+    "self-forcing": 1.0,
+    "mamba2-780m": 0.02,
+    "minicpm-2b": 0.5,
+    "granite-moe-1b-a400m": 0.4,
+    "minitron-8b": 0.8,
+    "internlm2-20b": 1.5,
+    "jamba-v0.1-52b": 0.3,
+    "internvl2-26b": 1.6,
+    "qwen1.5-32b": 2.0,
+    "qwen3-moe-235b-a22b": 3.0,
+    "whisper-medium": 0.6,
+}
 
 
-def stream_bytes(chunks_resident: int) -> int:
-    return stream_pages(chunks_resident) * PAGE_BYTES
+def model_page_factor(model) -> float:
+    return MODEL_PAGE_FACTOR.get(model, 1.0) if model is not None else 1.0
+
+
+def stream_pages(chunks_resident: int, model=None) -> int:
+    """Pages held by a stream with ``chunks_resident`` chunks in window.
+
+    ``model`` scales the count by the bundle's page-footprint factor
+    (rounded up: a fractional page still occupies a page); None is the
+    exact legacy count."""
+    pages = SINK_PAGES + min(chunks_resident,
+                             MAX_WINDOW_CHUNKS) * FRAMES_PER_CHUNK
+    factor = model_page_factor(model)
+    if factor != 1.0:
+        import math
+        pages = max(1, math.ceil(pages * factor))
+    return pages
+
+
+def stream_bytes(chunks_resident: int, model=None) -> int:
+    return stream_pages(chunks_resident, model) * PAGE_BYTES
 
 
 TS_RECONFIG_S = 0.30     # TridentServe SP/parallelism reconfiguration stall

@@ -21,9 +21,19 @@ seeds per-stream playout deadlines), and picks one of four outcomes:
 
 The TTFC prediction is load-derived, not magic: a stream homed on the
 least-loaded worker waits for ~``load`` chunk services before its first
-dispatch slot, each costing the observed per-chunk service EMA (seeded
+dispatch slot, each costing the observed per-chunk service time (seeded
 from the profiled top-fidelity latency, re-estimated online from
 completed chunks), plus its own first-chunk generation.
+
+The service estimate is **keyed per (model, fidelity)**: each completed
+chunk updates the EMA of its own key, and the fleet-wide expected
+service is the observation-weighted mix of the keyed EMAs.  One global
+EMA systematically over-predicts on a low-fidelity-heavy fleet — a few
+slow high-fidelity completions drag the single estimate far above what
+the (mostly cheap) next dispatch slots actually cost, and the door
+over-rejects.  The global ``chunk_service_ema`` survives as the
+no-observations fallback and stays bit-identical on single-key traffic
+(one key's EMA sees exactly the global update sequence).
 
 Deciders emit *decisions*; the driver (discrete-event simulator or the
 real ``StreamingSession``) applies them — exactly the control-plane
@@ -97,6 +107,14 @@ class FrontDoor:
         self.cfg = config or FrontDoorConfig()
         self.first_est = first_chunk_estimate
         self.chunk_service_ema = first_chunk_estimate
+        # per-(model, fidelity) service EMAs + observation counts; the
+        # expected service is their observation-weighted mix (the
+        # traffic the fleet ACTUALLY serves), falling back to the
+        # global EMA until the first keyed observation lands
+        self._service_emas: Dict[Tuple[Optional[str], Optional[str]],
+                                 float] = {}
+        self._service_obs: Dict[Tuple[Optional[str], Optional[str]],
+                                int] = {}
         # FIFO admission queue: (sid, arrival_time, enqueue_time)
         self.waiting: List[Tuple[int, float, float]] = []
         self._cooldown_until = -1e18
@@ -115,6 +133,18 @@ class FrontDoor:
     def slo_ttfc(self) -> float:
         return self.cfg.slo_ttfc_factor * self.first_est
 
+    def expected_service(self) -> float:
+        """Expected per-chunk service of the fleet's CURRENT traffic
+        mix: the observation-count-weighted mean of the keyed
+        per-(model, fidelity) EMAs.  Falls back to the global
+        ``chunk_service_ema`` before any keyed observation exists (and
+        equals it exactly under single-key traffic)."""
+        if not self._service_obs:
+            return self.chunk_service_ema
+        total = sum(self._service_obs.values())
+        return sum(self._service_emas[k] * n
+                   for k, n in self._service_obs.items()) / total
+
     def predict_ttfc(self, view: Any) -> float:
         """Load-derived TTFC estimate for a stream admitted NOW: homed
         on the least-loaded ACTIVE worker (retired workers take no
@@ -122,17 +152,28 @@ class FrontDoor:
         dispatch slot, then generates its own first chunk."""
         load = min((w.load() for w in view.workers if not w.retired),
                    default=min(w.load() for w in view.workers))
-        return load * self.chunk_service_ema + self.first_est
+        return load * self.expected_service() + self.first_est
 
-    def observe_chunk(self, service_seconds: float) -> None:
+    def observe_chunk(self, service_seconds: float,
+                      fidelity: Optional[str] = None,
+                      model: Optional[str] = None) -> None:
         """Online re-estimation of the per-chunk service time (dispatch
-        wait + generation, as completed chunks actually experienced
-        it)."""
+        wait + generation, as completed chunks actually experienced it).
+        Updates the global EMA (the keyless fallback) AND the
+        per-(model, fidelity) EMA of the chunk's own key."""
         if service_seconds <= 0.0:
             return
         d = self.cfg.ema_decay
+        # a new key seeds from the global EMA's PRE-update value: under
+        # single-key traffic the keyed recurrence then reproduces the
+        # global one exactly (expected_service == chunk_service_ema,
+        # keeping the legacy predictor bit-identical there)
+        key = (model, fidelity)
+        old = self._service_emas.get(key, self.chunk_service_ema)
         self.chunk_service_ema = ((1.0 - d) * self.chunk_service_ema
                                   + d * service_seconds)
+        self._service_emas[key] = (1.0 - d) * old + d * service_seconds
+        self._service_obs[key] = self._service_obs.get(key, 0) + 1
 
     # ------------------------------------------------------------- arrival
     def on_arrival(self, view: Any, now: float, first_est: float,
@@ -239,7 +280,7 @@ class FrontDoor:
         survivors = active[:]
         for w in idle[:k]:
             survivors.remove(w)
-        pred = (min(w.load() for w in survivors) * self.chunk_service_ema
+        pred = (min(w.load() for w in survivors) * self.expected_service()
                 + self.first_est)
         if pred * cfg.scale_in_slack_factor > self.slo_ttfc():
             return 0

@@ -35,12 +35,24 @@ class Summary:
     n_sp_events: int
     n_unserved: int = 0           # admitted streams with zero ready chunks
     avg_effective_window: float = 0.0   # mean page-degraded KV window
+    # heterogeneous co-serving: per-model rows (model name -> {cpr,
+    # ttfc, n_streams, n_chunks, streams_per_s}) so sim-vs-real parity
+    # holds per model, not just in aggregate; empty when no stream
+    # carries a model tag (single-model runs)
+    by_model: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
 
     def row(self) -> str:
         return (f"QoE={self.qoe:.3f} TTFC={self.ttfc:.2f}s "
                 f"VBench={self.quality:.2f} "
                 f"stalls/stream={self.stalls_per_stream:.2f} "
                 f"avg_stall={self.avg_stall_ms:.0f}ms")
+
+    def model_rows(self) -> List[str]:
+        return [f"  [{m}] CPR={r['cpr']:.3f} TTFC={r['ttfc']:.2f}s "
+                f"streams={r['n_streams']:.0f} chunks={r['n_chunks']:.0f} "
+                f"streams/s={r['streams_per_s']:.3f}"
+                for m, r in sorted(self.by_model.items())]
 
 
 def summarize(res: Any) -> Summary:
@@ -86,7 +98,44 @@ def summarize(res: Any) -> Summary:
         n_rehomings=getattr(res, "n_rehomings", 0),
         n_sp_events=getattr(res, "n_sp_events", 0),
         n_unserved=n_unserved,
-        avg_effective_window=_avg_effective_window(res))
+        avg_effective_window=_avg_effective_window(res),
+        by_model=_by_model(res))
+
+
+def _by_model(res: Any) -> Dict[str, Dict[str, float]]:
+    """Per-model CPR/TTFC/streams-per-s rows (heterogeneous co-serving).
+    Empty unless at least one stream record carries a model tag, so
+    single-model summaries are unchanged."""
+    groups: Dict[str, List[Any]] = {}
+    for s in res.streams.values():
+        m = getattr(s, "model", None)
+        if m is not None:
+            groups.setdefault(m, []).append(s)
+    rows: Dict[str, Dict[str, float]] = {}
+    for m, streams in sorted(groups.items()):
+        cprs, ttfcs = [], []
+        n_chunks = 0
+        served = [s for s in streams if s.ready_times]
+        for s in streams:
+            if not s.ready_times:
+                cprs.append(0.0)
+                continue
+            hits = sum(1 for r, d in zip(s.ready_times, s.deadlines)
+                       if r <= d)
+            cprs.append(hits / max(len(s.ready_times), 1))
+            if s.first_chunk_time is not None:
+                ttfcs.append(s.first_chunk_time - s.arrival)
+            n_chunks += len(s.ready_times)
+        span = (max(s.ready_times[-1] for s in served)
+                - min(s.arrival for s in streams)) if served else 0.0
+        rows[m] = {
+            "cpr": statistics.mean(cprs) if cprs else 0.0,
+            "ttfc": statistics.mean(ttfcs) if ttfcs else float("inf"),
+            "n_streams": float(len(streams)),
+            "n_chunks": float(n_chunks),
+            "streams_per_s": (len(served) / span if span > 0 else 0.0),
+        }
+    return rows
 
 
 def _avg_effective_window(res: Any) -> float:

@@ -23,7 +23,7 @@ from repro.core.control_plane import ControlPlane, ControlConfig
 from repro.core.fidelity import FidelityConfig, HIGHEST_QUALITY
 from repro.core.state_plane import AsyncTransferEngine, PagedKVPool
 from repro.core.types import ClusterView, Stream, Tier, Worker
-from repro.profiler.profiles import ModelProfile, get_profile
+from repro.profiler.profiles import MODEL_COST, ModelProfile, get_profile
 from repro.sched_sim import cost_model as cm
 from repro.sched_sim.frontdoor import FrontDoor, FrontDoorConfig
 from repro.sched_sim.workloads import StreamSpec
@@ -190,6 +190,7 @@ class Simulator:
                    ttfc_slack=ttfc_slack,
                    next_deadline=arrival + ttfc_slack)
         s.t_next = first_est
+        s.model = spec.model          # co-serving: None on legacy workloads
         self.view.streams[sid] = s
         self.policy.on_admit(s)
         self.view.workers[home].queue.append(sid)
@@ -414,8 +415,15 @@ class Simulator:
     def _step_time(self, s: Stream, batch: int, sp: int) -> float:
         """Per-step wall time.  A lockstep batch of b shares the unit, so
         every member sees t_step * batch_factor(b); pipeline-parallel
-        units (SDV2) divide the step time by their pipeline speedup."""
+        units (SDV2) divide the step time by their pipeline speedup.
+        Co-served streams scale by their model's relative step cost
+        (``MODEL_COST``, 1.0 for the primary — untagged streams are
+        untouched)."""
         lat = self.profile.latency(s.next_fidelity, sp_degree=sp)
+        if s.model is not None:
+            cost = MODEL_COST.get(s.model, 1.0)
+            if cost != 1.0:
+                lat *= cost
         step = lat / s.next_fidelity.steps
         step /= getattr(self.policy, "pipeline_speedup", 1.0)
         if batch > 1:
@@ -470,7 +478,9 @@ class Simulator:
         ready = self.now
         ddl = s.next_deadline
         if self.front_door is not None and s.chunk_started is not None:
-            self.front_door.observe_chunk(ready - s.chunk_started)
+            self.front_door.observe_chunk(ready - s.chunk_started,
+                                          fidelity=s.next_fidelity.key,
+                                          model=s.model)
         s.ready_times.append(ready)
         s.deadlines.append(ddl)
         if s.first_chunk_time is None:
@@ -511,7 +521,7 @@ class Simulator:
     def _grow_kv(self, sid: int, wid: int) -> None:
         s = self.view.streams[sid]
         pool = self.pools[wid]
-        want = cm.stream_pages(s.chunks_done)
+        want = cm.stream_pages(s.chunks_done, model=s.model)
         delta = want - pool.pages_of(sid)
         if delta <= 0:
             return
@@ -534,11 +544,11 @@ class Simulator:
         w = self.view.workers[wid]
         if sid in w.queue:
             w.queue.remove(sid)
-        n_bytes = cm.stream_bytes(s.chunks_done)
+        n_bytes = cm.stream_bytes(s.chunks_done, model=s.model)
         timing = self.engine.transfer(self.now, n_bytes, cross_node=False)
         self.in_transfer[sid] = timing.first_layer_ready
         pool = self.pools[wid]
-        want = cm.stream_pages(s.chunks_done)
+        want = cm.stream_pages(s.chunks_done, model=s.model)
         while not pool.can_alloc(want):
             victim = q_mod.pick_eviction(
                 [x for x in pool.resident_sids()
@@ -577,13 +587,13 @@ class Simulator:
                 cross_node: bool) -> None:
         """Re-homing state movement through the State Plane (SS4.4)."""
         s = self.view.streams[sid]
-        n_bytes = cm.stream_bytes(s.chunks_done)
+        n_bytes = cm.stream_bytes(s.chunks_done, model=s.model)
         timing = self.engine.transfer(self.now, n_bytes,
                                       cross_node=cross_node)
         self.pools[src].release(sid)
         s.resident_on.discard(src)
         pool = self.pools[dst]
-        want = cm.stream_pages(s.chunks_done)
+        want = cm.stream_pages(s.chunks_done, model=s.model)
         while not pool.can_alloc(want):
             victim = q_mod.pick_eviction(
                 [x for x in pool.resident_sids()
@@ -608,7 +618,7 @@ class Simulator:
     def sp_head_partition_transfer(self, sid: int, donor: int) -> None:
         """Ulysses head-partition KV to the donor (App. C.4): half bytes."""
         s = self.view.streams[sid]
-        n_bytes = cm.stream_bytes(s.chunks_done) // 2
+        n_bytes = cm.stream_bytes(s.chunks_done, model=s.model) // 2
         timing = self.engine.transfer(self.now, n_bytes, cross_node=False)
         self.in_transfer[sid] = timing.first_layer_ready
         for w in self.view.workers:

@@ -33,6 +33,7 @@ class StreamSpec:
     frames: int                       # target pixel frames
     switches: Tuple[float, ...] = ()  # prompt-switch times (relative, s)
     pauses: Tuple[Tuple[float, float], ...] = ()   # (rel start, duration)
+    model: Optional[str] = None       # co-serving: profile/model name
 
     @property
     def chunks(self) -> int:
@@ -187,6 +188,27 @@ def flash_crowd(n: int = N_PROMPTS, rate: float = 1.0, seed: int = 0,
             for i in range(n)]
 
 
+def mixed_models(n: int = N_PROMPTS, rate: float = 1.0, seed: int = 0,
+                 models: Tuple[str, ...] = ("causal-forcing",
+                                            "self-forcing"),
+                 weights: Optional[Tuple[float, ...]] = None
+                 ) -> List[StreamSpec]:
+    """Heterogeneous co-serving arrivals: ``steady`` with each stream
+    tagged with a model drawn from ``models`` (uniform unless
+    ``weights`` given).  A separate rng (``seed + 2``) does the model
+    draws so arrivals and lengths match ``steady`` at the same seed —
+    per-model sub-workloads are then directly comparable to the
+    single-model run they were carved out of."""
+    if not models:
+        raise ValueError("mixed_models needs at least one model name")
+    rng = random.Random(seed + 2)
+    base = steady(n, rate, seed)
+    picks = (rng.choices(list(models), weights=list(weights), k=n)
+             if weights is not None else
+             [rng.choice(list(models)) for _ in range(n)])
+    return [dataclasses.replace(s, model=m) for s, m in zip(base, picks)]
+
+
 WORKLOADS = {
     "steady": steady,
     "burst": burst,
@@ -195,4 +217,5 @@ WORKLOADS = {
     "trace": trace,
     "diurnal": diurnal,
     "flash_crowd": flash_crowd,
+    "mixed_models": mixed_models,
 }

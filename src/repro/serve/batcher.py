@@ -47,7 +47,9 @@ from repro.serve.executor import EMA_DECAY, ChunkExecutor, ServedStream
 
 def compose_batch(sids: Sequence[int],
                   fidelity_of: Callable[[int], FidelityConfig],
-                  max_batch: int, fuse: bool = False) -> List[List[int]]:
+                  max_batch: int, fuse: bool = False,
+                  model_of: Optional[Callable[[int], str]] = None,
+                  ) -> List[List[int]]:
     """Credit-ordered micro-batch composition.
 
     ``sids`` is the runnable set already ordered by service credit
@@ -63,11 +65,20 @@ def compose_batch(sids: Sequence[int],
     dispatch count from O(#fidelity keys) to O(#dtypes).  The dtype
     split stays: KV quantization changes the pool buffer dtype the
     jitted step is compiled against, which cannot be row data.
+
+    ``model_of`` (heterogeneous co-serving) prefixes every group key
+    with the stream's model bundle: a sub-batch runs one jitted step of
+    ONE model against ONE pool, so ``(model, kv_dtype)`` is the fused
+    grouping floor.  None (single-model sessions) keeps the exact
+    legacy keys.
     """
-    groups: Dict[str, List[int]] = {}
+    groups: Dict[Any, List[int]] = {}
     for sid in list(sids)[:max_batch]:
         fid = fidelity_of(sid)
-        groups.setdefault(fid.quant if fuse else fid.key, []).append(sid)
+        key = fid.quant if fuse else fid.key
+        if model_of is not None:
+            key = (model_of(sid), key)
+        groups.setdefault(key, []).append(sid)
     return list(groups.values())
 
 

@@ -48,12 +48,24 @@ discrete-event simulator already applies on its virtual clock):
 
   Both modes are bit-identical to the SP1 step.
 
-All lanes share ONE model replica (per-device views of the same
+All lanes of one model share ONE replica (per-device views of the same
 params), one transfer engine (one metrics surface), and — because the
 jitted step functions are module-level — one compile cache per device.
 :meth:`prejit_sp` warms the solo-SP executables up front so triggering
 elastic SP never compiles on the critical path (batch-axis SP reuses
 the donor's ordinary step shapes, which warm naturally).
+
+**Heterogeneous co-serving** (``bundles=``): the pool holds one
+executor + paged ``KVPool`` per *(bundle, lane)* — a lane's device
+hosts one pool per co-served model, each with that model's params,
+geometry, and compile cache.  Every stream is pinned to its bundle
+(``model_of``) and all routing (``executor_of``/``serving_ex``,
+migrate, SP expand/release) resolves through ``ex_for(lane, model)``,
+so re-homing and elastic SP are *same-model-only by construction*: a
+move or mirror always lands in the target lane's pool of the SAME
+bundle.  ``bundles=None`` (or a single bundle) builds exactly the
+legacy objects in the legacy order — single-model sessions are
+bit-identical to the pre-refactor path.
 """
 from __future__ import annotations
 
@@ -85,7 +97,8 @@ class LanePool:
                  seed: int = 0, max_streams: int = 16,
                  context_backend: str = "paged",
                  engine: Optional[AsyncTransferEngine] = None,
-                 sp_mode: str = "auto", page_evict: bool = False):
+                 sp_mode: str = "auto", page_evict: bool = False,
+                 bundles: Optional[Sequence[Any]] = None):
         assert n_lanes >= 1
         assert sp_mode in ("auto", "solo", "batch"), sp_mode
         # lanes round-robin over the runtime's real devices (forced host
@@ -97,6 +110,13 @@ class LanePool:
             [devs[i % len(devs)] for i in range(n_lanes)]
             if len(devs) > 1 else [None] * n_lanes)
         self.sp_mode = sp_mode
+        # heterogeneous co-serving: the PRIMARY bundle's executors are
+        # ``self.executors`` (constructed exactly like the legacy
+        # single-model path, in the same order), extra bundles add one
+        # executor + pool per lane on the same devices/engine
+        self.bundles = list(bundles) if bundles else None
+        if self.bundles:
+            cfg, params = self.bundles[0].cfg, self.bundles[0].params
         first = BatchedChunkExecutor(cfg=cfg, params=params, seed=seed,
                                      max_streams=max_streams,
                                      context_backend=context_backend,
@@ -111,6 +131,20 @@ class LanePool:
                 max_streams=max_streams, context_backend=context_backend,
                 engine=self.engine, device=self.lane_devices[lane],
                 page_evict=page_evict))
+        self.bundle_executors: Dict[str, List[Any]] = {}
+        self.model_of: Dict[int, str] = {}
+        if self.bundles:
+            self.bundle_executors[self.bundles[0].name] = self.executors
+            for b in self.bundles[1:]:
+                self.bundle_executors[b.name] = [
+                    BatchedChunkExecutor(
+                        cfg=b.cfg, params=b.params,
+                        max_streams=max_streams,
+                        context_backend=context_backend,
+                        engine=self.engine,
+                        device=self.lane_devices[lane],
+                        page_evict=page_evict)
+                    for lane in range(n_lanes)]
         self.lane_of: Dict[int, int] = {}
         self.n_migrations = 0
         self.n_sp_expands = 0
@@ -129,6 +163,9 @@ class LanePool:
         self.engine = (pool.engine if pool is not None
                        else getattr(executor, "engine",
                                     AsyncTransferEngine()))
+        self.bundles = None
+        self.bundle_executors = {}
+        self.model_of = {}
         self.lane_of = {}
         self.n_migrations = 0
         self.n_sp_expands = 0
@@ -143,8 +180,27 @@ class LanePool:
     def ex(self, lane: int) -> Any:
         return self.executors[lane]
 
+    def ex_for(self, lane: int, model: Optional[str] = None) -> Any:
+        """The executor of ``lane`` serving ``model``'s bundle — the
+        primary list when ``model`` is None or unknown (single-model
+        paths resolve here to exactly the legacy object)."""
+        if model is not None and model in self.bundle_executors:
+            return self.bundle_executors[model][lane]
+        return self.executors[lane]
+
+    @property
+    def all_executors(self) -> List[Any]:
+        """Every executor across bundles, primary bundle's lanes first."""
+        if not self.bundle_executors:
+            return self.executors
+        out = list(self.executors)
+        for name, exs in self.bundle_executors.items():
+            if exs is not self.executors:
+                out.extend(exs)
+        return out
+
     def executor_of(self, sid: int) -> Any:
-        return self.executors[self.lane_of.get(sid, 0)]
+        return self.ex_for(self.lane_of.get(sid, 0), self.model_of.get(sid))
 
     def chunks_of(self, sid: int) -> List[Any]:
         return self.executor_of(sid).chunks.get(sid, [])
@@ -155,14 +211,14 @@ class LanePool:
         row), its home lane otherwise."""
         link = self.sp_link(sid)
         if link is not None and getattr(link, "mode", "solo") == "batch":
-            return self.executors[link.donor]
+            return self.ex_for(link.donor, self.model_of.get(sid))
         return self.executor_of(sid)
 
     def is_inflight(self, sid: int) -> bool:
         return sid in self.serving_ex(sid).inflight
 
     def any_inflight(self) -> bool:
-        return any(ex.inflight for ex in self.executors)
+        return any(ex.inflight for ex in self.all_executors)
 
     def sp_link(self, sid: int) -> Optional[SPLink]:
         return getattr(self.executor_of(sid), "sp_links", {}).get(sid)
@@ -170,21 +226,33 @@ class LanePool:
     def remaining_estimate(self, sid: int) -> float:
         return self.serving_ex(sid).remaining_estimate(sid)
 
-    def latency_ema_get(self, key: str, default: float) -> float:
+    def latency_ema_get(self, key: str, default: float,
+                        model: Optional[str] = None) -> float:
         """Measured chunk-latency EMA for a fidelity, averaged over the
         lanes that have observed it (all lanes share one host/device
-        class, so their EMAs estimate the same quantity)."""
-        vals = [ex.latency_ema[key] for ex in self.executors
+        class, so their EMAs estimate the same quantity).  ``model``
+        scopes the read to that bundle's executors — fidelity keys
+        collide across co-served models, so a cross-bundle average
+        would mix surfaces."""
+        exs = (self.bundle_executors.get(model, self.executors)
+               if model is not None else self.executors)
+        vals = [ex.latency_ema[key] for ex in exs
                 if key in ex.latency_ema]
         return sum(vals) / len(vals) if vals else default
 
     # ---- stream lifecycle (routed to the home lane) ------------------------
     def admit(self, sid: int, lane: int, seed: int = 0,
               streams: Optional[Dict[int, Stream]] = None,
-              protect: Sequence[int] = ()) -> bool:
+              protect: Sequence[int] = (),
+              model: Optional[str] = None) -> bool:
         self.lane_of[sid] = lane
-        return self.executors[lane].admit(sid, seed=seed, streams=streams,
-                                          protect=protect)
+        if model is not None:
+            self.model_of[sid] = model
+        else:
+            self.model_of.pop(sid, None)      # sid reuse across models
+        return self.ex_for(lane, model).admit(sid, seed=seed,
+                                              streams=streams,
+                                              protect=protect)
 
     def ensure_resident(self, sid: int,
                         streams: Optional[Dict[int, Stream]] = None,
@@ -208,6 +276,10 @@ class LanePool:
         if self.sp_link(sid) is not None:
             self.sp_release(sid)
         self.executor_of(sid).retire(sid)
+        # model_of is deliberately RETAINED: generated chunks survive
+        # retire inside the bundle's executor, so chunks_of / handle
+        # reads must keep routing to it (admit() clears stale entries
+        # if a sid is ever reused)
 
     # ---- real device moves -------------------------------------------------
     def _measured_put(self, tree: Any, device: Any, *,
@@ -244,7 +316,10 @@ class LanePool:
         bit-identical after the move."""
         if self.lane_of.get(sid) != src or src == dst:
             return False
-        src_ex, dst_ex = self.executors[src], self.executors[dst]
+        # same-model-only by construction: both endpoints resolve to the
+        # stream's OWN bundle's executor on each lane
+        model = self.model_of.get(sid)
+        src_ex, dst_ex = self.ex_for(src, model), self.ex_for(dst, model)
         if sid in src_ex.inflight or sid in src_ex.sp_links:
             return False
         dst_dev = getattr(dst_ex, "device", None)
@@ -303,7 +378,10 @@ class LanePool:
         home = self.lane_of.get(sid)
         if home is None or donor == home:
             return False
-        ex = self.executors[home]
+        # same-model-only: the mirror lands in the donor LANE's pool of
+        # the stream's own bundle (that model's params drive the split)
+        model = self.model_of.get(sid)
+        ex = self.ex_for(home, model)
         if getattr(ex, "context_backend", None) != "paged":
             return False          # head split rides the paged step only
         if sid in ex.sp_links:
@@ -311,7 +389,7 @@ class LanePool:
         if not ex.pool.resident(sid) and \
                 not ex.ensure_resident(sid, streams, protect=[sid]):
             return False
-        donor_ex = self.executors[donor]
+        donor_ex = self.ex_for(donor, model)
         dpool: KVPool = donor_ex.pool
         while not dpool.can_admit():
             # the executor's own credit-aware eviction (protects the
@@ -401,7 +479,7 @@ class LanePool:
         link = getattr(ex, "sp_links", {}).pop(sid, None)
         if link is None:
             return
-        donor_ex = self.executors[link.donor]
+        donor_ex = self.ex_for(link.donor, self.model_of.get(sid))
         if link.mode == "batch":
             assert sid not in donor_ex.inflight, \
                 "batch-axis SP release only at a chunk boundary"
@@ -430,20 +508,29 @@ class LanePool:
         All SP groups share these executables — the jitted steps are
         module-level, so one warm-up covers every (home, donor) lane
         pair.  Extents beyond the list (deep rings under long streams)
-        compile on first use."""
-        if self.n_lanes < 2:
+        compile on first use.  With co-served bundles every bundle's
+        executable set is warmed — each bundle's head-split step is
+        compiled against ITS config/params/pool shapes."""
+        if self.n_lanes < 2 or self.sp_mode == "batch":
             return
-        ex0 = self.executors[0]
+        lanes_by_bundle = (self.bundle_executors.values()
+                           if self.bundle_executors else [self.executors])
+        for exs in lanes_by_bundle:
+            self._prejit_sp_bundle(exs, extents)
+
+    def _prejit_sp_bundle(self, executors: List[Any],
+                          extents: Sequence[int]) -> None:
+        ex0 = executors[0]
         if getattr(ex0, "context_backend", None) != "paged":
             return
         # the fused two-pool head-split step only ever runs between
         # lanes that SHARE a device (cross-device pairs use batch-axis
         # SP, which rides the already-warm SP1 step) — warm it for the
         # first same-device pair, or skip when every pair is split
-        ex1 = next((e for e in self.executors[1:]
+        ex1 = next((e for e in executors[1:]
                     if getattr(e, "device", None)
                     == getattr(ex0, "device", None)), None)
-        if ex1 is None or self.sp_mode == "batch":
+        if ex1 is None:
             return
         cfg = ex0.cfg
         tc = A.chunk_tokens(cfg)

@@ -120,6 +120,14 @@ class SessionConfig:
     # levels still work when a custom ``fidelity_policy`` selects them.
     step_cache: bool = False
     model_cfg: Optional[Any] = None    # None -> the reduced default model
+    # heterogeneous co-serving (serve/modelplane.py): registry arch ids
+    # (or explicit ModelConfigs) to co-serve on ONE lane pool — one
+    # executor + paged KV pool per (model, lane), streams routed to
+    # their spec's model, placement weighted by per-model step/page
+    # cost, re-homing and elastic SP same-model-only.  None (default)
+    # takes the exact legacy single-model path; ``models`` and
+    # ``model_cfg`` are mutually exclusive.
+    models: Optional[List[Any]] = None
     realtime_budget: Optional[float] = None
     budget_factor: float = 4.0     # chunk_seconds = factor x top latency
     tick_interval: float = 0.0
@@ -219,18 +227,46 @@ class _HostCalibratedPolicy:
     (online re-profiling).  Deliberately does NOT expose ``.profile``:
     ``ControlPlane.tick`` then takes T_u from the decision we return
     (wall units) instead of re-reading the offline profile.
+
+    ``model`` (heterogeneous co-serving) scopes the EMA read to that
+    bundle's executors — fidelity keys collide across models.
     """
 
-    def __init__(self, inner, lanes: LanePool, time_scale: float):
+    def __init__(self, inner, lanes: LanePool, time_scale: float,
+                 model: Optional[str] = None):
         self.inner = inner
         self.lanes = lanes
         self.time_scale = time_scale
+        self.model = model
 
     def select(self, budget: float) -> BMPRDecision:
         dec = self.inner.select(budget * self.time_scale)
         lat = self.lanes.latency_ema_get(
-            dec.fidelity.key, dec.latency / self.time_scale)
+            dec.fidelity.key, dec.latency / self.time_scale,
+            model=self.model)
         return BMPRDecision(dec.fidelity, lat, dec.quality, dec.mode)
+
+
+class _ModelRoutedPolicy:
+    """Fidelity-policy multiplexer for co-served bundles: one
+    ``_HostCalibratedPolicy`` per model (each over ITS bundle's offline
+    profile, host time scale, and measured EMAs).  ``select`` serves
+    the session primary (legacy callers); the control plane routes
+    per-stream calls through ``select_for(model, budget)``.  Like the
+    single-model wrapper it deliberately does NOT expose ``.profile``,
+    so T_u comes from the returned decision (wall units)."""
+
+    def __init__(self, by_model: Dict[str, _HostCalibratedPolicy],
+                 primary: str):
+        self.by_model = by_model
+        self.primary = by_model[primary]
+
+    def select(self, budget: float) -> BMPRDecision:
+        return self.primary.select(budget)
+
+    def select_for(self, model: Optional[str],
+                   budget: float) -> BMPRDecision:
+        return self.by_model.get(model, self.primary).select(budget)
 
 
 def uniform_specs(n_streams: int, chunks_per_stream: int) -> List[StreamSpec]:
@@ -291,6 +327,17 @@ class StreamingSession:
                  fidelity_policy: Optional[Any] = None):
         self.cfg = config or SessionConfig()
         n_lanes = max(1, self.cfg.lanes)
+        self.bundles = None
+        if self.cfg.models:
+            assert executor is None and self.cfg.model_cfg is None, \
+                "SessionConfig.models is incompatible with executor= " \
+                "and model_cfg"
+            assert self.cfg.executor == "batched", \
+                "co-serving rides the batched paged executor"
+            from repro.serve.modelplane import resolve_bundles
+            self.bundles = resolve_bundles(
+                self.cfg.models, seed=self.cfg.seed,
+                step_cache=self.cfg.step_cache)
         if executor is not None:
             assert n_lanes == 1, \
                 "multi-lane sessions build their own executors " \
@@ -301,6 +348,13 @@ class StreamingSession:
             from repro.serve.executor import SequentialChunkExecutor
             self.lanes = LanePool.wrap(
                 SequentialChunkExecutor(seed=self.cfg.seed))
+        elif self.bundles is not None:
+            self.lanes = LanePool(
+                n_lanes, seed=self.cfg.seed,
+                max_streams=self.cfg.pool_streams or 16,
+                context_backend=self.cfg.context_backend,
+                page_evict=self.cfg.page_evict,
+                bundles=self.bundles)
         else:
             self.lanes = LanePool(
                 n_lanes, cfg=self.cfg.model_cfg, seed=self.cfg.seed,
@@ -309,9 +363,18 @@ class StreamingSession:
                 page_evict=self.cfg.page_evict)
         self.executor = self.lanes.ex(0)      # back-compat accessor
 
-        policy = fidelity_policy or BMPR(
-            get_profile(step_cache=self.cfg.step_cache))
+        if self.bundles is not None and fidelity_policy is None:
+            inner_policies = {b.name: BMPR(b.profile)
+                              for b in self.bundles}
+            policy = inner_policies[self.bundles[0].name]
+        else:
+            inner_policies = None
+            policy = fidelity_policy or BMPR(
+                get_profile(step_cache=self.cfg.step_cache))
         self._profile = getattr(policy, "profile", None) or get_profile()
+        self._bundle_profiles = (
+            {b.name: b.profile for b in self.bundles}
+            if self.bundles is not None else {})
 
         # ---- host calibration (one top-fidelity warm-up chunk) ----------
         # measures this host's top-fidelity chunk latency, warms the jit
@@ -341,14 +404,53 @@ class StreamingSession:
                               or self.cfg.budget_factor * self.top_latency)
         time_scale = (self._profile.latency(HIGHEST_QUALITY)
                       / max(self.top_latency, 1e-9))
+        # per-bundle warm-up calibration: every co-served model measures
+        # ITS OWN top-fidelity chunk on lane 0 (warming that bundle's
+        # jit cache), seeds its lanes' EMAs, and carries its own
+        # wall<->profile time scale — a heavy model must not inherit a
+        # light model's budget conversion
+        if self.bundles is not None:
+            self.bundles[0].top_latency = self.top_latency
+            self.bundles[0].time_scale = time_scale
+            for b in self.bundles[1:]:
+                bex = self.lanes.bundle_executors[b.name][0]
+                bex.admit(-1, seed=999)
+                bex.begin_chunk(-1, HIGHEST_QUALITY, 0.0)
+                while -1 in bex.inflight:
+                    bex.run_step([-1])
+                b.top_latency = bex.latency_ema[HIGHEST_QUALITY.key]
+                bex.retire(-1, drop_history=True)
+                bstep = b.top_latency / (HIGHEST_QUALITY.steps + 1)
+                for lex in self.lanes.bundle_executors[b.name]:
+                    lex.latency_ema[HIGHEST_QUALITY.key] = b.top_latency
+                    if hasattr(lex, "step_ema"):
+                        lex.step_ema[HIGHEST_QUALITY.key] = bstep
+                b.time_scale = (b.profile.latency(HIGHEST_QUALITY)
+                                / max(b.top_latency, 1e-9))
+            # one session playout cadence, sized so the SLOWEST model's
+            # top-fidelity chunk fits the same budget-factor headroom
+            self.chunk_seconds = (
+                self.cfg.realtime_budget
+                or self.cfg.budget_factor
+                * max(b.top_latency for b in self.bundles))
         multi = self.lanes.n_lanes > 1
+        if self.bundles is not None:
+            fid_policy: Any = _ModelRoutedPolicy(
+                {b.name: _HostCalibratedPolicy(
+                    (inner_policies[b.name] if inner_policies is not None
+                     else policy),
+                    self.lanes, b.time_scale, model=b.name)
+                 for b in self.bundles},
+                primary=self.bundles[0].name)
+        else:
+            fid_policy = _HostCalibratedPolicy(policy, self.lanes,
+                                               time_scale)
         self.control = ControlPlane(
             ControlConfig(tick_interval=self.cfg.tick_interval,
                           # cross-worker mechanisms need >1 lane
                           use_rehoming=multi,
                           use_elastic_sp=multi),
-            fidelity_policy=_HostCalibratedPolicy(policy, self.lanes,
-                                                  time_scale))
+            fidelity_policy=fid_policy)
         if multi:
             # SP2 expansion must never compile on the critical path
             self.lanes.prejit_sp()
@@ -368,6 +470,20 @@ class StreamingSession:
                         for i in range(self.lanes.n_lanes)]
         self.worker = self.workers[0]         # back-compat accessor
         self.view = ClusterView({}, self.workers, wpn)
+        if self.bundles is not None:
+            # placement sees per-model weight: a heavy-model stream
+            # occupies more of a worker than a cheap one (choose_home
+            # argmin over Worker.load(weight))
+            from repro.serve.modelplane import profile_name_of
+            weights = {b.name: b.placement_weight for b in self.bundles}
+            self.view.stream_weight = (
+                lambda sid: weights.get(self.lanes.model_of.get(sid), 1.0))
+            # spec.model accepts the registry arch id or its profile
+            # alias ("self-forcing" -> "ardit-self-forcing")
+            self._model_alias = {}
+            for b in self.bundles:
+                self._model_alias[b.name] = b.name
+                self._model_alias[profile_name_of(b.name)] = b.name
         self.handles: Dict[int, StreamHandle] = {}
         self._order: List[int] = []
         self._events: List[Tuple[float, int, str, Any]] = []
@@ -409,10 +525,32 @@ class StreamingSession:
         return time.perf_counter() - self._t0
 
     # ---- event handlers (mirroring sched_sim.Simulator) --------------------
+    def _bundle_for(self, sid: int):
+        """The stream's model bundle (None on single-model sessions).
+        A spec without a model rides the session primary."""
+        if self.bundles is None:
+            return None
+        spec_model = getattr(self.handles[sid].spec, "model", None)
+        if spec_model is None:
+            return self.bundles[0]
+        name = self._model_alias.get(spec_model)
+        if name is None:
+            raise KeyError(
+                f"stream {sid} wants model {spec_model!r}, not in the "
+                f"co-serve set {[b.name for b in self.bundles]}")
+        return next(b for b in self.bundles if b.name == name)
+
+    def _first_estimate(self, sid: int) -> float:
+        b = self._bundle_for(sid)
+        if b is None:
+            return self.lanes.latency_ema_get(HIGHEST_QUALITY.key,
+                                              self.top_latency)
+        return self.lanes.latency_ema_get(HIGHEST_QUALITY.key,
+                                          b.top_latency, model=b.name)
+
     def _on_arrival(self, sid: int, t_arr: float) -> None:
         self._pending_arrivals -= 1
-        first_est = self.lanes.latency_ema_get(HIGHEST_QUALITY.key,
-                                               self.top_latency)
+        first_est = self._first_estimate(sid)
         if self.front_door is not None:
             dec = self.front_door.on_arrival(self.view, t_arr,
                                              first_est, sid)
@@ -433,15 +571,21 @@ class StreamingSession:
         # from the control plane (least-loaded non-donating lane)
         ttfc_slack = self.control.initial_slack(first_est)
         home = self.control.choose_home(self.view)
+        bundle = self._bundle_for(sid)
         s = Stream(sid=sid, arrival=t_arr, target_chunks=spec.chunks,
                    chunk_seconds=self.chunk_seconds, home=home,
                    ttfc_slack=ttfc_slack,
                    next_deadline=t_arr + ttfc_slack)
         s.t_next = first_est
+        if bundle is not None:
+            s.model = bundle.name
         self.view.streams[sid] = s
         self.workers[home].queue.append(sid)
-        self.lanes.admit(sid, home, seed=sid, streams=self.view.streams,
-                         protect=list(self.lanes.ex(home).inflight))
+        model = bundle.name if bundle is not None else None
+        self.lanes.admit(
+            sid, home, seed=sid, streams=self.view.streams,
+            protect=list(self.lanes.ex_for(home, model).inflight),
+            model=model)
 
     def _on_prompt_switch(self, sid: int, now: float) -> None:
         s = self.view.streams.get(sid)
@@ -497,10 +641,8 @@ class StreamingSession:
     def _drain_front_door(self, now: float) -> None:
         admits, rejects = self.front_door.drain(self.view, now)
         self._n_rejected += len(rejects)
-        first_est = self.lanes.latency_ema_get(HIGHEST_QUALITY.key,
-                                               self.top_latency)
         for sid, t_arr in admits:
-            self._admit_stream(sid, t_arr, first_est)
+            self._admit_stream(sid, t_arr, self._first_estimate(sid))
 
     # ---- the session loop --------------------------------------------------
     def _all_done(self) -> bool:
@@ -627,8 +769,9 @@ class StreamingSession:
                     # a failed residency fill must not idle the donor
                     # for the round (the stream defers; the lane serves
                     # its normal batch below)
-                    and self.lanes.ex(w.wid).ensure_resident(
-                        r[0], streams, protect=[r[0]])):
+                    and self.lanes.ex_for(
+                        w.wid, self.lanes.model_of.get(r[0]))
+                    .ensure_resident(r[0], streams, protect=[r[0]])):
                 sp_homes[w.wid] = r[0]
                 lent.add(link.donor)
 
@@ -645,11 +788,19 @@ class StreamingSession:
             ex = self.lanes.ex(w.wid)
             max_batch = self.cfg.max_batch if hasattr(ex, "pool") else 1
 
+            # per-stream executor on THIS lane: the stream's own
+            # bundle's pool (single-model sessions resolve to ``ex``
+            # itself, keeping the legacy call sequence object-for-object)
+            def ex_of(sid: int) -> Any:
+                return self.lanes.ex_for(w.wid,
+                                         self.lanes.model_of.get(sid))
+
             sp_sid = sp_homes.get(w.wid)
             if sp_sid is not None:       # reserved (and already resident)
-                self._begin_if_needed(ex, sp_sid, now)
-                flights = {sp_sid: ex.inflight[sp_sid]}
-                completed, _ = ex.run_step([sp_sid], sp_serve=True)
+                sp_ex = ex_of(sp_sid)
+                self._begin_if_needed(sp_ex, sp_sid, now)
+                flights = {sp_sid: sp_ex.inflight[sp_sid]}
+                completed, _ = sp_ex.run_step([sp_sid], sp_serve=True)
                 any_ran = True
                 now = self._now()
                 for sid in completed:
@@ -668,18 +819,23 @@ class StreamingSession:
             for sid in runnable:
                 if len(sids) >= max_batch + len(glist):
                     break
-                if ex.ensure_resident(sid, streams, protect=sids + [sid]):
+                if ex_of(sid).ensure_resident(sid, streams,
+                                              protect=sids + [sid]):
                     sids.append(sid)
             if not sids:
                 continue
             for sid in sids:
-                self._begin_if_needed(ex, sid, now)
+                self._begin_if_needed(ex_of(sid), sid, now)
             groups = compose_batch(
-                sids, lambda sid: ex.inflight[sid].fidelity,
-                max_batch + len(glist), fuse=self.cfg.fuse_fidelity)
+                sids, lambda sid: ex_of(sid).inflight[sid].fidelity,
+                max_batch + len(glist), fuse=self.cfg.fuse_fidelity,
+                model_of=(self.lanes.model_of.get
+                          if self.lanes.bundle_executors else None))
             for grp in groups:
-                flights = {sid: ex.inflight[sid] for sid in grp}
-                completed, _ = ex.run_step(grp)
+                # one sub-batch = one model's jitted step on one pool
+                grp_ex = ex_of(grp[0])
+                flights = {sid: grp_ex.inflight[sid] for sid in grp}
+                completed, _ = grp_ex.run_step(grp)
                 any_ran = True
                 now = self._now()
                 for sid in completed:
@@ -697,7 +853,11 @@ class StreamingSession:
         # between chunks.  The wall->profile unit conversion lives in
         # _HostCalibratedPolicy — no hand-tuned scale.
         budget = max(s.playout_slack(now) - s.remaining, 0.0)
-        dec = self.control.fidelity_policy.select(budget)
+        pol = self.control.fidelity_policy
+        sel = getattr(pol, "select_for", None)
+        dec = (sel(s.model, budget)
+               if sel is not None and s.model is not None
+               else pol.select(budget))
         s.next_fidelity = dec.fidelity
         s.t_next = dec.latency
         s.chunk_started = now
@@ -756,12 +916,15 @@ class StreamingSession:
         s.chunk_started = None
         s.running_on = None
         s.remaining = 0.0
-        s.qualities.append(self._profile.quality(fid))
+        prof = (self._bundle_profiles.get(s.model, self._profile)
+                if s.model is not None else self._profile)
+        s.qualities.append(prof.quality(fid))
         s.fidelity_log.append(fid.key)
         self.fidelity_counts[fid.key] = \
             self.fidelity_counts.get(fid.key, 0) + 1
         if self.front_door is not None:
-            self.front_door.observe_chunk(now - started)
+            self.front_door.observe_chunk(now - started,
+                                          fidelity=fid.key, model=s.model)
         donor = self._pending_sp_release.pop(sid, None)
         if donor is not None and not s.finished:
             # the promised safe boundary: drop the borrow now
@@ -797,7 +960,7 @@ class StreamingSession:
         # log lives wholly on its current lane (migrations carry it)
         eff_w: Dict[int, List[int]] = {}
         hits = misses = skipped = 0
-        for ex in self.lanes.executors:
+        for ex in self.lanes.all_executors:
             for sid, log in getattr(ex, "effective_window_log",
                                     {}).items():
                 if sid >= 0 and log:

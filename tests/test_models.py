@@ -163,6 +163,39 @@ def test_ardit_serving_knobs():
     assert cache["len"] <= A.cache_capacity(cfg)
 
 
+@pytest.mark.parametrize("arch", list_archs())
+def test_registry_smoke_every_config(arch):
+    """Co-serving floor: EVERY registry config builds params through the
+    registry's ``init_fn`` and survives one reduced step — a denoise
+    chunk for ardit family (the live co-serve path), a prefill forward
+    for everything else (the simulated co-serve families)."""
+    cfg = get_config(arch).reduced()
+    params = registry.init_fn(cfg)(KEY)
+    assert jax.tree_util.tree_leaves(params), arch
+    if cfg.family == "ardit":
+        from repro.models import ardit as A
+        cond = 0.02 * jax.random.normal(KEY,
+                                        (1, A.COND_TOKENS, cfg.d_model))
+        cache = A.init_cache(cfg, params, cond)
+        tc = A.chunk_tokens(cfg)
+        noise = jax.random.normal(KEY, (1, tc, A.LATENT_CH))
+        chunk, cache = A.serve_chunk(cfg, params, cache, noise)
+        assert chunk.shape == (1, tc, A.LATENT_CH)
+        assert bool(jnp.isfinite(chunk).all()), arch
+        assert cache["chunks"] == 1
+    else:
+        api = registry.get_api(cfg)
+        batch = _batch_for(cfg, B=1, S=16)
+        kw = {k: batch[k] for k in ("img_embeds", "audio_embeds")
+              if k in batch}
+        max_len = 20 + (cfg.n_frontend_tokens if cfg.family == "vlm"
+                        else 0)
+        logits, cache, clen = api.prefill(cfg, params, batch["tokens"],
+                                          max_len=max_len, **kw)
+        assert logits.shape == (1, cfg.padded_vocab)
+        assert bool(jnp.isfinite(logits).all()), arch
+
+
 def test_param_count_analytic_close():
     """active_params analytic model tracks real init within 12%."""
     from repro.launch.analysis import active_params
